@@ -1,0 +1,29 @@
+"""Regenerate the roofline table inside EXPERIMENTS.md from artifacts."""
+
+import re
+
+from benchmarks.roofline import table
+
+MARK_A = "### Final roofline table"
+MARK_B = "Reading the table:"
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    tbl = table("single")
+    block = (
+        f"{MARK_A}\n\n(regenerate: `PYTHONPATH=src python -m "
+        f"benchmarks.embed_tables`)\n\n```\n{tbl}\n```\n\n"
+    )
+    pattern = re.compile(
+        re.escape(MARK_A) + r".*?" + re.escape(MARK_B), re.DOTALL
+    )
+    text = pattern.sub(block + MARK_B, text)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print(tbl)
+
+
+if __name__ == "__main__":
+    main()

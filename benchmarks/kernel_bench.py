@@ -1,0 +1,63 @@
+"""Kernel micro-bench: PIMnast-placed Pallas GEMV vs the jnp oracle.
+
+On this CPU container the Pallas kernels execute in interpret mode, so
+wall-clock numbers characterize the HARNESS, not TPU performance — the
+``derived`` column is therefore the max abs error vs the oracle (the
+correctness contract), and per-kernel modeled HBM-bound time on v5e
+(weight bytes / 819 GB/s) is reported as ``v5e_model_us``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.kernels.tpu_plan import plan_splitk, plan_tpu_gemv
+
+HBM_BW = 819e9
+
+SHAPES = [
+    # (name, M, K, B)  — decode-path GEMVs from the assigned archs
+    ("gemma3-1b/ffn_up", 6912, 1152, 1),
+    ("gemma3-27b/ffn_up", 21504, 5376, 1),
+    ("minitron/qkv", 4096 + 2 * 1024, 4096, 1),
+    ("olmo/ffn_down", 2048, 8192, 4),
+    ("grok/expert_up", 4096, 6144, 8),
+]
+
+
+def kernel_rows() -> list[tuple[str, float, float]]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for name, M, K, B in SHAPES:
+        w = rng.standard_normal((M, K)).astype(np.float32)
+        x = rng.standard_normal((B, K)).astype(np.float32)
+        packed = ops.pack_weight(jnp.asarray(w))
+        t0 = time.perf_counter()
+        out = ops.placed_gemv(jnp.asarray(x), packed, interpret=True)
+        out.block_until_ready()
+        dt = (time.perf_counter() - t0) * 1e6
+        err = float(np.abs(np.asarray(out) - x @ w.T).max())
+        rows.append((f"kernel/{name}/interp", dt, err))
+        v5e_us = (M * K * 2) / HBM_BW * 1e6
+        rows.append((f"kernel/{name}/v5e_hbm_model", v5e_us, 0.0))
+        # quantized variant (int8 + block scales)
+        pq = ops.quantize_weight(w, bits=8, block=32)
+        t0 = time.perf_counter()
+        oq = ops.placed_gemv(jnp.asarray(x), pq, interpret=True)
+        oq.block_until_ready()
+        dtq = (time.perf_counter() - t0) * 1e6
+        rel = float(
+            np.abs(np.asarray(oq) - x @ w.T).max() / np.abs(x @ w.T).max()
+        )
+        rows.append((f"kernel/{name}/int8", dtq, rel))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in kernel_rows():
+        print(f"{r[0]},{r[1]:.3f},{r[2]:.6f}")

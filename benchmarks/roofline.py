@@ -1,0 +1,125 @@
+"""Roofline analysis (deliverable g): reads the dry-run artifacts and derives
+the three terms per (arch x shape) on the single-pod mesh:
+
+    compute term    = HLO_FLOPs / (chips x 197 TF/s bf16)
+    memory term     = HLO_bytes / (chips x 819 GB/s HBM)
+    collective term = collective_bytes / (chips x 50 GB/s link)
+
+cost_analysis() of the partitioned module is PER DEVICE, so the chip count
+cancels: term = per_device_metric / per_chip_rate. Corrected (scan-unrolled)
+counts are used when present — see EXPERIMENTS.md §Roofline methodology.
+
+Also reports MODEL_FLOPS (6·N·D train / 2·N·D inference, N = active params)
+and the MODEL/HLO ratio that exposes remat + elementwise waste.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12      # TPU v5e bf16 per chip
+HBM_BW = 819e9           # per chip
+LINK_BW = 50e9           # per ICI link
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                       "dryrun")
+
+
+def load_records(mesh: str = "single") -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(ART_DIR, f"*__{mesh}.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def model_flops_per_device(rec: dict) -> float:
+    """6·N·D for train, 2·N·D for a forward (prefill counts the full seq,
+    decode one token), divided by chips (to match per-device HLO flops)."""
+    n_active = rec.get("model_params_active") or 0
+    shape = rec["shape"]
+    chips = rec.get("n_chips", 256)
+    if shape.startswith("train"):
+        tokens = 256 * 4096
+        return 6.0 * n_active * tokens / chips
+    if shape.startswith("prefill"):
+        tokens = 32 * 32768
+        return 2.0 * n_active * tokens / chips
+    if shape.startswith("decode"):
+        return 2.0 * n_active * 128 / chips
+    return 2.0 * n_active * 1 / chips
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    rf = rec.get("roofline") or {}
+    flops = rf.get("flops", rec.get("flops", 0.0))
+    byts = rf.get("bytes", rec.get("bytes_accessed", 0.0))
+    coll = rf.get("coll", rec.get("collective_total", 0.0))
+    t_comp = flops / PEAK_FLOPS
+    t_mem = byts / HBM_BW
+    t_coll = coll / LINK_BW
+    dominant = max(
+        ("compute", t_comp), ("memory", t_mem), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops_per_device(rec)
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_dev": mf,
+        "useful_ratio": (mf / flops) if flops else 0.0,
+        "corrected": "flops" in rf,
+    }
+
+
+def roofline_rows() -> list[tuple[str, float, float]]:
+    rows = []
+    for rec in load_records("single"):
+        a = analyze(rec)
+        if a is None:
+            continue
+        tag = f"roofline/{a['arch']}/{a['shape']}"
+        bound = max(a["t_compute_s"], a["t_memory_s"], a["t_collective_s"])
+        rows.append((f"{tag}/compute_s", a["t_compute_s"] * 1e6,
+                     a["useful_ratio"]))
+        rows.append((f"{tag}/memory_s", a["t_memory_s"] * 1e6, 0.0))
+        rows.append((f"{tag}/collective_s", a["t_collective_s"] * 1e6, 0.0))
+        rows.append((
+            f"{tag}/bound={a['dominant']}", bound * 1e6,
+            a["t_compute_s"] / bound if bound else 0.0,
+        ))
+    return rows
+
+
+def table(mesh: str = "single") -> str:
+    lines = [
+        f"{'arch':22s} {'shape':12s} {'compute(s)':>11s} {'memory(s)':>11s} "
+        f"{'collect(s)':>11s} {'bound':>10s} {'6ND/HLO':>8s}"
+    ]
+    for rec in load_records(mesh):
+        a = analyze(rec)
+        if a is None:
+            st = rec.get("status")
+            lines.append(
+                f"{rec['arch']:22s} {rec['shape']:12s} {'—':>11s} {'—':>11s} "
+                f"{'—':>11s} {st:>10s}"
+            )
+            continue
+        lines.append(
+            f"{a['arch']:22s} {a['shape']:12s} {a['t_compute_s']:11.4f} "
+            f"{a['t_memory_s']:11.4f} {a['t_collective_s']:11.4f} "
+            f"{a['dominant']:>10s} {a['useful_ratio']:8.3f}"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(table())

@@ -1,0 +1,66 @@
+"""Benchmark driver. One function per paper table/figure plus the TPU-side
+kernel and roofline benchmarks. Prints ``name,us_per_call,derived`` CSV.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig14 kernels
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived:.4f}")
+
+
+def run_paper_figs(only: set[str] | None = None) -> None:
+    from benchmarks.paper_figs import ALL_FIGS
+
+    for fn in ALL_FIGS:
+        tag = fn.__name__.split("_")[0]  # fig8 ...
+        if only and tag not in only and fn.__name__ not in only:
+            continue
+        t0 = time.perf_counter()
+        rows = fn()
+        dt = time.perf_counter() - t0
+        _emit(rows)
+        print(f"# {fn.__name__}: {len(rows)} rows in {dt*1e3:.1f} ms",
+              file=sys.stderr)
+
+
+def run_kernel_bench() -> None:
+    try:
+        from benchmarks.kernel_bench import kernel_rows
+    except Exception as e:  # kernels need jax; keep the paper figs runnable
+        print(f"# kernel bench skipped: {e}", file=sys.stderr)
+        return
+    _emit(kernel_rows())
+
+
+def run_roofline() -> None:
+    try:
+        from benchmarks.roofline import roofline_rows
+    except Exception as e:
+        print(f"# roofline skipped: {e}", file=sys.stderr)
+        return
+    _emit(roofline_rows())
+
+
+def main() -> None:
+    args = {a.lstrip("-") for a in sys.argv[1:]}
+    fig_sel = {a for a in args if a.startswith("fig") and a not in ("figs",)}
+    if not args or args & {"figs", "paper"} or fig_sel:
+        run_paper_figs(fig_sel or None)
+    if not args or "kernels" in args:
+        run_kernel_bench()
+    if not args or "roofline" in args:
+        run_roofline()
+
+
+if __name__ == "__main__":
+    main()

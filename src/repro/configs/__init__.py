@@ -1,0 +1,3 @@
+"""Architecture configs: one module per assigned arch + the registry."""
+
+from repro.configs.registry import ARCHS, get_config  # noqa: F401

@@ -1,0 +1,38 @@
+"""--arch registry: id -> ModelConfig."""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+
+def _load() -> dict[str, ModelConfig]:
+    from repro.configs import (
+        deepseek_moe_16b,
+        gemma3_1b,
+        gemma3_27b,
+        grok_1_314b,
+        hymba_1_5b,
+        llama32_vision_11b,
+        minitron_8b,
+        olmo_1b,
+        rwkv6_3b,
+        whisper_small,
+    )
+
+    mods = [
+        gemma3_1b, gemma3_27b, minitron_8b, olmo_1b, whisper_small,
+        deepseek_moe_16b, grok_1_314b, rwkv6_3b, hymba_1_5b,
+        llama32_vision_11b,
+    ]
+    return {m.CONFIG.name: m.CONFIG for m in mods}
+
+
+ARCHS: dict[str, ModelConfig] = _load()
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(ARCHS)}"
+        )
+    return ARCHS[name]

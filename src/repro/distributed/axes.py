@@ -1,0 +1,89 @@
+"""Activation-sharding anchors.
+
+GSPMD propagates shardings from inputs, but conflicting propagation paths
+(e.g. the embedding gather: batch-sharded indices vs d-sharded table) can
+resolve to batch-REPLICATED activations — at train_4k scale that turns every
+backward all-reduce into a global-batch-sized transfer. The model code drops
+``constrain(x, ("batch", None, None))`` anchors at layer boundaries; they
+no-op unless a mesh context is active (tests and single-device paths are
+unaffected).
+
+"batch" resolves to the mesh's data axes (('pod','data') multi-pod); "model"
+to the model axis; axes are dropped when the dimension doesn't divide.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = contextvars.ContextVar("repro_activation_mesh", default=None)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh):
+    tok = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _MESH.reset(tok)
+
+
+def current_mesh():
+    return _MESH.get()
+
+
+def _resolve(dim_size: int, name: str | None, mesh) -> Any:
+    if name is None:
+        return None
+    if name == "batch":
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        if not axes:
+            return None
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        if n > 1 and dim_size % n == 0:
+            return axes if len(axes) > 1 else axes[0]
+        # try the plain data axis alone
+        if "data" in mesh.axis_names and dim_size % mesh.shape["data"] == 0:
+            return "data"
+        return None
+    if name in mesh.axis_names:
+        if dim_size % mesh.shape[name] == 0 and mesh.shape[name] > 1:
+            return name
+        return None
+    return None
+
+
+def constrain(x, names: tuple[str | None, ...]):
+    """with_sharding_constraint if an activation mesh is active, else x."""
+    mesh = _MESH.get()
+    if mesh is None or x is None:
+        return x
+    if len(names) != x.ndim:
+        return x
+    spec = P(*[_resolve(s, n, mesh) for s, n in zip(x.shape, names)])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec)
+    )
+
+
+def constrain_first(x, candidates):
+    """Apply the first candidate spec whose 'model' request actually
+    resolves (the Algorithm-1 sweep shape: walk preferred placements until
+    the even-distribution test passes). Falls back to the last candidate."""
+    mesh = _MESH.get()
+    if mesh is None or x is None:
+        return x
+    for names in candidates:
+        if len(names) != x.ndim:
+            continue
+        wants_model = [i for i, n in enumerate(names) if n == "model"]
+        resolved = [_resolve(x.shape[i], "model", mesh) for i in wants_model]
+        if wants_model and all(r == "model" for r in resolved):
+            return constrain(x, names)
+    return constrain(x, candidates[-1])

@@ -1,0 +1,93 @@
+"""Gradient-compression collectives (distributed-optimization tricks).
+
+Under pjit/GSPMD the data-parallel gradient all-reduce is implicit; to
+control its wire format we provide an explicit shard_map data-parallel
+gradient sync with quantized payloads + error feedback:
+
+  * bf16: halves cross-pod bytes, no state;
+  * int8: per-tensor symmetric quantization with an error-feedback residual
+    (1-bit-Adam-style) so compression error doesn't bias training.
+
+``build_ddp_sync`` returns a function usable inside ``shard_map`` over the
+data axes; the error-feedback residual tree rides in the optimizer state.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(grads_shape_tree):
+    return jax.tree.map(
+        lambda g: jnp.zeros(jnp.shape(g), jnp.float32), grads_shape_tree
+    )
+
+
+def compressed_psum_mean(
+    grads,
+    axis_name: str | tuple[str, ...],
+    method: str = "none",
+    error_feedback=None,
+):
+    """Mean-reduce ``grads`` over ``axis_name`` with compressed payloads.
+
+    Call INSIDE shard_map/pmap. Returns (synced_grads, new_error_feedback).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    if method == "none":
+        out = jax.tree.map(
+            lambda g: jax.lax.psum(g, axis_name) / n, grads
+        )
+        return out, error_feedback
+
+    if method == "bf16":
+        out = jax.tree.map(
+            lambda g: jax.lax.psum(
+                g.astype(jnp.bfloat16), axis_name
+            ).astype(jnp.float32) / n,
+            grads,
+        )
+        return out, error_feedback
+
+    if method == "int8":
+        ef = error_feedback or jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads
+        )
+
+        def one(g, e):
+            target = g.astype(jnp.float32) + e
+            q, scale = quantize_int8(target)
+            new_e = target - dequantize_int8(q, scale)  # residual stays local
+            # Peers carry different scales, so int8 payloads cannot be
+            # summed directly: all-gather the (int8, scale) pairs (1B/elem
+            # on the wire vs 4B for an f32 ring) and dequantize per peer.
+            qs = jax.lax.all_gather(q, axis_name)          # [W, ...]
+            ss = jax.lax.all_gather(scale, axis_name)      # [W]
+            ssb = ss.reshape((-1,) + (1,) * q.ndim)
+            mean = jnp.sum(qs.astype(jnp.float32) * ssb, axis=0) / n
+            return mean, new_e
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = tdef.flatten_up_to(ef)
+        outs, new_es = [], []
+        for g, e in zip(flat_g, flat_e):
+            o, ne = one(g, e)
+            outs.append(o)
+            new_es.append(ne)
+        return jax.tree.unflatten(tdef, outs), jax.tree.unflatten(tdef, new_es)
+
+    raise ValueError(method)

@@ -1,0 +1,203 @@
+"""The PIMnast placement planner lifted to the device mesh (DESIGN.md §2.2).
+
+The paper's Algorithm 1 walks tile shapes until matrix rows distribute EVENLY
+over banks and the register budget holds; its placement rules keep a row in
+one bank (no cross-bank reduction) and fall back to split-K for small-M.
+The mesh analogue implemented here, per weight tensor:
+
+  * "banks" are the chips along the 'model' axis;
+  * prefer ROW placement: shard the OUTPUT dimension (heads / d_ff / experts /
+    vocab) over 'model' — each chip owns whole output rows, the activation is
+    broadcast, no reduction (paper placement choices 1-3);
+  * even-distribution test = exact divisibility by the axis size (Algorithm
+    1's ``M % (tot_bank * m_tile) == 0``), walking a preference-ordered list
+    of dimensions (the tile-shape sweep);
+  * SPLIT-K fallback: when no output dim divides, shard the CONTRACTION dim —
+    GSPMD then inserts the all-reduce of partials, the SoC-reduction
+    analogue (paper §VI-F);
+  * the 'data' axis plays the FSDP role on a remaining (usually embedding/
+    d_model) dimension so parameter bytes scale down with the full mesh.
+
+``plan_params`` returns a PartitionSpec tree + a human-readable report used
+by the dry-run logs.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import data_axes
+
+
+def _divides(dim: int, n: int) -> bool:
+    return n > 0 and dim % n == 0
+
+
+def _leaf_spec(
+    path: str,
+    shape: tuple[int, ...],
+    mesh: Mesh,
+    cfg: ModelConfig | None,
+) -> P:
+    """Placement for one tensor: model axis first (row placement with split-K
+    fallback), then an FSDP dim on the data axes."""
+    model_n = mesh.shape.get("model", 1)
+    daxes = data_axes(mesh)
+    data_n = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+
+    if len(shape) == 0 or max(shape, default=0) < 128:
+        return P()  # scalars / tiny vectors: replicate
+
+    spec: list[Any] = [None] * len(shape)
+
+    # ---- preference order for the 'model' ("bank") axis ------------------
+    name = path.split("/")[-1]
+    prefs: list[int]
+    if name in ("embed", "lm_head"):
+        # vocab is the huge output dim: embed [V, d], lm_head [d, V]
+        prefs = [0, 1] if name == "embed" else [1, 0]
+    elif name in ("wq", "wk", "wv"):        # [d, H, hd] -> heads (output)
+        prefs = [1, 2, 0]
+    elif name == "wo":                      # [H, hd, d] -> heads (input/row)
+        prefs = [0, 1, 2]
+    elif name in ("w_gate", "w_up"):        # [(E,) d, f] -> E, then f
+        prefs = [0, 2, 1] if len(shape) == 3 else [1, 0]
+    elif name == "w_down":                  # [(E,) f, d] -> E, then f
+        prefs = [0, 1, 2] if len(shape) == 3 else [0, 1]
+    elif name in ("wr", "wk_cm", "wg"):     # rwkv square proj
+        prefs = [1, 0]
+    elif name == "w_in":                    # mamba [d, 2di]
+        prefs = [1, 0]
+    elif name == "w_out":                   # mamba [di, d]
+        prefs = [0, 1]
+    else:
+        # generic: largest dim first (output-ish), smallest last
+        prefs = list(np.argsort([-s for s in shape]))
+
+    model_dim = None
+    for d in prefs:
+        if d < len(shape) and _divides(shape[d], model_n):
+            model_dim = d
+            break
+    if model_dim is not None:
+        spec[model_dim] = "model"
+
+    # ---- FSDP dim on the data axes ---------------------------------------
+    if daxes:
+        for d in range(len(shape)):
+            if d != model_dim and _divides(shape[d], data_n):
+                spec[d] = daxes if len(daxes) > 1 else daxes[0]
+                break
+
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def plan_params(params, mesh: Mesh, cfg: ModelConfig | None = None):
+    """PartitionSpec tree for a param (or param-shaped state) pytree."""
+    def f(path, leaf):
+        return _leaf_spec(_path_str(path), np.shape(leaf), mesh, cfg)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def plan_report(params, mesh: Mesh) -> list[str]:
+    specs = plan_params(params, mesh)
+    lines = []
+
+    def f(path, leaf, spec):
+        lines.append(
+            f"{_path_str(path):60s} {str(np.shape(leaf)):24s} -> {spec}"
+        )
+
+    jax.tree_util.tree_map_with_path(
+        f, params, specs
+    )
+    return lines
+
+
+# --------------------------------------------------------------------------
+# Activations / batch / cache
+# --------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh, batch: int) -> P:
+    """tokens/labels [B, S]."""
+    daxes = data_axes(mesh)
+    data_n = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    if daxes and _divides(batch, data_n):
+        return P(daxes if len(daxes) > 1 else daxes[0], None)
+    return P(None, None)
+
+
+def cache_spec(
+    mesh: Mesh, cfg: ModelConfig, batch: int, shape: tuple[int, ...],
+    name: str,
+) -> P:
+    """Decode-state placement (the dynamic-placement problem the paper maps
+    to the SoC; here the planner solves it on the mesh):
+
+    KV [L, B, S, Hkv, hd]: batch on data when it divides; heads on 'model'
+    when they divide (row placement), otherwise SEQUENCE on 'model'
+    (split-K analogue — attention reductions over S become partials combined
+    by GSPMD collectives). B==1 long-context folds data into the S shard.
+    """
+    daxes = data_axes(mesh)
+    data_n = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    model_n = mesh.shape.get("model", 1)
+    d_ax = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    if name in ("k", "v"):
+        L, B, S, H, hd = shape
+        spec: list[Any] = [None] * 5
+        b_ok = _divides(B, data_n)
+        if b_ok:
+            spec[1] = d_ax
+        if _divides(H, model_n):
+            spec[3] = "model"
+        elif _divides(S, model_n):
+            if not b_ok and _divides(S, model_n * data_n) and d_ax:
+                spec[2] = (tuple(daxes) + ("model",))
+            else:
+                spec[2] = "model"
+        return P(*spec)
+    if name in ("rwkv_s", "mamba_h", "mamba_conv", "rwkv_x_tm", "rwkv_x_cm"):
+        spec = [None] * len(shape)
+        if _divides(shape[1], data_n) and d_ax:
+            spec[1] = d_ax
+        # channel-ish dim on model
+        for d in range(2, len(shape)):
+            if _divides(shape[d], model_n):
+                spec[d] = "model"
+                break
+        return P(*spec)
+    return P()
+
+
+def plan_cache(cache, mesh: Mesh, cfg: ModelConfig, batch: int):
+    def f(path, leaf):
+        name = _path_str(path)
+        return cache_spec(mesh, cfg, batch, np.shape(leaf), name)
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def to_named(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

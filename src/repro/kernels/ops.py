@@ -1,0 +1,168 @@
+"""Public jit'd API over the PIM-GEMV kernels.
+
+``placed_gemv`` is what the serving layer calls for decode-time matmuls: it
+plans the PIMnast-analogue tiling (tpu_plan), picks output-stationary vs
+split-K by the paper's small-M rule, prepacks weights into the transposed
+("column-major", §IV-A1) layout, and dispatches to the Pallas kernel —
+falling back to plain XLA when Pallas isn't applicable (ragged shapes, or
+non-TPU backends at trace time with ``interpret=False``).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.pim_gemv import pim_gemv
+from repro.kernels.quant_gemv import quant4_gemv, quant_gemv
+from repro.kernels.splitk_gemv import splitk_gemv
+from repro.kernels.tpu_plan import (
+    LANES,
+    TPUGemvPlan,
+    plan_splitk,
+    plan_tpu_gemv,
+)
+
+# The paper picks split-K when M yields too few row-blocks to spread over
+# banks (§VI-F). TPU analogue: fewer than SPLITK_MIN_BLOCKS M-blocks.
+SPLITK_MIN_BLOCKS = 4
+
+
+def default_interpret() -> bool:
+    """Interpret mode executes the kernel body with jnp on CPU — used for all
+    validation in this container; real deployments lower to TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def pallas_applicable(M: int, K: int) -> bool:
+    return M % LANES == 0 and K % 8 == 0
+
+
+def choose_plan(M: int, K: int, batch: int, w_bytes: int = 2) -> TPUGemvPlan:
+    plan = plan_tpu_gemv(M, K, batch, w_bytes=w_bytes)
+    if plan.n_m < SPLITK_MIN_BLOCKS and K >= 4 * plan.k_blk:
+        for deg in (8, 4, 2):
+            if K % deg == 0 and (K // deg) % 8 == 0:
+                return plan_splitk(M, K, batch, degree=deg, w_bytes=w_bytes)
+    return plan
+
+
+@dataclass(frozen=True)
+class PackedWeight:
+    """A weight prepacked for PIM-style placement (one-time cost at model
+    deployment, paper §V-A2)."""
+
+    w_t: jnp.ndarray                  # [K, M] (transposed storage)
+    scales: jnp.ndarray | None = None # [K//block, M] for quantized weights
+    bits: int = 16
+    block: int = 32
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        if self.bits == 4:
+            return (self.w_t.shape[0] * 2, self.w_t.shape[1])
+        return self.w_t.shape
+
+
+def pack_weight(w: jnp.ndarray) -> PackedWeight:
+    """[M, K] -> transposed placement."""
+    return PackedWeight(w_t=jnp.asarray(w).T)
+
+
+def quantize_weight(
+    w: np.ndarray | jnp.ndarray, *, bits: int = 8, block: int = 32
+) -> PackedWeight:
+    """Symmetric per-(K-block, column) quantization (MX-style, §VI-D2).
+
+    w: [M, K] float -> int8 [K, M] (or packed int4 [K//2, M]) + scales.
+    """
+    w = np.asarray(w, dtype=np.float32).T  # [K, M]
+    K, M = w.shape
+    assert K % block == 0, (K, block)
+    g = w.reshape(K // block, block, M)
+    qmax = {8: 127.0, 4: 7.0}[bits]
+    scales = np.max(np.abs(g), axis=1) / qmax          # [K//block, M]
+    scales = np.where(scales == 0, 1.0, scales)
+    q = np.clip(np.rint(g / scales[:, None, :]), -qmax - 1, qmax)
+    q = q.reshape(K, M).astype(np.int8)
+    if bits == 4:
+        lo = q[0::2] & 0xF
+        hi = (q[1::2] & 0xF) << 4
+        q = (lo | hi).astype(np.int8)                  # [K//2, M]
+    return PackedWeight(
+        w_t=jnp.asarray(q), scales=jnp.asarray(scales.astype(np.float32)),
+        bits=bits, block=block,
+    )
+
+
+def placed_gemv(
+    x: jnp.ndarray,
+    packed: PackedWeight,
+    *,
+    plan: TPUGemvPlan | None = None,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Decode GEMV through the PIMnast-placed kernel.
+
+    x: [B, K] activations (B = decode batch), returns [B, M].
+    """
+    K, M = packed.shape
+    B = x.shape[0]
+    if interpret is None:
+        interpret = default_interpret()
+    if not use_pallas or not pallas_applicable(M, K):
+        # XLA fallback (still uses the transposed placement).
+        if packed.bits == 16:
+            return ref.gemv_ref(packed.w_t, x)
+        if packed.bits == 8:
+            return ref.quant_gemv_ref(packed.w_t, packed.scales, x,
+                                      packed.block)
+        return ref.quant4_gemv_ref(packed.w_t, packed.scales, x,
+                                   packed.block)
+
+    if plan is None:
+        w_bytes = 2 if packed.bits == 16 else 1
+        plan = choose_plan(M, K, B, w_bytes)
+
+    if packed.bits == 16:
+        if plan.split_k > 1:
+            return splitk_gemv(x, packed.w_t, plan=plan, interpret=interpret)
+        return pim_gemv(x, packed.w_t, plan=plan, interpret=interpret)
+    # Quantized paths are output-stationary only (scales walk with weights);
+    # ensure the K block covers whole scale blocks.
+    plan = _align_plan_to_block(plan, M, K, B, packed)
+    if packed.bits == 8:
+        return quant_gemv(
+            x, packed.w_t, packed.scales, plan=plan, block=packed.block,
+            interpret=interpret,
+        )
+    return quant4_gemv(
+        x, packed.w_t, packed.scales, plan=plan, block=packed.block,
+        interpret=interpret,
+    )
+
+
+def _align_plan_to_block(
+    plan: TPUGemvPlan, M: int, K: int, B: int, packed: PackedWeight
+) -> TPUGemvPlan:
+    if plan.split_k == 1 and plan.k_blk % packed.block == 0:
+        return plan
+    k_blk = max(
+        packed.block,
+        (plan.k_blk // packed.block) * packed.block,
+    )
+    while K % k_blk != 0:
+        k_blk -= packed.block
+        if k_blk <= 0:
+            k_blk = K
+            break
+    return TPUGemvPlan(
+        m_blk=plan.m_blk, k_blk=k_blk, n_m=M // plan.m_blk,
+        n_k=K // k_blk, vmem_bytes=plan.vmem_bytes, split_k=1,
+    )

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the PIM-GEMV kernels.
+
+Every Pallas kernel in this package is validated against these references in
+``tests/test_kernels.py`` (shape/dtype sweeps, interpret=True on CPU).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemv_ref(w_t: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """out[B, M] = x[B, K] @ w_t[K, M], f32 accumulation.
+
+    ``w_t`` is the transposed ("column-major", paper §IV-A1) weight layout:
+    the M dimension is minor so outputs land on the TPU lane axis and the K
+    reduction happens inside the MXU — the paper's cross-SIMD-lane avoidance
+    in TPU-native form.
+    """
+    return jnp.dot(
+        x.astype(jnp.float32), w_t.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def quant_gemv_ref(
+    w_q: jnp.ndarray, scales: jnp.ndarray, x: jnp.ndarray, block: int
+) -> jnp.ndarray:
+    """Block-scale-factor GEMV oracle (paper §III-C3 / §VI-D2, MX-style).
+
+    w_q:    [K, M] int8 quantized weights
+    scales: [K // block, M] per-(K-block, column) scales
+    x:      [B, K]
+    """
+    K, M = w_q.shape
+    w = w_q.astype(jnp.float32).reshape(K // block, block, M)
+    w = w * scales.astype(jnp.float32)[:, None, :]
+    w = w.reshape(K, M)
+    return jnp.dot(
+        x.astype(jnp.float32), w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def unpack_int4(w_packed: jnp.ndarray) -> jnp.ndarray:
+    """[K//2, M] int8 (two nibbles per byte along K) -> [K, M] int8 in [-8, 7].
+
+    Even K indices live in the low nibble, odd in the high nibble.
+    """
+    lo = jnp.left_shift(w_packed, 4) >> 4    # arithmetic shift sign-extends
+    hi = w_packed >> 4
+    K2, M = w_packed.shape
+    return jnp.stack([lo, hi], axis=1).reshape(2 * K2, M)
+
+
+def quant4_gemv_ref(
+    w_packed: jnp.ndarray, scales: jnp.ndarray, x: jnp.ndarray, block: int
+) -> jnp.ndarray:
+    """Packed-int4 block-scale GEMV oracle."""
+    return quant_gemv_ref(unpack_int4(w_packed), scales, x, block)
+
+
+def splitk_gemv_ref(w_t: jnp.ndarray, x: jnp.ndarray, degree: int) -> jnp.ndarray:
+    """Split-K oracle (paper §VI-F): partials per K part, reduced at the end.
+
+    Numerically identical to gemv_ref up to f32 reassociation.
+    """
+    K, M = w_t.shape
+    B = x.shape[0]
+    kp = K // degree
+    parts = [
+        jnp.dot(
+            x[:, i * kp:(i + 1) * kp].astype(jnp.float32),
+            w_t[i * kp:(i + 1) * kp].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        for i in range(degree)
+    ]
+    return sum(parts).astype(x.dtype)

@@ -1,0 +1,129 @@
+"""PIMnast tile-shape planning adapted to the TPU memory hierarchy.
+
+The paper's Algorithm 1 sweeps tile height from tall (column-vector) to wide
+(row-vector) until (a) rows distribute evenly over banks and (b) the PIM
+register budget holds. The TPU analogue (DESIGN.md §2.2):
+
+    bank            -> grid program (one M-block of outputs)
+    register file   -> VMEM working set (W block double-buffer + x + f32 acc)
+    even bank dist. -> grid dims divide M and K exactly
+    cross-SIMD-lane -> M must sit on the 128-lane axis (m_blk % 128 == 0)
+    row locality    -> contiguous (k_blk, m_blk) HBM->VMEM streams, K walked
+                       innermost within an M-block (CR-order analogue)
+    CR-degree       -> output-stationary accumulation: one resident f32
+                       accumulator serves the whole K walk (IV reuse)
+
+``plan_tpu_gemv`` mirrors the sweep: start with the tallest lane-aligned
+M-block, halve until it divides M and the VMEM budget fits, then grow K-block
+to amortize grid overheads (the "process an open row fully" rule).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+LANES = 128
+SUBLANES = 8
+DEFAULT_VMEM_BUDGET = 96 * 1024 * 1024  # leave headroom of the ~128MB VMEM
+
+
+@dataclass(frozen=True)
+class TPUGemvPlan:
+    m_blk: int
+    k_blk: int
+    n_m: int
+    n_k: int
+    vmem_bytes: int
+    # split-K degree for the k-parallel variant (0 = output-stationary)
+    split_k: int = 1
+
+    @property
+    def grid(self) -> tuple[int, int]:
+        return (self.n_m, self.n_k)
+
+
+def _fits(
+    m_blk: int, k_blk: int, batch: int, w_bytes: int, x_bytes: int,
+    budget: int,
+) -> tuple[bool, int]:
+    w = m_blk * k_blk * w_bytes * 2          # double-buffered W stream
+    x = batch * k_blk * x_bytes * 2
+    acc = batch * m_blk * 4                  # f32 accumulator scratch
+    out = batch * m_blk * x_bytes * 2
+    total = w + x + acc + out
+    return total <= budget, total
+
+
+def plan_tpu_gemv(
+    M: int,
+    K: int,
+    batch: int = 1,
+    *,
+    w_bytes: int = 2,
+    x_bytes: int = 2,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    max_m_blk: int = 2048,
+    max_k_blk: int = 2048,
+) -> TPUGemvPlan:
+    """Algorithm-1 analogue for BlockSpec selection.
+
+    Sweep m_blk from tall to short (lane-aligned), then pick the largest
+    k_blk that divides K and fits VMEM. Falls back to the full dimension when
+    smaller than one lane/sublane group (ragged edges are padded by ops.py).
+    """
+    if M <= 0 or K <= 0:
+        raise ValueError("M and K must be positive")
+
+    # --- m_blk sweep: tallest lane-aligned block that divides M and fits ---
+    m_cands = []
+    m = min(max_m_blk, M)
+    m = max(LANES, (m // LANES) * LANES) if M >= LANES else M
+    while m >= LANES:
+        if M % m == 0:
+            m_cands.append(m)
+        m -= LANES if m <= 1024 else 1024  # coarse-to-fine sweep
+    if M % LANES == 0 and LANES not in m_cands and M >= LANES:
+        m_cands.append(LANES)
+    if not m_cands:
+        m_cands = [M]  # ragged small M: single block (padded downstream)
+
+    for m_blk in m_cands:
+        # --- k_blk: largest sublane-aligned divisor of K under budget ---
+        k = min(max_k_blk, K)
+        k = max(SUBLANES, (k // SUBLANES) * SUBLANES) if K >= SUBLANES else K
+        while k > SUBLANES:
+            ok, total = _fits(m_blk, k, batch, w_bytes, x_bytes, vmem_budget)
+            if K % k == 0 and ok:
+                return TPUGemvPlan(
+                    m_blk=m_blk, k_blk=k,
+                    n_m=M // m_blk, n_k=K // k, vmem_bytes=total,
+                )
+            k -= SUBLANES
+        ok, total = _fits(m_blk, min(K, SUBLANES), batch, w_bytes, x_bytes,
+                          vmem_budget)
+        if ok and K % min(K, SUBLANES) == 0:
+            kb = min(K, SUBLANES)
+            return TPUGemvPlan(
+                m_blk=m_blk, k_blk=kb, n_m=M // m_blk, n_k=K // kb,
+                vmem_bytes=total,
+            )
+
+    # Last resort: whole matrix in one block (tiny GEMVs).
+    _, total = _fits(M, K, batch, w_bytes, x_bytes, vmem_budget)
+    return TPUGemvPlan(m_blk=M, k_blk=K, n_m=1, n_k=1, vmem_bytes=total)
+
+
+def plan_splitk(
+    M: int, K: int, batch: int = 1, *, degree: int = 4, **kw
+) -> TPUGemvPlan:
+    """Split-K plan (paper §VI-F): shard the K walk into ``degree`` parallel
+    partials reduced outside the kernel — the choice for small-M GEMVs where
+    too few M-blocks exist to fill the grid."""
+    if K % degree != 0:
+        degree = math.gcd(K, degree)
+    base = plan_tpu_gemv(M, K // degree, batch, **kw)
+    return TPUGemvPlan(
+        m_blk=base.m_blk, k_blk=base.k_blk, n_m=base.n_m,
+        n_k=base.n_k, vmem_bytes=base.vmem_bytes, split_k=degree,
+    )

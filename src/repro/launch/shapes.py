@@ -1,0 +1,91 @@
+"""Assigned input-shape sets and ShapeDtypeStruct stand-ins for the dry-run.
+
+Shapes (per assignment):
+  train_4k     seq 4096   global_batch 256   -> train_step
+  prefill_32k  seq 32768  global_batch 32    -> prefill serve_step
+  decode_32k   seq 32768  global_batch 128   -> decode serve_step (1 token,
+                                                KV cache of 32k)
+  long_500k    seq 524288 global_batch 1     -> decode; sub-quadratic archs
+                                                only (DESIGN.md §5)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm as lm_mod
+
+
+@dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeCase] = {
+    "train_4k": ShapeCase("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeCase) -> tuple[bool, str]:
+    """long_500k needs sub-quadratic attention (skip documented in DESIGN)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            f"{cfg.name} is pure full-attention; long_500k skipped "
+            "(DESIGN.md §5)"
+        )
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def modality_specs(cfg: ModelConfig, batch: int) -> dict:
+    """Stub frontend embeddings (weak-type-correct, no allocation)."""
+    extra = {}
+    if cfg.encoder is not None:
+        enc = cfg.encoder
+        extra["frames"] = _sds((batch, enc.n_frames, enc.d_model),
+                               cfg.compute_dtype)
+    if cfg.cross_attn_every > 0:
+        extra["vision"] = _sds((batch, cfg.vision_tokens, cfg.d_model),
+                               cfg.compute_dtype)
+    return extra
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCase) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {"tokens": _sds((B, S), jnp.int32)}
+        specs.update(modality_specs(cfg, B))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((B, S), jnp.int32)}
+        specs["cache"] = cache_specs(cfg, B, S)
+        specs.update(modality_specs(cfg, B))
+        return specs
+    # decode: one new token against a KV cache of S
+    specs = {"tokens": _sds((B, 1), jnp.int32)}
+    specs["cache"] = cache_specs(cfg, B, S)
+    specs.update(modality_specs(cfg, B))
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """ShapeDtypeStructs mirroring lm.init_cache without allocation."""
+    shapes = jax.eval_shape(
+        lambda: lm_mod.init_cache(cfg, batch, max_len)
+    )
+    return shapes

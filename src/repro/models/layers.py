@@ -1,0 +1,397 @@
+"""Functional building blocks shared by every architecture in the zoo.
+
+Conventions:
+  * params are nested dicts of jnp arrays; ``init_*`` builds them,
+    ``apply``-style functions consume them (pure functions, pjit-friendly);
+  * activations are [batch, seq, d_model] unless noted;
+  * softmax/normalization statistics run in f32 regardless of compute dtype;
+  * per-layer structural variation (local vs global attention) is expressed
+    as data (masks/flags) so the layer stack scans with a uniform body.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = dict[str, Any]
+
+BIG_NEG = -2.0e9
+
+
+def _dense_init(key, fan_in: int, shape, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+
+def init_norm(key, cfg: ModelConfig, d: int, dtype) -> Params:
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return {}  # non-parametric LN (olmo)
+
+
+def apply_norm(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + 1e-6)
+        return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + 1e-6)
+    if cfg.norm_type == "layernorm":
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(
+            jnp.float32
+        )
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embedding
+# --------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, S, H, D]; positions: [B, S] (or [S])."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.arange(half, dtype=jnp.float32)
+    inv = theta ** (-freqs / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(
+        jnp.float32
+    )
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA, causal / sliding-window / cross)
+# --------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype, *, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(kq, d, (d, cfg.n_heads, hd), dtype),
+        "wk": _dense_init(kk, d, (d, cfg.n_kv_heads, hd), dtype),
+        "wv": _dense_init(kv, d, (d, cfg.n_kv_heads, hd), dtype),
+        "wo": _dense_init(ko, cfg.n_heads * hd, (cfg.n_heads, hd, d), dtype),
+    }
+
+
+def attention_core(
+    q: jnp.ndarray,            # [B, Sq, H, D]
+    k: jnp.ndarray,            # [B, Sk, Hkv, D]
+    v: jnp.ndarray,            # [B, Sk, Hkv, D]
+    *,
+    q_positions: jnp.ndarray | None,   # [B, Sq] absolute positions (causal)
+    kv_valid_len: jnp.ndarray | None,  # [] or [B]: valid kv prefix length
+    window: jnp.ndarray | int | None,  # sliding window (None/<=0: unlimited)
+    causal: bool,
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    # bf16 operands + f32 accumulation (MXU-style): casting the whole KV
+    # cache to f32 costs 2x its bytes per layer per decode step and drags
+    # f32 copies through the cache-update path (§Perf iteration B1).
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k,
+        preferred_element_type=jnp.float32,
+    ) / math.sqrt(D)
+    # Placement sweep for the score tensor (the working-set giant): prefer
+    # head ("bank"-row) placement; when heads don't divide the model axis
+    # (hymba 25H/5kv, gemma3-1b 1kv, whisper 12H) fall back to
+    # SEQUENCE-parallel q — the split-K analogue (§Perf iteration C1).
+    from repro.distributed.axes import constrain_first
+
+    scores = constrain_first(
+        scores,
+        [
+            ("batch", "model", None, None, None),   # kv-heads on 'model'
+            ("batch", None, None, "model", None),   # q-sequence on 'model'
+        ],
+    )
+
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((B, Sq, Sk), dtype=bool)
+    if causal:
+        assert q_positions is not None
+        mask &= kpos[None, None, :] <= q_positions[:, :, None]
+        if window is not None:
+            w = jnp.asarray(window)
+            no_limit = w <= 0
+            lo = q_positions[:, :, None] - (w - 1)
+            mask &= no_limit | (kpos[None, None, :] >= lo)
+    if kv_valid_len is not None:
+        vl = jnp.asarray(kv_valid_len)
+        vl = vl[:, None, None] if vl.ndim == 1 else vl
+        mask &= kpos[None, None, :] < vl
+
+    scores = jnp.where(mask[:, None, None, :, :], scores, BIG_NEG)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, H, D)
+
+
+def apply_attention(
+    p: Params,
+    x: jnp.ndarray,                       # [B, Sq, d]
+    cfg: ModelConfig,
+    *,
+    positions: jnp.ndarray,               # [B, Sq]
+    window: jnp.ndarray | int | None,
+    cache_kv: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+    cache_pos: jnp.ndarray | None = None,  # [] scalar write offset
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray] | None]:
+    """Self-attention with optional KV cache (decode).
+
+    cache_kv: ([B, C, Hkv, D], [B, C, Hkv, D]) rolling caches. When given,
+    new K/V are written at ``cache_pos`` and attention runs over the cache.
+    """
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if cache_kv is not None:
+        ck, cv = cache_kv
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 cache_pos, axis=1)
+        kv_valid = cache_pos + x.shape[1]
+        out = attention_core(
+            q, ck, cv, q_positions=positions, kv_valid_len=kv_valid,
+            window=window, causal=True,
+        )
+        new_cache = (ck, cv)
+    else:
+        out = attention_core(
+            q, k, v, q_positions=positions, kv_valid_len=None,
+            window=window, causal=True,
+        )
+        new_cache = None
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def init_cross_attention(key, cfg: ModelConfig, d_kv: int, dtype) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(kq, d, (d, cfg.n_heads, hd), dtype),
+        "wk": _dense_init(kk, d_kv, (d_kv, cfg.n_kv_heads, hd), dtype),
+        "wv": _dense_init(kv, d_kv, (d_kv, cfg.n_kv_heads, hd), dtype),
+        "wo": _dense_init(ko, cfg.n_heads * hd, (cfg.n_heads, hd, d), dtype),
+    }
+
+
+def apply_cross_attention(
+    p: Params, x: jnp.ndarray, ctx: jnp.ndarray, cfg: ModelConfig
+) -> jnp.ndarray:
+    """x: [B, Sq, d] queries over ctx: [B, Sk, d_kv] (no mask, no rope)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", ctx, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", ctx, p["wv"])
+    out = attention_core(
+        q, k, v, q_positions=None, kv_valid_len=None, window=None,
+        causal=False,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# --------------------------------------------------------------------------
+# Dense FFN
+# --------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: int | None = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": _dense_init(k1, d, (d, f), dtype),
+        "w_down": _dense_init(k2, f, (f, d), dtype),
+    }
+    if cfg.act in ("silu", "geglu"):
+        p["w_gate"] = _dense_init(k3, d, (d, f), dtype)
+    return p
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    up = x @ p["w_up"]
+    if cfg.act == "silu":
+        h = jax.nn.silu(x @ p["w_gate"]) * up
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * up
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(up)
+    elif cfg.act == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        raise ValueError(cfg.act)
+    return h @ p["w_down"]
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts (sort-based dispatch; GShard-capacity semantics)
+# --------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    assert cfg.moe is not None
+    e = cfg.moe
+    d, f = cfg.d_model, e.d_expert
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": _dense_init(kr, d, (d, e.n_experts), jnp.float32),
+        "w_up": _dense_init(ku, d, (e.n_experts, d, f), dtype),
+        "w_down": _dense_init(kd, f, (e.n_experts, f, d), dtype),
+    }
+    if cfg.act in ("silu", "geglu"):
+        p["w_gate"] = _dense_init(kg, d, (e.n_experts, d, f), dtype)
+    if e.n_shared:
+        p["shared"] = init_mlp(
+            ks, cfg, dtype, d_ff=e.n_shared * f
+        )
+    return p
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    e = cfg.moe
+    c = math.ceil(n_tokens * e.top_k * e.capacity_factor / e.n_experts)
+    # Dropless at small token counts (decode steps, smoke tests): capacity
+    # dropping would make incremental decode diverge from the teacher-forced
+    # forward. At training scale the GShard capacity bound applies.
+    if n_tokens * e.top_k <= 4096:
+        c = max(c, n_tokens * e.top_k)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def _dispatch_chunk(xt, top_i, top_p, n_experts, top_k, C):
+    """Sort-based dispatch for ONE token chunk: [T, d] -> [E, C, d] buffers
+    plus the (expert, slot, token, weight, keep) routing plan."""
+    T, d = xt.shape
+    flat_e = top_i.reshape(-1)                               # [T*k]
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    flat_w = top_p.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.bincount(flat_e, length=n_experts)          # [E]
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * top_k) - starts[se]
+    keep = rank < C
+    slot = jnp.where(keep, rank, C - 1).astype(jnp.int32)
+    buf = jnp.zeros((n_experts, C, d), xt.dtype)
+    gathered = xt[st] * keep[:, None].astype(xt.dtype)
+    buf = buf.at[se, slot].add(gathered)
+    return buf, (se, st, sw, slot, keep)
+
+
+def _combine_chunk(out, plan, T):
+    se, st, sw, slot, keep = plan
+    d = out.shape[-1]
+    contrib = out[se, slot] * (sw * keep)[:, None].astype(out.dtype)
+    return jnp.zeros((T, d), out.dtype).at[st].add(contrib)
+
+
+def apply_moe(
+    p: Params, x: jnp.ndarray, cfg: ModelConfig
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, d] -> (y, aux_loss).
+
+    CHUNKED sort-based dispatch (§Perf iteration 3 in EXPERIMENTS.md):
+    routing, capacity, and the scatter/gather run per SEQUENCE (vmap over
+    the batch dim), so dispatch indices never cross data shards — under
+    GSPMD the scatters stay device-local and the only cross-device motion
+    is resharding the [B, E, C, d] buffers from batch-sharded to
+    expert-sharded (the canonical MoE all-to-all). A single global-capacity
+    dispatch instead makes GSPMD replicate the buffers (~30 GB/layer at
+    train_4k scale). Capacity is per-sequence GShard semantics; expert FFNs
+    run as one einsum batched over [B, E] with E on the mesh 'model' axis
+    (the PIMnast bank-balance analogue for experts).
+    """
+    from repro.distributed.axes import constrain, constrain_first
+
+    e = cfg.moe
+    B, S, d = x.shape
+
+    # bf16 tokens x bf16 router with f32 accumulation: an f32 cast of x
+    # here would put a full f32 activation-gradient all-reduce on the
+    # backward path (A2 iteration, EXPERIMENTS.md §Perf).
+    logits = jax.lax.dot_general(
+        x, p["router"].astype(x.dtype),
+        dimension_numbers=(((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                        # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, e.top_k)             # [B, S, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # ---- aux load-balance loss (Switch-style, over all tokens) ----
+    me = jnp.mean(probs, axis=(0, 1))                        # [E]
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_i, e.n_experts), axis=2), axis=(0, 1)
+    ) / e.top_k
+    aux = e.n_experts * jnp.sum(me * ce) * e.router_aux_weight
+
+    # ---- per-sequence dispatch ----
+    C = _capacity(S, cfg)
+    buf, plan = jax.vmap(
+        lambda xc, ic, pc: _dispatch_chunk(
+            xc, ic, pc, e.n_experts, e.top_k, C
+        )
+    )(x, top_i, top_p)                                       # [B, E, C, d]
+    # batch-sharded -> expert-sharded: the MoE all-to-all happens here
+    buf = constrain(buf, ("batch", "model", None, None))
+
+    # ---- expert FFNs (batched over [B, E]) ----
+    if cfg.act in ("silu", "geglu"):
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+        h = act(jnp.einsum("becd,edf->becf", buf, p["w_gate"]))
+        h = h * jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", buf, p["w_up"]))
+    # Placement sweep (Algorithm-1 analogue, §Perf A4): experts on 'model'
+    # when E divides (deepseek 64/16); otherwise TP-within-expert — shard
+    # the FFN width so GSPMD doesn't replicate the f dimension (grok: 8
+    # experts on a 16-way axis replicated f and cost 16x the FLOPs).
+    h = constrain_first(h, [
+        ("batch", "model", None, None),      # expert-parallel
+        ("batch", None, None, "model"),      # TP-in-expert (f sharded)
+    ])
+    out = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    # (A2 note, EXPERIMENTS.md §Perf: forcing an a2a back to batch-sharding
+    # here before the combine gather was TRIED and refuted — GSPMD's own
+    # gather+all-reduce schedule was cheaper. Keep expert-sharded.)
+    out = constrain(out, ("batch", "model", None, None))
+
+    # ---- combine (back to batch-sharded tokens) ----
+    y = jax.vmap(lambda oc, pl: _combine_chunk(oc, pl, S))(out, plan)
+    y = constrain(y, ("batch", None, None))
+
+    if e.n_shared:
+        y = y + apply_mlp(p["shared"], x, cfg)
+    return y, aux

@@ -1,0 +1,518 @@
+"""Unified LM assembly for every assigned architecture.
+
+One ``init_lm`` / ``forward`` pair covers:
+  * dense decoder-only (gemma3 local:global GQA, minitron, olmo),
+  * MoE (deepseek-moe fine-grained shared+routed, grok),
+  * attention-free RWKV6,
+  * hybrid parallel attn+Mamba (hymba),
+  * encoder-decoder audio (whisper; stub conv frontend supplies frame
+    embeddings per the assignment),
+  * VLM with interleaved cross-attention layers (llama-3.2-vision; stub
+    patch embeddings).
+
+The layer stack is ``jax.lax.scan`` over stacked per-layer params so HLO size
+is O(1) in depth (62-layer configs compile like 2-layer ones). Per-layer
+structural variation rides as data: a bool ``is_global`` selects full vs
+sliding-window masks with identical FLOPs; VLM cross-attention uses a group
+scan (`cross_attn_every` layers per group, the last cross-attends) so FLOPs
+match the real architecture exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.axes import constrain
+from repro.models import layers as L
+from repro.models import ssm as S
+
+Params = dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, dtype, *, cross: bool) -> Params:
+    """One decoder layer's params (uniform structure for the scan)."""
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": L.init_norm(ks[0], cfg, cfg.d_model, dtype),
+                 "ln2": L.init_norm(ks[1], cfg, cfg.d_model, dtype)}
+    if cfg.family == "ssm":  # rwkv: time-mix + channel-mix
+        p["time_mix"] = S.init_rwkv_time_mix(ks[2], cfg, dtype)
+        p["channel_mix"] = S.init_rwkv_channel_mix(ks[3], cfg, dtype)
+        return p
+    p["attn"] = L.init_attention(ks[2], cfg, dtype)
+    if cfg.parallel_ssm:
+        p["mamba"] = S.init_mamba(ks[3], cfg, dtype)
+        p["beta_attn"] = jnp.ones((cfg.d_model,), dtype)
+        p["beta_ssm"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.moe is not None:
+        p["moe"] = L.init_moe(ks[4], cfg, dtype)
+    else:
+        p["mlp"] = L.init_mlp(ks[4], cfg, dtype)
+    if cross:
+        p["ln_cross"] = L.init_norm(ks[5], cfg, cfg.d_model, dtype)
+        p["cross"] = L.init_cross_attention(ks[6], cfg, cfg.d_model, dtype)
+        p["cross_gate"] = jnp.zeros((1,), dtype)  # llama-vision gated xattn
+    if cfg.encoder is not None and cross:
+        pass
+    return p
+
+
+def _init_encoder(key, cfg: ModelConfig, dtype) -> Params:
+    """Whisper-style bidirectional encoder over stub frame embeddings."""
+    enc = cfg.encoder
+    import dataclasses
+
+    enc_cfg = dataclasses.replace(
+        cfg, d_model=enc.d_model, n_heads=enc.n_heads,
+        n_kv_heads=enc.n_heads, d_ff=enc.d_ff, head_dim=0,
+        moe=None, parallel_ssm=False, family="dense",
+        norm_type="layernorm", act="gelu",
+    )
+    def one(k):
+        ks = jax.random.split(k, 4)
+        return {
+            "ln1": L.init_norm(ks[0], enc_cfg, enc.d_model, dtype),
+            "attn": L.init_attention(ks[1], enc_cfg, dtype),
+            "ln2": L.init_norm(ks[2], enc_cfg, enc.d_model, dtype),
+            "mlp": L.init_mlp(ks[3], enc_cfg, dtype),
+        }
+    keys = jax.random.split(key, enc.n_layers + 2)
+    stacked = jax.vmap(one)(keys[:enc.n_layers])
+    return {
+        "layers": stacked,
+        "ln_f": L.init_norm(keys[-2], enc_cfg, enc.d_model, dtype),
+        # project encoder width to decoder width if they differ
+        "proj": (
+            L._dense_init(keys[-1], enc.d_model,
+                          (enc.d_model, cfg.d_model), dtype)
+            if enc.d_model != cfg.d_model else None
+        ),
+    }
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    dtype = _dtype(cfg)
+    if not jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.wrap_key_data(key)  # accept legacy raw keys
+    k_emb, k_layers, k_enc, k_f, k_head = jax.random.split(key, 5)
+
+    p: Params = {
+        "embed": L._dense_init(
+            k_emb, cfg.d_model, (cfg.vocab, cfg.d_model), dtype
+        ),
+        "ln_f": L.init_norm(k_f, cfg, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L._dense_init(
+            k_head, cfg.d_model, (cfg.d_model, cfg.vocab), dtype
+        )
+
+    n = cfg.n_layers
+    if cfg.cross_attn_every > 0:
+        # VLM group scan: [n_groups, group_size] param stacking; only the
+        # last layer of each group carries cross-attention params.
+        g = cfg.cross_attn_every
+        assert n % g == 0, (n, g)
+        n_groups = n // g
+        keys = jax.random.split(k_layers, n).reshape(n_groups, g)
+
+        def one_group(gkeys):
+            plain = jax.vmap(
+                lambda kk: _init_block(kk, cfg, dtype, cross=False)
+            )(gkeys[: g - 1])
+            last = _init_block(gkeys[g - 1], cfg, dtype, cross=True)
+            return {"plain": plain, "cross_layer": last}
+
+        p["groups"] = jax.vmap(one_group)(keys)
+    else:
+        cross = cfg.encoder is not None  # whisper: every decoder layer
+        keys = jax.random.split(k_layers, n)
+        p["layers"] = jax.vmap(
+            lambda kk: _init_block(kk, cfg, dtype, cross=cross)
+        )(keys)
+    if cfg.encoder is not None:
+        p["encoder"] = _init_encoder(k_enc, cfg, dtype)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Cache
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> Params:
+    """Decode state for every family; entries have a leading layer dim so the
+    layer scan threads them as xs/ys."""
+    dtype = dtype or _dtype(cfg)
+    n, d, hd = cfg.n_layers, cfg.d_model, cfg.hd
+    cache: Params = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family != "ssm":
+        cache["k"] = jnp.zeros((n, batch, max_len, cfg.n_kv_heads, hd), dtype)
+        cache["v"] = jnp.zeros((n, batch, max_len, cfg.n_kv_heads, hd), dtype)
+    if cfg.family == "ssm":
+        H, hdr = S.rwkv_heads(cfg)
+        cache["rwkv_s"] = jnp.zeros((n, batch, H, hdr, hdr), jnp.float32)
+        cache["rwkv_x_tm"] = jnp.zeros((n, batch, d), dtype)
+        cache["rwkv_x_cm"] = jnp.zeros((n, batch, d), dtype)
+    if cfg.parallel_ssm:
+        di, st, cw = S.mamba_dims(cfg)
+        cache["mamba_conv"] = jnp.zeros((n, batch, cw - 1, di), dtype)
+        cache["mamba_h"] = jnp.zeros((n, batch, di, st), jnp.float32)
+    return cache
+
+
+# --------------------------------------------------------------------------
+# Layer bodies
+# --------------------------------------------------------------------------
+
+
+def _self_block(
+    p: Params, x, cfg: ModelConfig, positions, window,
+    cache_kv, cache_pos, mamba_state=None,
+):
+    """attention (+ parallel mamba) + FFN/MoE with pre-norms."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(p["ln1"], x, cfg)
+    attn_out, new_kv = L.apply_attention(
+        p["attn"], h, cfg, positions=positions, window=window,
+        cache_kv=cache_kv, cache_pos=cache_pos,
+    )
+    new_state = {}
+    if cfg.parallel_ssm:
+        ssm_out, (new_conv, new_h) = S.apply_mamba(
+            p["mamba"], h, cfg, state=mamba_state
+        )
+        attn_out = (
+            p["beta_attn"] * attn_out + p["beta_ssm"] * ssm_out
+        )
+        new_state = {"mamba_conv": new_conv, "mamba_h": new_h}
+    x = x + attn_out
+    h = L.apply_norm(p["ln2"], x, cfg)
+    if cfg.moe is not None:
+        ff, aux = L.apply_moe(p["moe"], h, cfg)
+    else:
+        ff = L.apply_mlp(p["mlp"], h, cfg)
+    x = x + ff
+    return x, new_kv, new_state, aux
+
+
+def _rwkv_block(p: Params, x, cfg: ModelConfig, cache_l):
+    tm_state = None
+    cm_prev = None
+    if cache_l is not None:
+        tm_state = (cache_l["rwkv_s"], cache_l["rwkv_x_tm"])
+        cm_prev = cache_l["rwkv_x_cm"]
+    h = L.apply_norm(p["ln1"], x, cfg)
+    y, (new_s, new_x_tm) = S.apply_rwkv_time_mix(p["time_mix"], h, cfg,
+                                                 state=tm_state)
+    x = x + y
+    h = L.apply_norm(p["ln2"], x, cfg)
+    y, new_x_cm = S.apply_rwkv_channel_mix(p["channel_mix"], h, cfg,
+                                           prev_x=cm_prev)
+    x = x + y
+    new_cache = {
+        "rwkv_s": new_s, "rwkv_x_tm": new_x_tm, "rwkv_x_cm": new_x_cm,
+    }
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+
+def _window_for(cfg: ModelConfig, is_global):
+    """Per-layer effective window as data: 0 disables the limit."""
+    if cfg.attn_pattern != "local_global":
+        return 0
+    return jnp.where(is_global, 0, cfg.sliding_window)
+
+
+def _run_encoder(p: Params, frames: jnp.ndarray, cfg: ModelConfig):
+    """Whisper encoder over stub frame embeddings [B, T, enc_d]."""
+    import dataclasses
+
+    enc = cfg.encoder
+    enc_cfg = dataclasses.replace(
+        cfg, d_model=enc.d_model, n_heads=enc.n_heads,
+        n_kv_heads=enc.n_heads, d_ff=enc.d_ff, head_dim=0, moe=None,
+        parallel_ssm=False, family="dense", norm_type="layernorm",
+        act="gelu",
+    )
+    B, T, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def body(x, pl):
+        h = L.apply_norm(pl["ln1"], x, enc_cfg)
+        q = jnp.einsum("bsd,dhk->bshk", h, pl["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, pl["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, pl["attn"]["wv"])
+        q = L.rope(q, positions, enc_cfg.rope_theta)
+        k = L.rope(k, positions, enc_cfg.rope_theta)
+        o = L.attention_core(q, k, v, q_positions=None, kv_valid_len=None,
+                             window=None, causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, pl["attn"]["wo"])
+        h = L.apply_norm(pl["ln2"], x, enc_cfg)
+        x = x + L.apply_mlp(pl["mlp"], h, enc_cfg)
+        return x, None
+
+    if cfg.unroll_layers:
+        x = frames
+        for i in range(enc.n_layers):
+            pl = jax.tree.map(lambda a: a[i], p["layers"])
+            x, _ = body(x, pl)
+    else:
+        x, _ = jax.lax.scan(body, frames, p["layers"])
+    x = L.apply_norm(p["ln_f"], x, enc_cfg)
+    if p.get("proj") is not None:
+        x = x @ p["proj"]
+    return constrain(x, ("batch", None, None))
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,                     # [B, S] int32
+    *,
+    cache: Params | None = None,
+    frames: jnp.ndarray | None = None,       # whisper stub embeddings
+    vision: jnp.ndarray | None = None,       # vlm stub patch embeddings [B,Nv,d]
+    remat: bool | None = None,
+) -> tuple[jnp.ndarray, Params | None, jnp.ndarray]:
+    """Returns (logits [B, S, vocab], new_cache, aux_loss)."""
+    B, Sq = tokens.shape
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(dtype)
+    x = x * jnp.asarray(jnp.sqrt(cfg.d_model), dtype)  # gemma-style scale
+    x = constrain(x, ("batch", None, None))
+
+    pos0 = cache["pos"] if cache is not None else jnp.zeros((), jnp.int32)
+    positions = pos0 + jnp.arange(Sq)[None, :]
+    positions = jnp.broadcast_to(positions, (B, Sq))
+
+    ctx = None
+    if cfg.encoder is not None:
+        assert frames is not None, "whisper needs stub frame embeddings"
+        ctx = _run_encoder(params["encoder"], frames.astype(dtype), cfg)
+    if cfg.cross_attn_every > 0:
+        assert vision is not None, "vlm needs stub patch embeddings"
+        ctx = vision.astype(dtype)
+
+    remat = cfg.remat if remat is None else remat
+    layer_idx = jnp.arange(cfg.n_layers)
+    is_global = (
+        layer_idx % max(cfg.global_every, 1) == max(cfg.global_every, 1) - 1
+        if cfg.attn_pattern == "local_global"
+        else jnp.ones((cfg.n_layers,), bool)
+    )
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.cross_attn_every > 0:
+        x, new_cache, aux_total = _forward_grouped(
+            params, cfg, x, positions, ctx, cache, remat
+        )
+    else:
+        x, new_cache, aux_total = _forward_flat(
+            params, cfg, x, positions, ctx, cache, is_global, remat
+        )
+
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    )
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(dtype))
+    logits = constrain(logits, ("batch", None, "model"))
+    if new_cache is not None:
+        new_cache["pos"] = pos0 + Sq
+    return logits, new_cache, aux_total
+
+
+def _forward_flat(params, cfg, x, positions, ctx, cache, is_global, remat):
+    """Uniform scan over layers (everything except grouped VLM)."""
+    decode = cache is not None
+
+    def step(carry, pl, flag_global, cache_l):
+        x, aux = carry
+        if cfg.family == "ssm":
+            x, new_cache_l = _rwkv_block(pl, x, cfg, cache_l)
+            return (x, aux), (new_cache_l if decode else {})
+        window = _window_for(cfg, flag_global)
+        cache_kv = (cache_l["k"], cache_l["v"]) if decode else None
+        cache_pos = cache["pos"] if decode else None
+        mamba_state = None
+        if cfg.parallel_ssm and decode:
+            mamba_state = (cache_l["mamba_conv"], cache_l["mamba_h"])
+        x, new_kv, new_state, aux_l = _self_block(
+            pl, x, cfg, positions, window, cache_kv, cache_pos,
+            mamba_state=mamba_state,
+        )
+        if ctx is not None and "cross" in pl:  # whisper decoder
+            h = L.apply_norm(pl["ln_cross"], x, cfg)
+            x = x + L.apply_cross_attention(pl["cross"], h, ctx, cfg)
+        new_cache_l = {}
+        if decode:
+            if new_kv is not None:
+                new_cache_l["k"], new_cache_l["v"] = new_kv
+            new_cache_l.update(new_state)
+        x = constrain(x, ("batch", None, None))
+        return (x, aux + aux_l), new_cache_l
+
+    if cfg.unroll_layers:
+        # Python loop (dry-run roofline mode): every layer appears in the
+        # HLO so cost_analysis counts are exact, unlike scan whose body is
+        # counted once regardless of trip count (see EXPERIMENTS.md §Roofline
+        # methodology).
+        carry = (x, jnp.zeros((), jnp.float32))
+        new_layers = []
+        stepc = jax.checkpoint(step, static_argnums=()) if remat else step
+        for i in range(cfg.n_layers):
+            pl = jax.tree.map(lambda a: a[i], params["layers"])
+            cache_l = (
+                jax.tree.map(
+                    lambda a: a[i],
+                    {k: v for k, v in cache.items() if k != "pos"},
+                ) if decode else None
+            )
+            carry, nc = stepc(carry, pl, is_global[i], cache_l)
+            new_layers.append(nc)
+        x, aux = carry
+        if decode:
+            stacked = jax.tree.map(
+                lambda *ls: jnp.stack(ls), *new_layers
+            )
+            return x, stacked, aux
+        return x, None, aux
+
+    if decode:
+        cache_xs = {k: v for k, v in cache.items() if k != "pos"}
+        body = lambda c, xs: step(c, xs[0], xs[1], xs[2])
+        if remat:
+            body = jax.checkpoint(body)
+        (x, aux), new_cache_stacked = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (params["layers"], is_global, cache_xs),
+        )
+        return x, new_cache_stacked, aux
+
+    body = lambda c, xs: step(c, xs[0], xs[1], None)
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], is_global),
+    )
+    return x, None, aux
+
+
+def _forward_grouped(params, cfg, x, positions, ctx, cache, remat):
+    """VLM: scan over groups of `cross_attn_every` layers; the group's last
+    layer applies gated cross-attention to the vision context."""
+    g = cfg.cross_attn_every
+    decode = cache is not None
+    n_groups = cfg.n_layers // g
+
+    def layer_step(x, pl, cache_kv, cache_pos, cross):
+        window = 0
+        x, new_kv, _, aux = _self_block(
+            pl, x, cfg, positions, window, cache_kv, cache_pos,
+        )
+        if cross:
+            h = L.apply_norm(pl["ln_cross"], x, cfg)
+            gate = jnp.tanh(pl["cross_gate"].astype(x.dtype))
+            x = x + gate * L.apply_cross_attention(pl["cross"], h, ctx, cfg)
+        x = constrain(x, ("batch", None, None))
+        return x, new_kv, aux
+
+    def body(carry, xs):
+        x, aux = carry
+        pg, cache_g = xs  # params for the group; cache [g, ...] slices
+        new_ks, new_vs = [], []
+        for i in range(g - 1):
+            pl = jax.tree.map(lambda a: a[i], pg["plain"])
+            ckv = (
+                (cache_g["k"][i], cache_g["v"][i]) if decode else None
+            )
+            x, nkv, a = layer_step(
+                x, pl, ckv, cache["pos"] if decode else None, cross=False
+            )
+            aux = aux + a
+            if decode:
+                new_ks.append(nkv[0]); new_vs.append(nkv[1])
+        ckv = (
+            (cache_g["k"][g - 1], cache_g["v"][g - 1]) if decode else None
+        )
+        x, nkv, a = layer_step(
+            x, pg["cross_layer"], ckv, cache["pos"] if decode else None,
+            cross=True,
+        )
+        aux = aux + a
+        if decode:
+            new_ks.append(nkv[0]); new_vs.append(nkv[1])
+            new_cache_g = {
+                "k": jnp.stack(new_ks), "v": jnp.stack(new_vs)
+            }
+        else:
+            new_cache_g = {}
+        return (x, aux), new_cache_g
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    if cfg.unroll_layers:
+        carry = (x, jnp.zeros((), jnp.float32))
+        new_groups = []
+        for gi in range(n_groups):
+            pg = jax.tree.map(lambda a: a[gi], params["groups"])
+            if decode:
+                kc = cache["k"].reshape(
+                    (n_groups, g) + cache["k"].shape[1:]
+                )[gi]
+                vc = cache["v"].reshape(
+                    (n_groups, g) + cache["v"].shape[1:]
+                )[gi]
+                carry, nc = body(carry, (pg, {"k": kc, "v": vc}))
+                new_groups.append(nc)
+            else:
+                carry, _ = body(carry, (pg, None))
+        x, aux = carry
+        if decode:
+            stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *new_groups)
+            new_cache = {
+                "k": stacked["k"].reshape(cache["k"].shape),
+                "v": stacked["v"].reshape(cache["v"].shape),
+            }
+            return x, new_cache, aux
+        return x, None, aux
+
+    if decode:
+        kc = cache["k"].reshape((n_groups, g) + cache["k"].shape[1:])
+        vc = cache["v"].reshape((n_groups, g) + cache["v"].shape[1:])
+        (x, aux), new_c = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (params["groups"], {"k": kc, "v": vc}),
+        )
+        new_cache = {
+            "k": new_c["k"].reshape(cache["k"].shape),
+            "v": new_c["v"].reshape(cache["v"].shape),
+        }
+        return x, new_cache, aux
+    (x, aux), _ = jax.lax.scan(
+        lambda c, s: body(c, (s, None)),
+        (x, jnp.zeros((), jnp.float32)), params["groups"],
+    )
+    return x, None, aux

@@ -1,0 +1,237 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) time/channel-mix and a
+Mamba-style selective SSM head (for Hymba's parallel attn+SSM layers).
+
+TPU adaptation note (DESIGN.md §3): the recurrences are expressed with
+``jax.lax.scan`` (compiles to a fori loop; O(1) HLO in sequence length) with
+f32 state. Decode carries the state explicitly, so long-context decode is
+O(1) memory — which is why rwkv6/hymba run the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# RWKV6 (Finch) — data-dependent decay [arXiv:2404.05892]
+# --------------------------------------------------------------------------
+
+
+def rwkv_heads(cfg: ModelConfig) -> tuple[int, int]:
+    hd = cfg.ssm.head_dim
+    assert cfg.d_model % hd == 0, (cfg.d_model, hd)
+    return cfg.d_model // hd, hd
+
+
+def init_rwkv_time_mix(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    H, hd = rwkv_heads(cfg)
+    lora = 32
+    ks = jax.random.split(key, 10)
+    return {
+        "mu": 0.5 * jnp.ones((5, d), dtype),          # r,k,v,g,w token-shift
+        "w0": jnp.zeros((d,), jnp.float32) - 0.5,     # decay bias
+        "w_a": _dense_init(ks[0], d, (d, lora), jnp.float32),
+        "w_b": _dense_init(ks[1], lora, (lora, d), jnp.float32),
+        "wr": _dense_init(ks[2], d, (d, d), dtype),
+        "wk": _dense_init(ks[3], d, (d, d), dtype),
+        "wv": _dense_init(ks[4], d, (d, d), dtype),
+        "wg": _dense_init(ks[5], d, (d, d), dtype),
+        "wo": _dense_init(ks[6], d, (d, d), dtype),
+        "u": jnp.zeros((H, hd), jnp.float32),         # per-head bonus
+        "ln_scale": jnp.ones((d,), dtype),            # per-head group norm
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: jnp.ndarray | None) -> jnp.ndarray:
+    """xx[t] = x[t-1]; position 0 takes ``prev`` (decode carry) or zero."""
+    if x.shape[1] == 1:
+        return (
+            prev[:, None, :] if prev is not None else jnp.zeros_like(x)
+        )
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev)
+    return shifted
+
+
+def apply_rwkv_time_mix(
+    p: Params,
+    x: jnp.ndarray,                       # [B, S, d]
+    cfg: ModelConfig,
+    state: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
+    """Returns (y, (wkv_state [B,H,D,D] f32, x_last [B,d]))."""
+    B, S, d = x.shape
+    H, hd = rwkv_heads(cfg)
+    prev_x = state[1] if state is not None else None
+    xx = _token_shift(x, prev_x)
+
+    def mix(i):
+        mu = p["mu"][i].astype(x.dtype)
+        return x + (xx - x) * mu
+
+    r = (mix(0) @ p["wr"]).reshape(B, S, H, hd)
+    k = (mix(1) @ p["wk"]).reshape(B, S, H, hd)
+    v = (mix(2) @ p["wv"]).reshape(B, S, H, hd)
+    g = mix(3) @ p["wg"]
+    # data-dependent decay (the Finch signature)
+    wx = jnp.tanh(mix(4).astype(jnp.float32) @ p["w_a"]) @ p["w_b"]
+    w = jnp.exp(-jnp.exp(p["w0"] + wx))               # [B, S, d] in (0, 1)
+    w = w.reshape(B, S, H, hd)
+
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    u = p["u"]
+
+    s0 = (
+        state[0] if state is not None
+        else jnp.zeros((B, H, hd, hd), jnp.float32)
+    )
+
+    def step(s, inputs):
+        rt, kt, vt, wt = inputs              # [B, H, hd] each
+        kv = kt[..., :, None] * vt[..., None, :]          # [B, H, hd, hd]
+        yt = jnp.einsum("bhi,bhij->bhj", rt,
+                        s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, yt
+
+    seq = (
+        rf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+        vf.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3),
+    )
+    s_final, ys = jax.lax.scan(step, s0, seq)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, H, hd)
+
+    # per-head group norm
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6)).reshape(B, S, d)
+    y = y * p["ln_scale"].astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(g)
+    out = y @ p["wo"]
+    return out, (s_final, x[:, -1, :])
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, d), dtype),
+        "wk": _dense_init(k1, d, (d, f), dtype),
+        "wv": _dense_init(k2, f, (f, d), dtype),
+        "wr": _dense_init(k3, d, (d, d), dtype),
+    }
+
+
+def apply_rwkv_channel_mix(
+    p: Params, x: jnp.ndarray, cfg: ModelConfig,
+    prev_x: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    xx = _token_shift(x, prev_x)
+    xk = x + (xx - x) * p["mu"][0].astype(x.dtype)
+    xr = x + (xx - x) * p["mu"][1].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    return out, x[:, -1, :]
+
+
+# --------------------------------------------------------------------------
+# Mamba-style selective SSM head (Hymba parallel heads)
+# --------------------------------------------------------------------------
+
+
+def mamba_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    di = cfg.ssm.expand * cfg.d_model
+    return di, cfg.ssm.state_dim, cfg.ssm.conv_dim
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    di, n, cw = mamba_dims(cfg)
+    r = max(8, d // 16)  # dt low-rank
+    ks = jax.random.split(key, 8)
+    return {
+        "w_in": _dense_init(ks[0], d, (d, 2 * di), dtype),
+        "conv_w": _dense_init(ks[1], cw, (cw, di), dtype),
+        "dt_lo": _dense_init(ks[2], di, (di, r), dtype),
+        "dt_hi": _dense_init(ks[3], r, (r, di), dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "w_B": _dense_init(ks[4], di, (di, n), dtype),
+        "w_C": _dense_init(ks[5], di, (di, n), dtype),
+        "A_log": jnp.log(
+            jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))
+        ),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": _dense_init(ks[6], di, (di, d), dtype),
+    }
+
+
+def _causal_dw_conv(
+    x: jnp.ndarray, w: jnp.ndarray, conv_state: jnp.ndarray | None
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv over time. x: [B, S, di], w: [cw, di]."""
+    cw = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # [B, S+cw-1, di]
+    out = sum(
+        xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(cw)
+    )
+    return out, xp[:, -(cw - 1):, :]
+
+
+def apply_mamba(
+    p: Params,
+    x: jnp.ndarray,                         # [B, S, d]
+    cfg: ModelConfig,
+    state: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
+    """Returns (y, (conv_state [B,cw-1,di], ssm_state [B,di,n] f32))."""
+    B, S, d = x.shape
+    di, n, cw = mamba_dims(cfg)
+    conv_state = state[0] if state is not None else None
+    h0 = (
+        state[1] if state is not None else jnp.zeros((B, di, n), jnp.float32)
+    )
+
+    xz = x @ p["w_in"]
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1, new_conv = _causal_dw_conv(x1, p["conv_w"], conv_state)
+    x1 = jax.nn.silu(x1)
+
+    dt = jax.nn.softplus(
+        (x1 @ p["dt_lo"] @ p["dt_hi"]).astype(jnp.float32) + p["dt_bias"]
+    )                                                  # [B, S, di]
+    Bm = (x1 @ p["w_B"]).astype(jnp.float32)           # [B, S, n]
+    Cm = (x1 @ p["w_C"]).astype(jnp.float32)           # [B, S, n]
+    A = -jnp.exp(p["A_log"])                           # [di, n]
+    xf = x1.astype(jnp.float32)
+
+    def step(h, inputs):
+        dt_t, b_t, c_t, x_t = inputs
+        da = jnp.exp(dt_t[..., None] * A[None])        # [B, di, n]
+        h = h * da + dt_t[..., None] * b_t[:, None, :] * x_t[..., None]
+        y_t = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y_t
+
+    seq = (
+        dt.transpose(1, 0, 2), Bm.transpose(1, 0, 2),
+        Cm.transpose(1, 0, 2), xf.transpose(1, 0, 2),
+    )
+    h_final, ys = jax.lax.scan(step, h0, seq)
+    y = ys.transpose(1, 0, 2) + p["D"][None, None, :] * xf
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["w_out"], (new_conv, h_final)

@@ -1,0 +1,1 @@
+"""Analytical performance models for PIM GEMV (paper §VI-A3)."""

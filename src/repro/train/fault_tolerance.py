@@ -1,0 +1,106 @@
+"""Fault-tolerance utilities for the train loop.
+
+* ``StragglerMonitor`` — EWMA step-time tracker that flags outlier steps
+  (on a real pod the flagged host would be cordoned / the step re-issued;
+  here the policy hook is injectable and unit-tested).
+* ``FaultInjector`` — deterministic failure source for tests.
+* ``run_with_recovery`` — the restart policy: on step failure, restore the
+  latest checkpoint and replay (data pipeline is step-addressed, so replay
+  is exact); gives up after ``max_restarts``.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+
+class StragglerMonitor:
+    """Flags steps slower than ``threshold`` x the EWMA of recent steps."""
+
+    def __init__(self, alpha: float = 0.1, threshold: float = 2.0,
+                 warmup: int = 5):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup = warmup
+        self.ewma: float | None = None
+        self.n = 0
+        self.flagged: list[tuple[int, float, float]] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.n += 1
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        is_straggler = (
+            self.n > self.warmup and dt > self.threshold * self.ewma
+        )
+        if is_straggler:
+            self.flagged.append((step, dt, self.ewma))
+        else:
+            # stragglers don't poison the baseline
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_straggler
+
+
+class FaultInjector:
+    """Raises at the specified steps exactly once each (preemption model)."""
+
+    def __init__(self, fail_at: set[int] | None = None):
+        self.fail_at = set(fail_at or ())
+        self.fired: set[int] = set()
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected fault at step {step}")
+
+
+@dataclass
+class RecoveryStats:
+    restarts: int = 0
+    restored_steps: list[int] = field(default_factory=list)
+    straggler_steps: list[int] = field(default_factory=list)
+
+
+def run_with_recovery(
+    *,
+    n_steps: int,
+    do_step: Callable[[int], dict],
+    save: Callable[[int], None],
+    restore: Callable[[], int],
+    ckpt_every: int,
+    max_restarts: int = 3,
+    monitor: StragglerMonitor | None = None,
+    on_metrics: Callable[[int, dict], None] | None = None,
+) -> RecoveryStats:
+    """Drive steps [resume..n_steps) with checkpoint/restart semantics.
+
+    ``do_step(step)`` advances model+data by one step and returns metrics;
+    ``save(step)`` checkpoints AFTER step; ``restore()`` reloads the latest
+    checkpoint and returns the step to resume from.
+    """
+    stats = RecoveryStats()
+    monitor = monitor or StragglerMonitor()
+    step = restore()
+    while step < n_steps:
+        try:
+            t0 = time.perf_counter()
+            metrics = do_step(step)
+            dt = time.perf_counter() - t0
+            if monitor.record(step, dt):
+                stats.straggler_steps.append(step)
+            if on_metrics:
+                on_metrics(step, metrics)
+            step += 1
+            if step % ckpt_every == 0 or step == n_steps:
+                save(step)
+        except Exception:
+            stats.restarts += 1
+            if stats.restarts > max_restarts:
+                raise
+            step = restore()
+            stats.restored_steps.append(step)
+    return stats

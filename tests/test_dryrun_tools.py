@@ -1,0 +1,122 @@
+"""Unit tests for the dry-run tooling: HLO collective parser, shape specs,
+applicability rules, and (slow) one real compile cell in a subprocess."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.launch.shapes import SHAPES, applicable, input_specs
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def parse(hlo):
+    # the dryrun module sets XLA_FLAGS at import (harmless post-jax-init in
+    # this process, but keep the env clean for later subprocess tests)
+    before = os.environ.get("XLA_FLAGS")
+    try:
+        import repro.launch.dryrun as dr
+
+        return dr.parse_collective_bytes(hlo)
+    finally:
+        if before is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = before
+
+
+def test_collective_parser_counts_shapes():
+    hlo = """
+  %ag = bf16[16,4096,128]{2,1,0} all-gather(%x), dimensions={2}
+  %ar = f32[256,512]{1,0} all-reduce(%y), to_apply=%add
+  %t = (f32[128]{0}, f32[128]{0}) all-to-all(%a, %b)
+  %cp = u8[1024]{0} collective-permute(%z)
+  %rs = f32[64,32]{1,0} reduce-scatter(%w), dimensions={0}
+  %not_a_coll = f32[9999]{0} add(%p, %q)
+"""
+    out = parse(hlo)
+    assert out["all-gather"] == 16 * 4096 * 128 * 2
+    assert out["all-reduce"] == 256 * 512 * 4
+    assert out["all-to-all"] == 2 * 128 * 4
+    assert out["collective-permute"] == 1024
+    assert out["reduce-scatter"] == 64 * 32 * 4
+    assert sum(out.values()) > 0 and "add" not in out
+
+
+def test_applicability_rules():
+    # pure full-attention archs skip long_500k
+    for name in ("minitron-8b", "olmo-1b", "whisper-small",
+                 "deepseek-moe-16b", "grok-1-314b", "llama-3.2-vision-11b"):
+        ok, why = applicable(ARCHS[name], SHAPES["long_500k"])
+        assert not ok and "full-attention" in why
+    # sub-quadratic archs run it
+    for name in ("gemma3-1b", "gemma3-27b", "rwkv6-3b", "hymba-1.5b"):
+        ok, _ = applicable(ARCHS[name], SHAPES["long_500k"])
+        assert ok
+    # every arch runs everything else
+    for name in ARCHS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert applicable(ARCHS[name], SHAPES[s])[0]
+
+
+def test_input_specs_no_allocation():
+    for name in ("gemma3-1b", "whisper-small", "llama-3.2-vision-11b",
+                 "rwkv6-3b", "hymba-1.5b"):
+        cfg = ARCHS[name]
+        for sname, shape in SHAPES.items():
+            if not applicable(cfg, shape)[0]:
+                continue
+            specs = input_specs(cfg, shape)
+            for leaf in jax.tree.leaves(specs):
+                assert isinstance(leaf, jax.ShapeDtypeStruct), leaf
+            if shape.kind == "train":
+                assert specs["tokens"].shape == (
+                    shape.global_batch, shape.seq_len
+                )
+            else:
+                assert "cache" in specs
+                if shape.kind == "decode":
+                    assert specs["tokens"].shape == (shape.global_batch, 1)
+    # modality stubs present
+    assert "frames" in input_specs(ARCHS["whisper-small"],
+                                   SHAPES["train_4k"])
+    assert "vision" in input_specs(ARCHS["llama-3.2-vision-11b"],
+                                   SHAPES["train_4k"])
+
+
+def test_cache_specs_match_init_cache_shapes():
+    from repro.models import lm
+
+    cfg = ARCHS["hymba-1.5b"].reduced()
+    specs = jax.eval_shape(lambda: lm.init_cache(cfg, 4, 64))
+    real = lm.init_cache(cfg, 4, 64)
+    for s, r in zip(jax.tree.leaves(specs), jax.tree.leaves(real)):
+        assert s.shape == r.shape and s.dtype == r.dtype
+
+
+@pytest.mark.slow
+def test_one_dryrun_cell_compiles_multipod():
+    """Smallest arch x decode on the REAL 2x16x16 multi-pod mesh, in a
+    subprocess (the only place 512 fake devices are allowed)."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "olmo-1b", "--shape", "decode_32k", "--mesh", "multi",
+         "--no-roofline"],
+        capture_output=True, text=True, timeout=900,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        cwd=REPO,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    art = os.path.join(REPO, "artifacts", "dryrun",
+                       "olmo-1b__decode_32k__multi.json")
+    with open(art) as f:
+        rec = json.load(f)
+    assert rec["status"] == "ok"
+    assert rec["n_chips"] == 512
+    assert rec["mesh_shape"] == {"pod": 2, "data": 16, "model": 16}

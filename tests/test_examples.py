@@ -1,0 +1,43 @@
+"""The runnable examples are part of the public API surface — run them."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+
+
+def run(args, timeout=600):
+    out = subprocess.run(
+        [sys.executable] + args, capture_output=True, text=True,
+        timeout=timeout, env=ENV, cwd=REPO,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout
+
+
+def test_quickstart():
+    out = run(["examples/quickstart.py"])
+    assert "roofline 7.07x" in out
+    assert "pallas-vs-oracle max err" in out
+
+
+def test_placement_explorer():
+    out = run(["examples/placement_explorer.py", "--M", "3072", "--K", "768"])
+    assert "PIMnast-opt" in out and "split-K degree" in out
+
+
+@pytest.mark.slow
+def test_train_e2e_tiny():
+    out = run(["examples/train_e2e.py", "--tiny", "--steps", "15"])
+    assert "final loss" in out
+
+
+@pytest.mark.slow
+def test_serve_decode():
+    out = run(["examples/serve_decode.py", "--requests", "3",
+               "--slots", "2", "--new-tokens", "4"])
+    assert "3 requests" in out

@@ -1,0 +1,181 @@
+"""Per-kernel allclose vs the pure-jnp oracles: shape/dtype sweeps in
+interpret mode (kernel body executed with jnp on CPU; TPU is the target)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.pim_gemv import pim_gemv
+from repro.kernels.quant_gemv import quant4_gemv, quant_gemv
+from repro.kernels.splitk_gemv import splitk_gemv
+from repro.kernels.tpu_plan import (
+    LANES,
+    plan_splitk,
+    plan_tpu_gemv,
+)
+
+RNG = np.random.default_rng(42)
+
+
+def _mk(M, K, B, dtype=np.float32):
+    w = RNG.standard_normal((M, K)).astype(dtype)
+    x = RNG.standard_normal((B, K)).astype(dtype)
+    return w, x
+
+
+# --------------------------------------------------------------------------
+# Planner
+# --------------------------------------------------------------------------
+
+
+@given(
+    M=st.sampled_from([128, 256, 384, 512, 1024, 2048, 4096]),
+    K=st.sampled_from([8, 64, 256, 512, 1024, 4096]),
+    B=st.sampled_from([1, 2, 8]),
+)
+@settings(max_examples=60, deadline=None)
+def test_plan_divides_and_fits(M, K, B):
+    p = plan_tpu_gemv(M, K, B)
+    assert M % p.m_blk == 0 and K % p.k_blk == 0
+    assert p.n_m * p.m_blk == M and p.n_k * p.k_blk == K
+    assert p.vmem_bytes <= 96 * 1024 * 1024
+
+
+def test_plan_prefers_lane_aligned_tall_blocks():
+    p = plan_tpu_gemv(4096, 4096, 1)
+    assert p.m_blk % LANES == 0
+    assert p.m_blk >= 1024  # tall-first sweep (Algorithm-1 analogue)
+
+
+def test_splitk_plan():
+    p = plan_splitk(256, 4096, 1, degree=4)
+    assert p.split_k == 4
+
+
+# --------------------------------------------------------------------------
+# pim_gemv (bf16/f32 path)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("M,K,B", [
+    (256, 256, 1), (512, 1024, 2), (1024, 512, 4), (384, 768, 1),
+    (2048, 2048, 1),
+])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_pim_gemv_matches_ref(M, K, B, dtype):
+    w, x = _mk(M, K, B)
+    w_t = jnp.asarray(w.T).astype(dtype)
+    xj = jnp.asarray(x).astype(dtype)
+    plan = plan_tpu_gemv(M, K, B, max_m_blk=256, max_k_blk=256)
+    out = pim_gemv(xj, w_t, plan=plan, interpret=True)
+    expect = ref.gemv_ref(w_t, xj)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+        atol=1e-2 if dtype == jnp.bfloat16 else 1e-4,
+    )
+
+
+def test_pim_gemv_multiblock_grid():
+    M, K, B = 1024, 2048, 2
+    w, x = _mk(M, K, B)
+    plan = plan_tpu_gemv(M, K, B, max_m_blk=128, max_k_blk=256)
+    assert plan.n_m == 8 and plan.n_k == 8
+    out = pim_gemv(jnp.asarray(x), jnp.asarray(w.T), plan=plan,
+                   interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), x @ w.T, rtol=1e-4, atol=1e-3
+    )
+
+
+# --------------------------------------------------------------------------
+# quantized kernels
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("M,K,B,block", [
+    (256, 256, 1, 32), (512, 512, 2, 64), (384, 1024, 1, 32),
+])
+def test_quant8_matches_ref(M, K, B, block):
+    w, x = _mk(M, K, B)
+    pw = ops.quantize_weight(w, bits=8, block=block)
+    plan = ops._align_plan_to_block(
+        plan_tpu_gemv(M, K, B, w_bytes=1, max_m_blk=128, max_k_blk=256),
+        M, K, B, pw,
+    )
+    out = quant_gemv(jnp.asarray(x), pw.w_t, pw.scales, plan=plan,
+                     block=block, interpret=True)
+    expect = ref.quant_gemv_ref(pw.w_t, pw.scales, jnp.asarray(x), block)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-4)
+    # and the dequantized result approximates the float GEMV
+    rel = np.abs(np.asarray(expect) - x @ w.T).max() / np.abs(x @ w.T).max()
+    assert rel < 0.05
+
+
+@pytest.mark.parametrize("M,K,B,block", [(256, 256, 1, 32), (512, 512, 2, 64)])
+def test_quant4_matches_ref(M, K, B, block):
+    w, x = _mk(M, K, B)
+    pw = ops.quantize_weight(w, bits=4, block=block)
+    plan = ops._align_plan_to_block(
+        plan_tpu_gemv(M, K, B, w_bytes=1, max_m_blk=128, max_k_blk=256),
+        M, K, B, pw,
+    )
+    out = quant4_gemv(jnp.asarray(x), pw.w_t, pw.scales, plan=plan,
+                      block=block, interpret=True)
+    expect = ref.quant4_gemv_ref(pw.w_t, pw.scales, jnp.asarray(x), block)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_int4_pack_roundtrip():
+    q = RNG.integers(-8, 8, size=(64, 32)).astype(np.int8)
+    lo = q[0::2] & 0xF
+    hi = (q[1::2] & 0xF) << 4
+    packed = (lo | hi).astype(np.int8)
+    unpacked = ref.unpack_int4(jnp.asarray(packed))
+    np.testing.assert_array_equal(np.asarray(unpacked), q)
+
+
+# --------------------------------------------------------------------------
+# split-K kernel
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("deg", [2, 4, 8])
+def test_splitk_matches_ref(deg):
+    M, K, B = 256, 2048, 2
+    w, x = _mk(M, K, B)
+    plan = plan_splitk(M, K, B, degree=deg, max_m_blk=128, max_k_blk=128)
+    out = splitk_gemv(jnp.asarray(x), jnp.asarray(w.T), plan=plan,
+                      interpret=True)
+    expect = ref.splitk_gemv_ref(jnp.asarray(w.T), jnp.asarray(x), deg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# placed_gemv dispatch layer
+# --------------------------------------------------------------------------
+
+
+def test_placed_gemv_auto_plan_and_fallback():
+    # pallas-applicable shape
+    w, x = _mk(512, 256, 1)
+    out = ops.placed_gemv(jnp.asarray(x), ops.pack_weight(jnp.asarray(w)),
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(out), x @ w.T, rtol=1e-4,
+                               atol=1e-3)
+    # ragged M -> XLA fallback still correct
+    w, x = _mk(300, 256, 1)
+    out = ops.placed_gemv(jnp.asarray(x), ops.pack_weight(jnp.asarray(w)))
+    np.testing.assert_allclose(np.asarray(out), x @ w.T, rtol=1e-4,
+                               atol=1e-3)
+
+
+def test_placed_gemv_small_m_uses_splitk():
+    plan = ops.choose_plan(256, 8192, 1)
+    assert plan.split_k > 1  # paper §VI-F rule lifted to the kernel planner

@@ -1,0 +1,163 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one forward +
+one train step on CPU, asserting output shapes and finiteness; decode path
+consistency against the full forward (deliverable f)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.models import lm
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import TrainConfig, build_train_step
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _extra(cfg, batch=B):
+    extra = {}
+    if cfg.encoder is not None:
+        extra["frames"] = jax.random.normal(
+            KEY, (batch, cfg.encoder.n_frames, cfg.encoder.d_model)
+        )
+    if cfg.cross_attn_every > 0:
+        extra["vision"] = jax.random.normal(
+            KEY, (batch, cfg.vision_tokens, cfg.d_model)
+        )
+    return extra
+
+
+@pytest.fixture(scope="module", params=sorted(ARCHS))
+def arch(request):
+    return request.param
+
+
+def test_forward_shapes_and_finite(arch):
+    cfg = ARCHS[arch].reduced()
+    params = lm.init_lm(KEY, cfg)
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    logits, _, aux = lm.forward(params, cfg, tokens, **_extra(cfg))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+def test_one_train_step_no_nans(arch):
+    cfg = ARCHS[arch].reduced()
+    tcfg = TrainConfig(opt=OptConfig(name=cfg.optimizer, lr=1e-3,
+                                     warmup_steps=1, total_steps=10))
+    step, opt_init = build_train_step(cfg, tcfg)
+    params = lm.init_lm(KEY, cfg)
+    opt_state = opt_init(params)
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab)}
+    batch.update(_extra(cfg))
+    params2, opt_state2, metrics = jax.jit(step)(params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert metrics["loss"] > 0
+    # params actually changed
+    d = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, params2,
+    )
+    assert max(jax.tree.leaves(d)) > 0
+
+
+def test_decode_matches_full_forward(arch):
+    """Prefill+decode with the KV/state cache reproduces teacher-forced
+    logits from the full forward (the serving-correctness invariant)."""
+    cfg = ARCHS[arch].reduced()
+    params = lm.init_lm(KEY, cfg)
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    extra = _extra(cfg)
+    full_logits, _, _ = lm.forward(params, cfg, tokens, **extra)
+
+    cache = lm.init_cache(cfg, B, S + 8)
+    pre_logits, cache, _ = lm.forward(
+        params, cfg, tokens[:, :-1], cache=cache, **extra
+    )
+    step_logits, cache, _ = lm.forward(
+        params, cfg, tokens[:, -1:], cache=cache, **extra
+    )
+    a = np.asarray(full_logits[:, -1], np.float32)
+    b = np.asarray(step_logits[:, 0], np.float32)
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+
+
+def test_two_decode_steps_advance_pos(arch):
+    cfg = ARCHS[arch].reduced()
+    params = lm.init_lm(KEY, cfg)
+    tokens = jax.random.randint(KEY, (B, 4), 0, cfg.vocab)
+    cache = lm.init_cache(cfg, B, 16)
+    _, cache, _ = lm.forward(params, cfg, tokens, cache=cache, **_extra(cfg))
+    assert int(cache["pos"]) == 4
+    _, cache, _ = lm.forward(params, cfg, tokens[:, :1], cache=cache,
+                             **_extra(cfg))
+    assert int(cache["pos"]) == 5
+
+
+def test_unroll_layers_equals_scan(arch):
+    """The dry-run's unrolled mode is numerically identical to the scan."""
+    cfg = ARCHS[arch].reduced()
+    params = lm.init_lm(KEY, cfg)
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    extra = _extra(cfg)
+    a, _, _ = lm.forward(params, cfg, tokens, **extra)
+    cfg_u = dataclasses.replace(cfg, unroll_layers=True)
+    b, _, _ = lm.forward(params, cfg_u, tokens, **extra)
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_local_global_masking_differs():
+    """Sliding-window layers must actually mask: with a window of 8, token
+    31 must not attend to token 0 in a local layer."""
+    cfg = ARCHS["gemma3-1b"].reduced()
+    assert cfg.attn_pattern == "local_global"
+    params = lm.init_lm(KEY, cfg)
+    t1 = jax.random.randint(KEY, (1, S), 0, cfg.vocab)
+    # perturb an early token; with only local layers (window 8) the final
+    # position (t=31) must see NO difference through 2 layers of window-8
+    # attention when the change is > 2*window away
+    cfg_local_only = dataclasses.replace(cfg, global_every=10**6,
+                                         n_layers=2)
+    p2 = lm.init_lm(KEY, cfg_local_only)
+    t2 = t1.at[0, 0].set((int(t1[0, 0]) + 1) % cfg.vocab)
+    l1, _, _ = lm.forward(p2, cfg_local_only, t1)
+    l2, _, _ = lm.forward(p2, cfg_local_only, t2)
+    np.testing.assert_allclose(
+        np.asarray(l1[0, -1]), np.asarray(l2[0, -1]), rtol=1e-5, atol=1e-5
+    )
+    # ...but a genuinely global config does propagate the change
+    cfg_glob = dataclasses.replace(cfg, attn_pattern="full", n_layers=2)
+    p3 = lm.init_lm(KEY, cfg_glob)
+    g1, _, _ = lm.forward(p3, cfg_glob, t1)
+    g2, _, _ = lm.forward(p3, cfg_glob, t2)
+    assert float(np.abs(np.asarray(g1[0, -1]) - np.asarray(g2[0, -1])).max()) > 0
+
+
+def test_moe_routes_to_multiple_experts():
+    cfg = ARCHS["deepseek-moe-16b"].reduced()
+    from repro.models import layers as L
+
+    p = L.init_moe(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model))
+    y, aux = L.apply_moe(p, x, cfg)
+    assert y.shape == x.shape
+    assert float(aux) > 0  # load-balance loss active
+
+
+def test_rwkv_state_decode_is_o1_memory():
+    cfg = ARCHS["rwkv6-3b"].reduced()
+    c = lm.init_cache(cfg, 1, 10_000)
+    # no KV cache: state size independent of context length
+    assert "k" not in c
+    total = sum(np.prod(v.shape) for v in jax.tree.leaves(c))
+    assert total < 1e6

@@ -1,0 +1,242 @@
+"""Unit + property tests for the PIMnast core algorithms (paper §IV)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pim_arch import BF16, INT4, INT8, PIMConfig, RYZEN_LPDDR5X
+from repro.core.placement import (
+    GEMV,
+    Placement,
+    SplitK,
+    TileOrder,
+    baseline_colmajor_placement,
+    baseline_rowmajor_placement,
+    cr_order,
+    cr_order_with_degree,
+    get_param,
+    get_tile_shape,
+    materialize,
+    max_cr_degree,
+    plan_placement,
+    tile_matrix_roworder,
+    untile_matrix_roworder,
+)
+
+CFG = RYZEN_LPDDR5X
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1 — tile shape
+# --------------------------------------------------------------------------
+
+
+def test_tile_bytes_equal_interleave_gran():
+    """Paper §IV-B: tile size always equals the interleaving granularity."""
+    for M, K in [(4096, 4096), (3072, 768), (768, 3072), (12288, 4096)]:
+        for df in (INT4, INT8, BF16):
+            t = get_tile_shape(GEMV(M, K, df, BF16), CFG)
+            assert t.m_tile * t.k_tile * df.bits == \
+                CFG.interleave_gran_bytes * 8
+
+
+def test_tile_shape_prefers_tall():
+    """Sweep starts column-vector: large aligned M gets the tallest passing
+    shape under register constraints."""
+    t = get_tile_shape(GEMV(16384, 4096, INT8, BF16), CFG)
+    assert (t.m_tile, t.k_tile) == (128, 2)
+    # 128 tall needs 8 out regs + 1 in reg <= 16; 256 tall would need 16+1.
+    assert t.in_reg + t.out_reg <= CFG.tot_reg
+
+
+def test_tile_shape_even_distribution():
+    t = get_tile_shape(GEMV(4096, 4096, INT8, BF16), CFG)
+    assert t.even and 4096 % (CFG.tot_bank * t.m_tile) == 0
+    assert (t.m_tile, t.k_tile) == (32, 8)
+
+
+def test_tile_shape_small_m_goes_wide():
+    """125M-style GEMVs (paper §VI-B): small M forces short-wide tiles."""
+    t = get_tile_shape(GEMV(768, 768, INT8, BF16), CFG)
+    assert t.m_tile == 2 and t.k_tile == 128
+
+
+def test_paper_register_formulas():
+    in_reg, out_reg = get_param(GEMV(4096, 4096, INT8, BF16), CFG, 32, 8)
+    assert in_reg == 1          # ceil(8*8b / 2048b)
+    assert out_reg == 2         # ceil(32*16b / 256b)
+
+
+@given(
+    M=st.integers(1, 1 << 16),
+    K=st.integers(1, 1 << 14),
+    df=st.sampled_from([INT4, INT8, BF16]),
+)
+@settings(max_examples=200, deadline=None)
+def test_tile_shape_invariants(M, K, df):
+    g = GEMV(M, K, df, BF16)
+    t = get_tile_shape(g, CFG)
+    elem_per_tile = CFG.interleave_gran_bytes * 8 // df.bits
+    assert 1 <= t.m_tile <= elem_per_tile
+    assert t.m_tile * t.k_tile == elem_per_tile
+    # power-of-two sweep
+    assert t.m_tile & (t.m_tile - 1) == 0
+    # register budget honored whenever a non-degenerate shape was chosen
+    if t.m_tile > 1:
+        assert t.in_reg + t.out_reg <= CFG.tot_reg
+        assert M % (CFG.tot_bank * t.m_tile) == 0
+
+
+# --------------------------------------------------------------------------
+# Algorithm 2 — CR order
+# --------------------------------------------------------------------------
+
+
+@given(
+    m_spread=st.integers(1, 4),
+    k_TM=st.integers(1, 32),
+    banks=st.sampled_from([8, 16, 64, 128]),
+)
+@settings(max_examples=100, deadline=None)
+def test_cr_order_is_permutation(m_spread, k_TM, banks):
+    m_TM = m_spread * banks
+    order = cr_order(m_TM, k_TM, banks)
+    assert sorted(order.tolist()) == list(range(m_TM * k_TM))
+
+
+def test_cr_order_row_stays_in_one_bank():
+    """Paper §IV-A1 factor 3: a matrix row maps to a single bank entirely."""
+    banks, m_TM, k_TM = 16, 32, 8
+    order = cr_order(m_TM, k_TM, banks)
+    bank_of_tile = {}
+    for pos, tile in enumerate(order.tolist()):
+        bank_of_tile[tile] = pos % banks
+    for rb in range(m_TM):
+        banks_of_row = {bank_of_tile[rb * k_TM + c] for c in range(k_TM)}
+        assert len(banks_of_row) == 1
+
+
+def test_cr_order_balances_banks():
+    banks, m_TM, k_TM = 16, 64, 4
+    order = cr_order(m_TM, k_TM, banks)
+    counts = np.zeros(banks, int)
+    for pos in range(len(order)):
+        counts[pos % banks] += 1
+    assert counts.min() == counts.max()
+
+
+@given(
+    deg=st.sampled_from([1, 2, 4]),
+    spread=st.integers(1, 3),
+    k_TM=st.integers(1, 8),
+)
+@settings(max_examples=50, deadline=None)
+def test_cr_degree_order_permutation_and_locality(deg, spread, k_TM):
+    banks = 16
+    m_TM = banks * deg * spread
+    order = cr_order_with_degree(m_TM, k_TM, banks, deg)
+    assert sorted(order.tolist()) == list(range(m_TM * k_TM))
+    # row-block -> bank consistency
+    bank_of_tile = {t: p % banks for p, t in enumerate(order.tolist())}
+    for rb in range(m_TM):
+        assert len({bank_of_tile[rb * k_TM + c] for c in range(k_TM)}) == 1
+    # IV reuse: within one bank, the deg row-blocks' tiles for column c are
+    # CONSECUTIVE in that bank's local stream
+    local = {b: [] for b in range(banks)}
+    for pos, tile in enumerate(order.tolist()):
+        local[pos % banks].append(tile)
+    for b, tiles in local.items():
+        cols = [t % k_TM for t in tiles]
+        # per group of deg entries, same column index
+        for i in range(0, min(len(cols), deg * k_TM), deg):
+            assert len(set(cols[i:i + deg])) == 1
+
+
+# --------------------------------------------------------------------------
+# Algorithm 3 — CR degree
+# --------------------------------------------------------------------------
+
+
+def test_max_cr_degree_register_bound():
+    # out_reg=2 per row-block, in_reg=8, tot=16 -> deg <= 4
+    assert max_cr_degree(32 * 128 * 8, 32, 128, 8, 2, 16) == 4
+    # bounded by row-blocks per bank
+    assert max_cr_degree(32 * 128 * 3, 32, 128, 8, 2, 16) == 3
+    assert max_cr_degree(32 * 128, 32, 128, 8, 2, 16) == 1
+
+
+@given(
+    rb_pb=st.integers(1, 16),
+    in_reg=st.integers(1, 14),
+    out_reg=st.integers(1, 8),
+)
+@settings(max_examples=100, deadline=None)
+def test_max_cr_degree_invariants(rb_pb, in_reg, out_reg):
+    deg = max_cr_degree(32 * 128 * rb_pb, 32, 128, in_reg, out_reg, 16)
+    assert 1 <= deg <= rb_pb
+    if deg > 1:
+        assert deg * out_reg + in_reg <= 16
+
+
+# --------------------------------------------------------------------------
+# Materialization round-trip
+# --------------------------------------------------------------------------
+
+
+@given(
+    m_TM=st.integers(1, 8),
+    k_TM=st.integers(1, 8),
+    m_tile=st.sampled_from([2, 8, 32]),
+    k_tile=st.sampled_from([2, 8, 32]),
+)
+@settings(max_examples=50, deadline=None)
+def test_tile_roundtrip(m_TM, k_TM, m_tile, k_tile):
+    M, K = m_TM * m_tile, k_TM * k_tile
+    W = np.arange(M * K, dtype=np.int64).reshape(M, K)
+    tiles = tile_matrix_roworder(W, m_tile, k_tile)
+    back = untile_matrix_roworder(tiles, M, K, m_tile, k_tile)
+    np.testing.assert_array_equal(W, back)
+
+
+def test_materialize_stream_covers_matrix():
+    g = GEMV(4096, 4096, INT8, BF16)
+    p = plan_placement(g, CFG)
+    W = np.random.default_rng(0).integers(-128, 127, size=(g.M, g.K))
+    stream = materialize(W, p)
+    assert stream.shape[0] == p.m_TM * p.k_TM
+    assert np.sort(stream.reshape(-1)).sum() == np.sort(W.reshape(-1)).sum()
+
+
+# --------------------------------------------------------------------------
+# Planner end-to-end
+# --------------------------------------------------------------------------
+
+
+def test_plan_placement_defaults():
+    p = plan_placement(GEMV(12288, 4096, INT8, BF16), CFG)
+    assert p.order is TileOrder.COLUMN_ROW
+    assert p.cr_degree == 3           # 3 row-blocks/bank, regs allow 4
+    assert p.in_reg_alloc == 8
+
+
+def test_split_k_uses_channel_subsets():
+    p = plan_placement(GEMV(768, 3072, INT8, BF16), CFG, split_k=4)
+    assert p.channels_used == 2 and p.banks_used == 32
+    assert p.split_k.degree == 4
+
+
+def test_split_k_enables_taller_tiles():
+    """Paper §VI-F: split-K avails more row-blocks -> taller tile shapes."""
+    base = plan_placement(GEMV(768, 3072, INT8, BF16), CFG)
+    sk = plan_placement(GEMV(768, 3072, INT8, BF16), CFG, split_k=4)
+    assert sk.tile.m_tile > base.tile.m_tile
+
+
+def test_baselines():
+    g = GEMV(4096, 4096, INT8, BF16)
+    cm = baseline_colmajor_placement(g, CFG)
+    rm = baseline_rowmajor_placement(g, CFG)
+    assert cm.tile.m_tile == 256 and cm.tile.k_tile == 1
+    assert rm.tile.m_tile == 1 and rm.tile.k_tile == 256

@@ -1,0 +1,213 @@
+"""Tests for the DRAM-timing model — including validation against the
+paper's own evaluation claims (§VI)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.opt_models import OPT_SUITE, lm_head_gemv, token_gemvs
+from repro.core.pim_arch import (
+    BF16, INT4, INT8, RYZEN_LPDDR5X, ScaleFactorConfig,
+)
+from repro.core.placement import (
+    GEMV,
+    baseline_colmajor_placement,
+    plan_placement,
+)
+from repro.pim.e2e import e2e_latency
+from repro.pim.timing import (
+    best_split_k,
+    pim_gemv_time,
+    pim_speedup,
+    soc_gemv_time_ns,
+)
+
+CFG = RYZEN_LPDDR5X
+
+
+def model_avg(cfg=CFG, dform=INT8, **kw):
+    out = {}
+    for name, m in OPT_SUITE.items():
+        ss = [pim_speedup(g, cfg, **kw)[0] for g in token_gemvs(m, dform)]
+        out[name] = sum(ss) / len(ss)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Roofline invariants
+# --------------------------------------------------------------------------
+
+
+def test_roofline_near_7x():
+    """Paper §VI-A1: 8x peak, ~7x after row-open overheads."""
+    assert CFG.peak_pim_boost == pytest.approx(8.0)
+    assert 6.8 <= CFG.roofline_pim_boost <= 7.3
+
+
+@given(
+    M=st.sampled_from([2048, 4096, 8192, 16384]),
+    K=st.sampled_from([2048, 4096, 8192]),
+    df=st.sampled_from([INT4, INT8, BF16]),
+)
+@settings(max_examples=60, deadline=None)
+def test_speedup_below_roofline(M, K, df):
+    s, _, _ = pim_speedup(GEMV(M, K, df, BF16), CFG)
+    assert 0 < s <= CFG.roofline_pim_boost * 1.001
+
+
+def test_large_gemv_close_to_roofline():
+    """Big aligned GEMVs approach the roofline (paper: 6.86 of 7)."""
+    s, _, _ = pim_speedup(GEMV(16384, 4096, INT8, BF16), CFG)
+    assert s > 0.9 * CFG.roofline_pim_boost
+
+
+@given(deg=st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=20, deadline=None)
+def test_breakdown_total_is_sum(deg):
+    p = plan_placement(GEMV(3072, 768, INT8, BF16), CFG, split_k=deg)
+    bd = pim_gemv_time(p, CFG)
+    assert bd.total == pytest.approx(
+        bd.t_mac + bd.t_shift + bd.t_iv + bd.t_turn + bd.t_row
+        + bd.t_spill + bd.t_sf + bd.t_soc_reduce
+    )
+
+
+# --------------------------------------------------------------------------
+# Paper-claim validation (anchors from §VI; tolerant bands)
+# --------------------------------------------------------------------------
+
+
+def test_pimnast_opt_matches_paper_band():
+    """Paper Fig 9a: PIMnast-opt up to 6.86x, 5.8x average."""
+    avgs = model_avg(opt_cr_degree=True)
+    assert max(avgs.values()) > 6.3
+    mean = sum(avgs.values()) / len(avgs)
+    assert 5.0 <= mean <= 6.5
+
+
+def test_125m_weakest_and_cr_degree_helps():
+    """Paper §VI-B/C2: 125M lowest; CR-degree helps it most (3.07->3.88)."""
+    base = model_avg(opt_cr_degree=False)
+    opt = model_avg(opt_cr_degree=True)
+    assert min(base, key=base.get) == "opt-125m"
+    gain = opt["opt-125m"] / base["opt-125m"]
+    assert 1.15 <= gain <= 1.45   # paper: up to 35%
+
+
+def test_colmajor_slowdowns():
+    """Paper Fig 8: col-major can even lead to slowdowns (<1x)."""
+    slow = 0
+    for m in OPT_SUITE.values():
+        for g in token_gemvs(m):
+            t = pim_gemv_time(baseline_colmajor_placement(g, CFG), CFG)
+            if soc_gemv_time_ns(g, CFG) / t.total < 1.0:
+                slow += 1
+    assert slow >= len(OPT_SUITE)  # at least one GEMV per model on average
+
+
+def test_pimnast_beats_colmajor_everywhere():
+    for m in OPT_SUITE.values():
+        for g in token_gemvs(m):
+            s_p, _, _ = pim_speedup(g, CFG)
+            t_cm = pim_gemv_time(baseline_colmajor_placement(g, CFG), CFG)
+            s_cm = soc_gemv_time_ns(g, CFG) / t_cm.total
+            assert s_p > s_cm
+
+
+def test_bank_sweep_tracks_roofline():
+    """Paper Fig 10: 64 banks -> ~3.2/3.5 avg, 256 banks -> ~10/14 avg."""
+    lo = model_avg(CFG.with_(banks_per_channel=8))
+    hi = model_avg(CFG.with_(banks_per_channel=32))
+    assert 2.5 <= sum(lo.values()) / len(lo) <= 3.6
+    assert 8.0 <= sum(hi.values()) / len(hi) <= 14.2
+    assert max(hi.values()) <= CFG.with_(
+        banks_per_channel=32).roofline_pim_boost * 1.001
+
+
+def test_dataformat_sweep():
+    """Paper Fig 11: avg ~5.1x @4b and ~6.1x @16b."""
+    a4 = model_avg(dform=INT4)
+    a16 = model_avg(dform=BF16)
+    assert 4.3 <= sum(a4.values()) / len(a4) <= 5.9
+    assert 5.3 <= sum(a16.values()) / len(a16) <= 6.6
+
+
+def test_scale_factors_cost_and_blocksize_trend():
+    """Paper Fig 12 + §VI-D2: sf lowers speedup; bigger blocks cost less."""
+    nosf = model_avg()
+    for df in (INT8, INT4):
+        s32 = model_avg(dform=df, sf=ScaleFactorConfig(block_size=32))
+        s128 = model_avg(dform=df, sf=ScaleFactorConfig(block_size=128))
+        for name in OPT_SUITE:
+            assert s32[name] < nosf[name] * 1.001
+            assert s32[name] <= s128[name] * 1.001
+
+
+def test_register_alloc_trend():
+    """Paper §VI-C1: 2 regs < 8 regs; 14 vs 8 within a few percent."""
+    r2 = model_avg(in_reg_alloc=2, opt_cr_degree=False)
+    r8 = model_avg(in_reg_alloc=8, opt_cr_degree=False)
+    r14 = model_avg(in_reg_alloc=14, opt_cr_degree=False)
+    m2 = sum(r2.values()) / len(r2)
+    m8 = sum(r8.values()) / len(r8)
+    m14 = sum(r14.values()) / len(r14)
+    assert m2 < m8 <= m14
+    assert (m14 - m8) / m8 < 0.06
+
+
+def test_register_count_sweep():
+    """Paper Fig 13: half regs ~5.3 avg, double regs ~6.0 avg."""
+    half = model_avg(CFG.with_(tot_reg=8), in_reg_alloc=4)
+    dbl = model_avg(CFG.with_(tot_reg=32), in_reg_alloc=16)
+    assert sum(half.values()) / len(half) >= 4.6
+    assert sum(dbl.values()) / len(dbl) >= sum(half.values()) / len(half)
+
+
+def test_splitk_helps_125m():
+    """Paper Fig 15: split-K boosts 125M GEMVs (up to 85%, avg 47%)."""
+    m = OPT_SUITE["opt-125m"]
+    gains = []
+    for g in token_gemvs(m):
+        base, _, _ = pim_speedup(g, CFG)
+        _, best = best_split_k(g, CFG)
+        gains.append(best / base - 1)
+    assert max(gains) > 0.25
+    assert sum(gains) / len(gains) > 0.10
+
+
+def test_cross_simd_hw_helps_125m():
+    """Paper Fig 15: reduction-tree hw, upper bound ~41% (avg 25%) on 125M."""
+    m = OPT_SUITE["opt-125m"]
+    gains = []
+    for g in token_gemvs(m):
+        base, _, _ = pim_speedup(g, CFG)
+        hw, _, _ = pim_speedup(g, CFG, cross_simd_hw=True)
+        gains.append(hw / base - 1)
+    assert 0.1 <= sum(gains) / len(gains) <= 0.45
+
+
+def test_e2e_bands():
+    """Paper Fig 14: per-token up to 5x (avg 3.5), e2e up to 3.5 (avg 2.7),
+    >= 88% of baseline time in token generation."""
+    rs = [e2e_latency(m, CFG) for m in OPT_SUITE.values()]
+    tok = [r.token_speedup for r in rs]
+    e2e = [r.e2e_speedup for r in rs]
+    assert 4.2 <= max(tok) <= 5.5
+    assert 3.0 <= sum(tok) / len(tok) <= 4.2
+    assert 3.0 <= max(e2e) <= 4.0
+    assert all(r.tokengen_fraction_soc >= 0.88 for r in rs)
+
+
+def test_lm_head_split_k_recovers_odd_vocab():
+    """vocab=50272 is 2^5*1571: no tall tile divides over 128 banks, so the
+    head lands on wide tiles (~3.8x); split-K's channel subsets restore a
+    taller shape (paper §VI-F mechanism on a real GEMV)."""
+    g = lm_head_gemv(OPT_SUITE["opt-6.7b"])
+    s, p, _ = pim_speedup(g, CFG)
+    assert s > 3.0
+    deg, s_k = best_split_k(g, CFG)
+    assert s_k >= s
+    if deg > 1:
+        p_k = plan_placement(g, CFG, split_k=deg)
+        assert p_k.tile.m_tile >= p.tile.m_tile

@@ -1,24 +1,32 @@
-"""Kernel micro-bench: PIMnast-placed Pallas GEMV vs the jnp oracle.
+"""Kernel micro-bench: PIMnast-placed Pallas GEMV vs the jnp oracle, plus
+dispatcher-picked vs fixed-kernel latency across the config registry.
 
 On this CPU container the Pallas kernels execute in interpret mode, so
 wall-clock numbers characterize the HARNESS, not TPU performance — the
 ``derived`` column is therefore the max abs error vs the oracle (the
 correctness contract), and per-kernel modeled HBM-bound time on v5e
 (weight bytes / 819 GB/s) is reported as ``v5e_model_us``.
+
+The ``dispatch`` section is the paper's headline experiment in TPU form:
+for each model-config decode GEMV shape it reports the dispatcher's chosen
+kernel and its *modeled* v5e latency against every fixed kernel choice —
+the gap is the balancing win that a hard-coded kernel leaves on the table.
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py            # both parts
+    PYTHONPATH=src python benchmarks/kernel_bench.py --dispatch # just the
+                                                                # comparison
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops, ref
-from repro.kernels.tpu_plan import plan_splitk, plan_tpu_gemv
-
-HBM_BW = 819e9
+from repro.kernels import dispatch, ops
+from repro.kernels.dispatch import HBM_BW
 
 SHAPES = [
     # (name, M, K, B)  — decode-path GEMVs from the assigned archs
@@ -28,6 +36,11 @@ SHAPES = [
     ("olmo/ffn_down", 2048, 8192, 4),
     ("grok/expert_up", 4096, 6144, 8),
 ]
+
+# Dispatcher comparison runs over decode projections of registry configs
+# (kept to the smaller archs: interpret mode re-executes every kernel body).
+DISPATCH_ARCHS = ("gemma3-1b", "olmo-1b", "minitron-8b")
+FIXED_KERNELS = ("ref", "pim", "splitk")
 
 
 def kernel_rows() -> list[tuple[str, float, float]]:
@@ -58,6 +71,84 @@ def kernel_rows() -> list[tuple[str, float, float]]:
     return rows
 
 
+def registry_gemv_shapes() -> list[tuple[str, int, int, int]]:
+    """Decode-path GEMV shapes (M, K, B) from the model-config registry."""
+    from repro.configs.registry import ARCHS
+
+    shapes = []
+    for name in DISPATCH_ARCHS:
+        cfg = ARCHS[name]
+        shapes.append((f"{name}/ffn_up", cfg.d_ff, cfg.d_model, 1))
+        shapes.append((f"{name}/ffn_down", cfg.d_model, cfg.d_ff, 1))
+        shapes.append((f"{name}/lm_head", cfg.vocab, cfg.d_model, 1))
+    return shapes
+
+
+def dispatch_rows(measure: bool = True) -> list[dict]:
+    """Dispatcher-picked vs fixed-kernel rows per registry shape.
+
+    Each row carries the picked kernel, the modeled v5e latency of every
+    candidate (the decision basis), and — when ``measure`` — interpret-mode
+    wall clock for the picked and fixed paths (harness numbers).
+    """
+    rng = np.random.default_rng(0)
+    rows = []
+    for name, M, K, B in registry_gemv_shapes():
+        picked, _ = dispatch.select_kernel(M, K, B)
+        row: dict = {"shape": name, "M": M, "K": K, "B": B, "picked": picked}
+        for kern in FIXED_KERNELS:
+            _, plan = dispatch.select_kernel(
+                M, K, B, policy=dispatch.DispatchPolicy(kernel=kern)
+            )
+            row[f"model_us/{kern}"] = dispatch.estimate_cost_us(
+                "ref" if plan is None else kern, M, K, B, plan=plan
+            )
+        row["model_us/picked"] = row[f"model_us/{picked}"]
+        # interpret mode re-executes the kernel body with jnp per grid
+        # program: cap measured shapes (lm_head weights exceed 1 GB in f32)
+        if measure and M * K * 4 <= 256 * 2**20:
+            w = rng.standard_normal((M, K)).astype(np.float32)
+            x = rng.standard_normal((B, K)).astype(np.float32)
+            pw = ops.pack_weight(jnp.asarray(w))
+            xj = jnp.asarray(x)
+            for kern in ("auto",) + FIXED_KERNELS:
+                pol = dispatch.DispatchPolicy(kernel=kern, interpret=True)
+                row[f"interp_us/{kern}"] = dispatch.time_gemv_us(
+                    lambda: dispatch.dispatch_gemv(xj, pw, policy=pol),
+                    reps=2,
+                )
+        rows.append(row)
+    return rows
+
+
+def print_dispatch_table(rows: list[dict]) -> None:
+    for r in rows:
+        fixed = " ".join(
+            f"{k}={r[f'model_us/{k}']:.1f}us" for k in FIXED_KERNELS
+        )
+        line = (
+            f"dispatch/{r['shape']} [{r['M']}x{r['K']} B={r['B']}] "
+            f"picked={r['picked']} model={r['model_us/picked']:.1f}us "
+            f"| fixed: {fixed}"
+        )
+        if "interp_us/auto" in r:
+            interp = " ".join(
+                f"{k}={r[f'interp_us/{k}']:.0f}us"
+                for k in ("auto",) + FIXED_KERNELS
+                if f"interp_us/{k}" in r
+            )
+            line += f" | interp: {interp}"
+        print(line)
+
+
 if __name__ == "__main__":
-    for r in kernel_rows():
-        print(f"{r[0]},{r[1]:.3f},{r[2]:.6f}")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dispatch", action="store_true",
+                    help="only the dispatcher-vs-fixed comparison")
+    ap.add_argument("--no-measure", action="store_true",
+                    help="skip interpret-mode wall clock (model only)")
+    args = ap.parse_args()
+    if not args.dispatch:
+        for r in kernel_rows():
+            print(f"{r[0]},{r[1]:.3f},{r[2]:.6f}")
+    print_dispatch_table(dispatch_rows(measure=not args.no_measure))

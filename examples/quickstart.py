@@ -16,7 +16,7 @@ import numpy as np
 from repro.core.pim_arch import BF16, INT8, RYZEN_LPDDR5X
 from repro.core.placement import GEMV
 from repro.pim.timing import pim_speedup
-from repro.kernels import ops
+from repro.kernels import ops, select_kernel
 
 
 def main():
@@ -41,9 +41,11 @@ def main():
     w = rng.standard_normal((M, K), dtype=np.float32)
     x = rng.standard_normal((B, K), dtype=np.float32)
     packed = ops.pack_weight(jnp.asarray(w))   # "column-major" placement
-    plan = ops.choose_plan(M, K, B)
-    print(f"TPU kernel plan for {M}x{K}: m_blk={plan.m_blk} "
-          f"k_blk={plan.k_blk} grid={plan.grid} split_k={plan.split_k}")
+    # The dispatcher's selection is what placed_gemv actually executes.
+    kernel, plan = select_kernel(M, K, B)
+    desc = (f"m_blk={plan.m_blk} k_blk={plan.k_blk} grid={plan.grid} "
+            f"split_k={plan.split_k}" if plan is not None else "XLA ref")
+    print(f"TPU kernel plan for {M}x{K}: kernel={kernel} {desc}")
     out = ops.placed_gemv(jnp.asarray(x), packed, interpret=True)
     err = float(np.abs(np.asarray(out) - x @ w.T).max())
     print(f"  pallas-vs-oracle max err: {err:.2e}\n")

@@ -10,7 +10,9 @@ d_model=768, n_layers=12, vocab=32k (~110M params).
 """
 
 import argparse
+import shutil
 import sys
+import tempfile
 
 from repro.launch import train as train_launcher
 
@@ -21,12 +23,18 @@ def main():
     ap.add_argument("--steps", type=int, default=0)
     args, _ = ap.parse_known_args()
 
+    # Fresh checkpoint dir per run: a stale dir from an earlier invocation
+    # would make the launcher resume past --steps and train nothing.
+    # Removed on exit — the full variant checkpoints a ~110M model.
+    ckpt_dir = tempfile.mkdtemp(
+        prefix="repro_e2e_tiny_" if args.tiny else "repro_e2e_100m_"
+    )
     if args.tiny:
         argv = [
             "--arch", "olmo-1b", "--smoke",
             "--steps", str(args.steps or 30),
             "--batch", "8", "--seq", "128",
-            "--ckpt-dir", "/tmp/repro_e2e_tiny", "--ckpt-every", "10",
+            "--ckpt-dir", ckpt_dir, "--ckpt-every", "10",
         ]
     else:
         # ~110M params: 12L x 768 with 32k vocab (olmo family)
@@ -37,12 +45,16 @@ def main():
             "--steps", str(args.steps or 300),
             "--batch", "8", "--seq", "512",
             "--lr", "6e-4", "--accum", "2",
-            "--ckpt-dir", "/tmp/repro_e2e_100m", "--ckpt-every", "50",
+            "--ckpt-dir", ckpt_dir, "--ckpt-every", "50",
         ]
     out = train_launcher.main(argv)
     losses = out["losses"]
     print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
     assert losses[-1] < losses[0], "training must reduce loss"
+    # Cleanup only on success: a crashed or non-converging run keeps its
+    # dir so --ckpt-every checkpoints stay restorable (each run gets a
+    # fresh dir regardless).
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
 
 
 if __name__ == "__main__":

@@ -1,3 +1,25 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""PIM-GEMV kernel package: Pallas kernels + the unified dispatcher.
+
+Public surface:
+  * :func:`repro.kernels.dispatch.dispatch_gemv` — the single GEMV entry
+    point (kernel selection, plan cache, optional autotuning);
+  * :mod:`repro.kernels.ops` — weight packing/quantization and the legacy
+    ``placed_gemv`` shim;
+  * the individual Pallas kernels (``pim_gemv``, ``splitk_gemv``,
+    ``quant_gemv``) for tests and benchmarks that pin a kernel.
+"""
+
+from repro.kernels.dispatch import (  # noqa: F401
+    DispatchPolicy,
+    PackedWeights,
+    dispatch_dense,
+    dispatch_gemv,
+    plan_cache_stats,
+    select_kernel,
+)
+from repro.kernels.ops import (  # noqa: F401
+    PackedWeight,
+    pack_weight,
+    placed_gemv,
+    quantize_weight,
+)

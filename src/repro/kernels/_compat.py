@@ -1,0 +1,29 @@
+"""Version compatibility for the Pallas TPU API surface.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and back
+again across 0.4.x/0.5.x releases); this repo targets whichever spelling the
+installed JAX ships. All kernels import :data:`CompilerParams` from here
+instead of touching ``pltpu`` directly, so a version bump is a one-line fix.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):
+    CompilerParams = pltpu.CompilerParams
+elif hasattr(pltpu, "TPUCompilerParams"):
+    CompilerParams = pltpu.TPUCompilerParams
+else:  # pragma: no cover - unknown future JAX; fail at kernel build time
+    CompilerParams = None
+
+
+def compiler_params(**kwargs):
+    """Build the TPU compiler-params object for ``pl.pallas_call``.
+
+    Returns None when the installed JAX exposes no params class (the call
+    then runs with compiler defaults, which is correct in interpret mode).
+    """
+    if CompilerParams is None:
+        return None
+    return CompilerParams(**kwargs)

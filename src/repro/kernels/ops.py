@@ -1,31 +1,27 @@
-"""Public jit'd API over the PIM-GEMV kernels.
+"""Weight packing + the legacy ``placed_gemv`` entry point.
 
-``placed_gemv`` is what the serving layer calls for decode-time matmuls: it
-plans the PIMnast-analogue tiling (tpu_plan), picks output-stationary vs
-split-K by the paper's small-M rule, prepacks weights into the transposed
-("column-major", §IV-A1) layout, and dispatches to the Pallas kernel —
-falling back to plain XLA when Pallas isn't applicable (ragged shapes, or
-non-TPU backends at trace time with ``interpret=False``).
+This module owns the :class:`PackedWeight` representation (one-time prepack
+into the transposed "column-major" layout, paper §IV-A1/§V-A2) and the
+quantizer.  Kernel *selection* lives in :mod:`repro.kernels.dispatch`;
+``placed_gemv`` is kept as a thin shim over :func:`dispatch.dispatch_gemv`
+so existing callers and examples keep working — new code should call the
+dispatcher directly.
 """
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
-from repro.kernels.pim_gemv import pim_gemv
-from repro.kernels.quant_gemv import quant4_gemv, quant_gemv
-from repro.kernels.splitk_gemv import splitk_gemv
 from repro.kernels.tpu_plan import (
     LANES,
     TPUGemvPlan,
     plan_splitk,
     plan_tpu_gemv,
+    valid_splitk_degree,
 )
 
 # The paper picks split-K when M yields too few row-blocks to spread over
@@ -46,9 +42,9 @@ def pallas_applicable(M: int, K: int) -> bool:
 def choose_plan(M: int, K: int, batch: int, w_bytes: int = 2) -> TPUGemvPlan:
     plan = plan_tpu_gemv(M, K, batch, w_bytes=w_bytes)
     if plan.n_m < SPLITK_MIN_BLOCKS and K >= 4 * plan.k_blk:
-        for deg in (8, 4, 2):
-            if K % deg == 0 and (K // deg) % 8 == 0:
-                return plan_splitk(M, K, batch, degree=deg, w_bytes=w_bytes)
+        deg = valid_splitk_degree(K)
+        if deg is not None:
+            return plan_splitk(M, K, batch, degree=deg, w_bytes=w_bytes)
     return plan
 
 
@@ -108,57 +104,32 @@ def placed_gemv(
     interpret: bool | None = None,
     use_pallas: bool = True,
 ) -> jnp.ndarray:
-    """Decode GEMV through the PIMnast-placed kernel.
+    """Decode GEMV through the unified dispatcher (see kernels/dispatch.py).
 
-    x: [B, K] activations (B = decode batch), returns [B, M].
+    x: [B, K] activations (B = decode batch), returns [B, M].  When no
+    ``plan`` is given the dispatcher's cost model picks the kernel (ref /
+    pim / split-K / quant); pass an explicit plan to force a kernel.
     """
-    K, M = packed.shape
-    B = x.shape[0]
-    if interpret is None:
-        interpret = default_interpret()
-    if not use_pallas or not pallas_applicable(M, K):
-        # XLA fallback (still uses the transposed placement).
-        if packed.bits == 16:
-            return ref.gemv_ref(packed.w_t, x)
-        if packed.bits == 8:
-            return ref.quant_gemv_ref(packed.w_t, packed.scales, x,
-                                      packed.block)
-        return ref.quant4_gemv_ref(packed.w_t, packed.scales, x,
-                                   packed.block)
+    from repro.kernels import dispatch  # deferred: dispatch imports ops
 
-    if plan is None:
-        w_bytes = 2 if packed.bits == 16 else 1
-        plan = choose_plan(M, K, B, w_bytes)
-
-    if packed.bits == 16:
-        if plan.split_k > 1:
-            return splitk_gemv(x, packed.w_t, plan=plan, interpret=interpret)
-        return pim_gemv(x, packed.w_t, plan=plan, interpret=interpret)
-    # Quantized paths are output-stationary only (scales walk with weights);
-    # ensure the K block covers whole scale blocks.
-    plan = _align_plan_to_block(plan, M, K, B, packed)
-    if packed.bits == 8:
-        return quant_gemv(
-            x, packed.w_t, packed.scales, plan=plan, block=packed.block,
-            interpret=interpret,
-        )
-    return quant4_gemv(
-        x, packed.w_t, packed.scales, plan=plan, block=packed.block,
-        interpret=interpret,
+    policy = dispatch.DispatchPolicy(
+        interpret=interpret, use_pallas=use_pallas
     )
+    return dispatch.dispatch_gemv(x, packed, policy=policy, plan=plan)
 
 
 def _align_plan_to_block(
-    plan: TPUGemvPlan, M: int, K: int, B: int, packed: PackedWeight
+    plan: TPUGemvPlan, M: int, K: int, B: int,
+    packed: PackedWeight | int,
 ) -> TPUGemvPlan:
-    if plan.split_k == 1 and plan.k_blk % packed.block == 0:
+    """Make a plan executable by the quant kernels: k_blk must cover whole
+    scale blocks. ``packed`` is a PackedWeight or the bare block size."""
+    block = packed if isinstance(packed, int) else packed.block
+    if plan.split_k == 1 and plan.k_blk % block == 0:
         return plan
-    k_blk = max(
-        packed.block,
-        (plan.k_blk // packed.block) * packed.block,
-    )
+    k_blk = max(block, (plan.k_blk // block) * block)
     while K % k_blk != 0:
-        k_blk -= packed.block
+        k_blk -= block
         if k_blk <= 0:
             k_blk = K
             break

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import compiler_params
 from repro.kernels.tpu_plan import TPUGemvPlan
 
 
@@ -74,7 +75,7 @@ def splitk_gemv(
         ),
         out_shape=jax.ShapeDtypeStruct((deg, B, M), jnp.float32),
         scratch_shapes=[pltpu.VMEM((1, B, plan.m_blk), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -114,6 +114,21 @@ def plan_tpu_gemv(
     return TPUGemvPlan(m_blk=M, k_blk=K, n_m=1, n_k=1, vmem_bytes=total)
 
 
+SPLITK_DEGREES = (8, 4, 2)
+
+
+def valid_splitk_degree(K: int, degrees=SPLITK_DEGREES) -> int | None:
+    """Highest degree that splits K into sublane-aligned parts, else None.
+
+    The single source of the split-K validity rule — shared by the planner,
+    the dispatcher's candidate enumeration, and kernel pinning.
+    """
+    for deg in degrees:
+        if K % deg == 0 and (K // deg) % SUBLANES == 0:
+            return deg
+    return None
+
+
 def plan_splitk(
     M: int, K: int, batch: int = 1, *, degree: int = 4, **kw
 ) -> TPUGemvPlan:

@@ -87,6 +87,23 @@ def parse_collective_bytes(hlo: str) -> dict[str, int]:
     return out
 
 
+def cost_analysis_dict(cost) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns one dict; 0.4.3x returns a list with one dict per
+    executable program (or None). We take the first non-empty entry — the
+    per-device program whose FLOPs/bytes the roofline uses.
+    """
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        for entry in cost:
+            if entry:
+                return dict(entry)
+        return {}
+    return dict(cost)
+
+
 def _build_step(cfg, shape, mesh):
     """Returns (fn, kwargs_specs, in_shardings_tree) for this cell."""
     from repro.distributed import sharding as shd
@@ -179,7 +196,7 @@ def _cell_metrics(cfg, shape, mesh) -> dict:
                     donate_argnums=donate)
             .lower(*args).compile()
         )
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled.cost_analysis())
     coll = parse_collective_bytes(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),
@@ -269,7 +286,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled.cost_analysis())
     hlo = compiled.as_text()
     coll = parse_collective_bytes(hlo)
 

@@ -154,11 +154,18 @@ def main(argv: list[str] | None = None) -> dict:
     )
     ckpt.wait()
     dt = time.perf_counter() - t0
-    print(
-        f"done: {args.steps} steps in {dt:.1f}s; loss {losses[0]:.4f} -> "
-        f"{losses[-1]:.4f}; restarts={stats.restarts} "
-        f"stragglers={len(stats.straggler_steps)}"
-    )
+    if losses:
+        print(
+            f"done: {args.steps} steps in {dt:.1f}s; loss {losses[0]:.4f} -> "
+            f"{losses[-1]:.4f}; restarts={stats.restarts} "
+            f"stragglers={len(stats.straggler_steps)}"
+        )
+    else:
+        # a pre-existing checkpoint in --ckpt-dir already covers all steps
+        print(
+            f"done: resumed past step {args.steps} from {args.ckpt_dir}; "
+            f"no new steps run"
+        )
     return {"losses": losses, "stats": stats}
 
 

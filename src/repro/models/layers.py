@@ -240,19 +240,33 @@ def init_mlp(key, cfg: ModelConfig, dtype, d_ff: int | None = None) -> Params:
     return p
 
 
-def apply_mlp(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
-    up = x @ p["w_up"]
+def apply_mlp(
+    p: Params, x: jnp.ndarray, cfg: ModelConfig, gemv=None
+) -> jnp.ndarray:
+    """FFN. With a ``gemv`` DispatchPolicy and a single-token input (decode
+    step), the projections route through the unified GEMV dispatcher —
+    the paper's per-shape placement decision at the decode hot path."""
+    if gemv is not None and x.shape[1] == 1:
+        from repro.kernels.dispatch import dispatch_dense
+
+        def mm(a, w):
+            return dispatch_dense(a, w, policy=gemv)
+    else:
+        def mm(a, w):
+            return a @ w
+
+    up = mm(x, p["w_up"])
     if cfg.act == "silu":
-        h = jax.nn.silu(x @ p["w_gate"]) * up
+        h = jax.nn.silu(mm(x, p["w_gate"])) * up
     elif cfg.act == "geglu":
-        h = jax.nn.gelu(x @ p["w_gate"]) * up
+        h = jax.nn.gelu(mm(x, p["w_gate"])) * up
     elif cfg.act == "gelu":
         h = jax.nn.gelu(up)
     elif cfg.act == "relu2":
         h = jnp.square(jax.nn.relu(up))
     else:
         raise ValueError(cfg.act)
-    return h @ p["w_down"]
+    return mm(h, p["w_down"])
 
 
 # --------------------------------------------------------------------------

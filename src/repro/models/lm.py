@@ -182,7 +182,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def _self_block(
     p: Params, x, cfg: ModelConfig, positions, window,
-    cache_kv, cache_pos, mamba_state=None,
+    cache_kv, cache_pos, mamba_state=None, gemv=None,
 ):
     """attention (+ parallel mamba) + FFN/MoE with pre-norms."""
     aux = jnp.zeros((), jnp.float32)
@@ -205,7 +205,7 @@ def _self_block(
     if cfg.moe is not None:
         ff, aux = L.apply_moe(p["moe"], h, cfg)
     else:
-        ff = L.apply_mlp(p["mlp"], h, cfg)
+        ff = L.apply_mlp(p["mlp"], h, cfg, gemv=gemv)
     x = x + ff
     return x, new_kv, new_state, aux
 
@@ -292,8 +292,16 @@ def forward(
     frames: jnp.ndarray | None = None,       # whisper stub embeddings
     vision: jnp.ndarray | None = None,       # vlm stub patch embeddings [B,Nv,d]
     remat: bool | None = None,
+    gemv_policy=None,   # DispatchPolicy: route decode GEMVs via the dispatcher
 ) -> tuple[jnp.ndarray, Params | None, jnp.ndarray]:
-    """Returns (logits [B, S, vocab], new_cache, aux_loss)."""
+    """Returns (logits [B, S, vocab], new_cache, aux_loss).
+
+    ``gemv_policy`` (a ``repro.kernels.dispatch.DispatchPolicy``) engages
+    the unified GEMV dispatcher for single-token (decode) projections: the
+    MLP up/gate/down matmuls and the LM head. Prefill and training shapes
+    (Sq > 1) keep the plain einsum path — they are matmul-bound, not
+    GEMV-bound.
+    """
     B, Sq = tokens.shape
     dtype = jnp.dtype(cfg.compute_dtype)
     x = params["embed"][tokens].astype(dtype)
@@ -324,25 +332,32 @@ def forward(
 
     if cfg.cross_attn_every > 0:
         x, new_cache, aux_total = _forward_grouped(
-            params, cfg, x, positions, ctx, cache, remat
+            params, cfg, x, positions, ctx, cache, remat, gemv_policy
         )
     else:
         x, new_cache, aux_total = _forward_flat(
-            params, cfg, x, positions, ctx, cache, is_global, remat
+            params, cfg, x, positions, ctx, cache, is_global, remat,
+            gemv_policy,
         )
 
     x = L.apply_norm(params["ln_f"], x, cfg)
     head = (
         params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     )
-    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(dtype))
+    if gemv_policy is not None and Sq == 1:
+        from repro.kernels.dispatch import dispatch_dense
+
+        logits = dispatch_dense(x, head.astype(dtype), policy=gemv_policy)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, head.astype(dtype))
     logits = constrain(logits, ("batch", None, "model"))
     if new_cache is not None:
         new_cache["pos"] = pos0 + Sq
     return logits, new_cache, aux_total
 
 
-def _forward_flat(params, cfg, x, positions, ctx, cache, is_global, remat):
+def _forward_flat(params, cfg, x, positions, ctx, cache, is_global, remat,
+                  gemv=None):
     """Uniform scan over layers (everything except grouped VLM)."""
     decode = cache is not None
 
@@ -359,7 +374,7 @@ def _forward_flat(params, cfg, x, positions, ctx, cache, is_global, remat):
             mamba_state = (cache_l["mamba_conv"], cache_l["mamba_h"])
         x, new_kv, new_state, aux_l = _self_block(
             pl, x, cfg, positions, window, cache_kv, cache_pos,
-            mamba_state=mamba_state,
+            mamba_state=mamba_state, gemv=gemv,
         )
         if ctx is not None and "cross" in pl:  # whisper decoder
             h = L.apply_norm(pl["ln_cross"], x, cfg)
@@ -419,7 +434,8 @@ def _forward_flat(params, cfg, x, positions, ctx, cache, is_global, remat):
     return x, None, aux
 
 
-def _forward_grouped(params, cfg, x, positions, ctx, cache, remat):
+def _forward_grouped(params, cfg, x, positions, ctx, cache, remat,
+                     gemv=None):
     """VLM: scan over groups of `cross_attn_every` layers; the group's last
     layer applies gated cross-attention to the vision context."""
     g = cfg.cross_attn_every
@@ -429,7 +445,7 @@ def _forward_grouped(params, cfg, x, positions, ctx, cache, remat):
     def layer_step(x, pl, cache_kv, cache_pos, cross):
         window = 0
         x, new_kv, _, aux = _self_block(
-            pl, x, cfg, positions, window, cache_kv, cache_pos,
+            pl, x, cfg, positions, window, cache_kv, cache_pos, gemv=gemv,
         )
         if cross:
             h = L.apply_norm(pl["ln_cross"], x, cfg)

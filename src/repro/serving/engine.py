@@ -7,8 +7,12 @@ slots, finished slots are refilled without stopping the decode loop (vLLM-
 style at laptop scale) — exercised on the reduced configs in tests/examples.
 
 Decode-time matmuls are where the paper's technique lives: with batch <=
-``gemv_batch_threshold`` the MLP projections route through the PIMnast-placed
-Pallas GEMV kernels (``use_pim_kernels=True``; interpret mode on CPU).
+``gemv_batch_threshold`` the MLP projections and LM head route through the
+unified GEMV dispatcher (``repro.kernels.dispatch``), which picks ref /
+output-stationary / split-K per shape from its cost model
+(``use_pim_kernels=True``). On TPU the picked kernel lowers via Pallas; on
+CPU the dispatcher downgrades auto picks to the XLA path (interpret-mode
+Pallas is a validation harness, not a serving path).
 """
 
 from __future__ import annotations
@@ -22,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels.dispatch import DispatchPolicy
 from repro.models import lm
 
 
@@ -35,8 +40,13 @@ class Request:
     done: bool = False
 
 
-def build_serve_fns(cfg: ModelConfig, max_len: int):
-    """Returns (prefill, decode_step), both pure-jittable."""
+def build_serve_fns(cfg: ModelConfig, max_len: int,
+                    gemv_policy: DispatchPolicy | None = None):
+    """Returns (prefill, decode_step), both pure-jittable.
+
+    ``gemv_policy`` routes decode-step projections through the unified GEMV
+    dispatcher; prefill keeps the matmul path (Sq > 1 is not GEMV-shaped).
+    """
 
     def prefill(params, tokens, cache, extra):
         logits, cache, _ = lm.forward(
@@ -51,6 +61,7 @@ def build_serve_fns(cfg: ModelConfig, max_len: int):
             params, cfg, last_tok,
             cache=cache,
             frames=extra.get("frames"), vision=extra.get("vision"),
+            gemv_policy=gemv_policy,
         )
         return logits[:, -1], cache
 
@@ -65,12 +76,23 @@ class Engine:
     """Continuous batching over a fixed number of slots."""
 
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
-                 max_len: int = 128):
+                 max_len: int = 128, use_pim_kernels: bool = True,
+                 gemv_batch_threshold: int = 8):
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
-        self.prefill_fn, self.decode_fn = build_serve_fns(cfg, max_len)
+        # Decode GEMV routing: one DispatchPolicy for the engine's lifetime.
+        # Above the batch threshold the dispatcher itself falls back to the
+        # XLA path (decode becomes matmul-shaped), so the policy is safe to
+        # install unconditionally when use_pim_kernels is on.
+        self.gemv_policy = (
+            DispatchPolicy(batch_threshold=gemv_batch_threshold)
+            if use_pim_kernels else None
+        )
+        self.prefill_fn, self.decode_fn = build_serve_fns(
+            cfg, max_len, gemv_policy=self.gemv_policy
+        )
         self._jit_decode = jax.jit(self.decode_fn)
         self._jit_prefill = jax.jit(self.prefill_fn)
         self.cache = lm.init_cache(cfg, batch_slots, max_len)

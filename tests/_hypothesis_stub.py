@@ -1,0 +1,71 @@
+"""Deterministic fallback for ``hypothesis`` when it isn't installed.
+
+The property tests in this suite only use two strategies — ``integers`` and
+``sampled_from`` — so when the optional dep is missing we degrade to a
+seeded random sweep over the same domains instead of erroring at collection
+(the real hypothesis shrinking/replay machinery is lost, coverage is kept).
+
+Usage in test modules:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_stub import given, settings, st
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+
+# Cap per-test examples so the fallback sweep stays fast; real hypothesis
+# honors the test's own max_examples.
+MAX_EXAMPLES_CAP = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+
+st = _Strategies()
+
+
+def settings(max_examples: int = 100, deadline=None, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        n = min(getattr(fn, "_stub_max_examples", 100), MAX_EXAMPLES_CAP)
+
+        @functools.wraps(fn)
+        def runner():
+            rng = random.Random(0)  # deterministic across runs
+            for _ in range(n):
+                kwargs = {k: s.example(rng) for k, s in strategies.items()}
+                fn(**kwargs)
+
+        # pytest must not see the property args as fixtures
+        del runner.__wrapped__
+        return runner
+
+    return deco

@@ -1,0 +1,363 @@
+"""Unified GEMV dispatcher: selection matrix, plan cache, autotune table
+round-trip, and numerical equivalence against the XLA oracle."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch, ops
+from repro.kernels.dispatch import DispatchPolicy, GemvKey
+
+RNG = np.random.default_rng(7)
+
+INTERP = DispatchPolicy(interpret=True)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    dispatch.clear_plan_cache()
+    dispatch.clear_autotune_table()
+    yield
+    dispatch.clear_plan_cache()
+    dispatch.clear_autotune_table()
+
+
+def _mk(M, K, B):
+    w = RNG.standard_normal((M, K)).astype(np.float32)
+    x = RNG.standard_normal((B, K)).astype(np.float32)
+    return w, x
+
+
+# --------------------------------------------------------------------------
+# Kernel selection matrix over (M, K, batch, dtype)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("M,K,B,bits,expected", [
+    (6912, 1152, 1, 16, "pim"),      # wide GEMV: output-stationary
+    (8192, 2048, 2, 16, "pim"),
+    (1152, 6912, 1, 16, "splitk"),   # small-M tall-K: §VI-F split-K
+    (2048, 8192, 1, 16, "splitk"),
+    (300, 256, 1, 16, "ref"),        # ragged M: XLA fallback
+    (512, 250, 1, 16, "ref"),        # ragged K
+    (6912, 1152, 32, 16, "ref"),     # batch above threshold: matmul-shaped
+    (128, 64, 1, 16, "ref"),         # tiny: launch overhead dominates
+    (2048, 2048, 1, 8, "quant"),     # int8 weights: quant path
+    (2048, 2048, 1, 4, "quant4"),    # packed int4
+    (1024, 512, 1, 8, "quant"),      # sub-MB int8: still quant, never
+    (2048, 2048, 16, 8, "quant"),    # f32-dequant ref (size/batch guards
+                                     # don't apply to quantized weights)
+])
+def test_selection_matrix(M, K, B, bits, expected):
+    kernel, plan = dispatch.select_kernel(M, K, B, bits=bits)
+    assert kernel == expected, (M, K, B, bits, kernel)
+    if expected == "splitk":
+        assert plan is not None and plan.split_k > 1
+    if expected == "ref":
+        assert plan is None
+
+
+def test_auto_policy_serves_xla_on_non_tpu_backend():
+    """Production default (interpret=None) on a CPU backend must not serve
+    through interpret-mode Pallas — the cost model models the TPU, and
+    interpret mode is orders of magnitude slower than XLA."""
+    w, x = _mk(6912, 1152, 1)  # big enough that the model would pick pim
+    out = dispatch.dispatch_gemv(jnp.asarray(x), jnp.asarray(w),
+                                 policy=DispatchPolicy())
+    np.testing.assert_allclose(np.asarray(out), x @ w.T, rtol=1e-4,
+                               atol=1e-3)
+    # the downgrade bypasses planning entirely: no cache activity
+    assert dispatch.plan_cache_stats() == {"hits": 0, "misses": 0}
+    # explicit interpret=True is an opt-in and still plans/dispatches
+    dispatch.dispatch_gemv(jnp.asarray(x), jnp.asarray(w), policy=INTERP)
+    assert dispatch.plan_cache_stats()["misses"] == 1
+
+
+def test_quant_plans_returned_aligned_and_executable():
+    """select_kernel's public contract: quant plans are directly runnable
+    (k_blk covers whole scale blocks, even for awkward K)."""
+    kernel, plan = dispatch.select_kernel(2048, 2080, 1, bits=8, block=32)
+    assert kernel == "quant"
+    assert plan.k_blk % 32 == 0 and 2080 % plan.k_blk == 0
+    kernel, plan = dispatch.select_kernel(
+        2048, 2080, 1, bits=8, block=32,
+        policy=DispatchPolicy(kernel="quant"))
+    assert kernel == "quant"
+    assert plan.k_blk % 32 == 0 and 2080 % plan.k_blk == 0
+
+
+def test_selection_respects_policy_gates():
+    # use_pallas off forces ref even on an ideal shape
+    k, _ = dispatch.select_kernel(
+        6912, 1152, 1, policy=DispatchPolicy(use_pallas=False))
+    assert k == "ref"
+    # pinned kernel overrides the cost model
+    k, plan = dispatch.select_kernel(
+        6912, 1152, 1, policy=DispatchPolicy(kernel="splitk"))
+    assert k == "splitk" and plan.split_k > 1
+
+
+def test_cost_model_orders_small_m_toward_splitk():
+    """The occupancy term must make split-K beat output-stationary exactly
+    where the paper says it should: too few M-blocks to fill the grid."""
+    _, pim_plan = dispatch.select_kernel(
+        1152, 6912, 1, policy=DispatchPolicy(kernel="pim"))
+    _, sk_plan = dispatch.select_kernel(
+        1152, 6912, 1, policy=DispatchPolicy(kernel="splitk"))
+    t_pim = dispatch.estimate_cost_us("pim", 1152, 6912, 1, plan=pim_plan)
+    t_sk = dispatch.estimate_cost_us("splitk", 1152, 6912, 1, plan=sk_plan)
+    t_ref = dispatch.estimate_cost_us("ref", 1152, 6912, 1)
+    assert t_sk < t_ref < t_pim
+
+
+# --------------------------------------------------------------------------
+# Plan cache
+# --------------------------------------------------------------------------
+
+
+def test_plan_cache_hit_returns_same_plan_object():
+    key = GemvKey(M=6912, K=1152, batch=1, bits=16, block=32,
+                  dtype="float32", backend="cpu")
+    pw = ops.pack_weight(jnp.asarray(_mk(6912, 1152, 1)[0]))
+    k1, p1 = dispatch._resolve(key, pw, INTERP)
+    k2, p2 = dispatch._resolve(key, pw, INTERP)
+    assert k1 == k2 == "pim"
+    assert p1 is p2  # memoized, not re-planned
+    stats = dispatch.plan_cache_stats()
+    assert stats["misses"] == 1 and stats["hits"] == 1
+
+
+def test_plan_cache_keyed_on_policy():
+    """A pinned or no-Pallas policy must not inherit a cached auto plan."""
+    w, x = _mk(1152, 6912, 1)
+    pw = ops.pack_weight(jnp.asarray(w))
+    key = GemvKey(M=1152, K=6912, batch=1, bits=16, block=32,
+                  dtype="float32", backend="cpu")
+    k_auto, _ = dispatch._resolve(key, pw, INTERP)
+    assert k_auto == "splitk"
+    k_pin, _ = dispatch._resolve(
+        key, pw, DispatchPolicy(kernel="pim", interpret=True))
+    assert k_pin == "pim"
+    k_off, _ = dispatch._resolve(
+        key, pw, DispatchPolicy(use_pallas=False, interpret=True))
+    assert k_off == "ref"
+
+
+def test_explicit_plan_respects_use_pallas():
+    """placed_gemv's legacy guard: plan + use_pallas=False -> XLA ref."""
+    from repro.kernels.tpu_plan import plan_tpu_gemv
+
+    w, x = _mk(512, 256, 1)
+    plan = plan_tpu_gemv(512, 256, 1)
+    out = dispatch.dispatch_gemv(
+        jnp.asarray(x), jnp.asarray(w), plan=plan,
+        policy=DispatchPolicy(use_pallas=False),
+    )
+    np.testing.assert_allclose(np.asarray(out), x @ w.T, rtol=1e-4,
+                               atol=1e-3)
+
+
+def test_table_never_overrides_policy_pins():
+    """A loaded autotune entry stands in for the cost model only — never
+    for an explicit kernel pin or use_pallas=False."""
+    key = GemvKey(M=512, K=1024, batch=1, bits=16, block=32,
+                  dtype="float32", backend="cpu")
+    dispatch._AUTOTUNE_TABLE[key.table_key()] = {
+        "kernel": "pim", "m_blk": 512, "k_blk": 1024, "n_m": 1, "n_k": 1,
+        "split_k": 1, "us": 1.0,
+    }
+    pw = ops.pack_weight(jnp.asarray(_mk(512, 1024, 1)[0]))
+    k_auto, _ = dispatch._resolve(key, pw, INTERP)
+    assert k_auto == "pim"  # tabled entry honored for the auto policy
+    k_off, _ = dispatch._resolve(
+        key, pw, DispatchPolicy(use_pallas=False, interpret=True))
+    assert k_off == "ref"
+    k_pin, _ = dispatch._resolve(
+        key, pw, DispatchPolicy(kernel="ref", interpret=True))
+    assert k_pin == "ref"
+
+
+def test_pinned_kernel_respects_weight_bits():
+    # quant pins on float weights have no scales to apply: explicit error
+    for name in ("quant", "quant4"):
+        with pytest.raises(ValueError, match="quant"):
+            dispatch.select_kernel(
+                2048, 2048, 1, bits=16, policy=DispatchPolicy(kernel=name))
+    # unknown kernel names never fall through to a silent default
+    with pytest.raises(ValueError, match="unknown kernel"):
+        dispatch.select_kernel(
+            2048, 2048, 1, policy=DispatchPolicy(kernel="splitK"))
+    # pim pin on quantized weights must still dequantize (quant path)
+    k, _ = dispatch.select_kernel(
+        2048, 2048, 1, bits=8, policy=DispatchPolicy(kernel="pim"))
+    assert k == "quant"
+    w, x = _mk(1024, 2048, 1)
+    pq = ops.quantize_weight(w, bits=8, block=32)
+    out = dispatch.dispatch_gemv(
+        jnp.asarray(x), pq,
+        policy=DispatchPolicy(kernel="pim", interpret=True),
+    )
+    rel = np.abs(np.asarray(out) - x @ w.T).max() / np.abs(x @ w.T).max()
+    assert rel < 0.05  # dequantized, not raw int8 codes
+
+
+def test_plan_cache_keyed_on_shape_dtype():
+    w, x = _mk(6912, 1152, 1)
+    pw = ops.pack_weight(jnp.asarray(w))
+    xj = jnp.asarray(x)
+    dispatch.dispatch_gemv(xj, pw, policy=INTERP)
+    dispatch.dispatch_gemv(xj, pw, policy=INTERP)       # same key: hit
+    dispatch.dispatch_gemv(
+        xj.astype(jnp.bfloat16), pw, policy=INTERP)      # new dtype: miss
+    stats = dispatch.plan_cache_stats()
+    assert stats["hits"] == 1 and stats["misses"] == 2
+
+
+# --------------------------------------------------------------------------
+# Autotune table
+# --------------------------------------------------------------------------
+
+
+def test_autotune_roundtrip_json(tmp_path):
+    table_path = str(tmp_path / "gemv_table.json")
+    pol = DispatchPolicy(autotune=True, table_path=table_path,
+                         interpret=True)
+    w, x = _mk(256, 512, 1)
+    out = dispatch.dispatch_gemv(jnp.asarray(x), jnp.asarray(w), policy=pol)
+    np.testing.assert_allclose(np.asarray(out), x @ w.T, rtol=1e-4,
+                               atol=1e-3)
+    with open(table_path) as f:
+        table = json.load(f)
+    assert len(table) == 1
+    entry = next(iter(table.values()))
+    assert entry["kernel"] in ("ref", "pim", "splitk")
+    assert entry["us"] > 0
+
+    # a fresh process (cleared caches) reloads the table and honors it
+    dispatch.clear_plan_cache()
+    dispatch.clear_autotune_table()
+    dispatch.load_autotune_table(table_path)
+    key = GemvKey(M=256, K=512, batch=1, bits=16, block=32,
+                  dtype="float32", backend="cpu")
+    kernel, plan = dispatch._entry_to_plan(
+        dispatch._AUTOTUNE_TABLE[key.table_key()])
+    assert kernel == entry["kernel"]
+    # and dispatch with autotune=False now uses the table, not the model
+    out2 = dispatch.dispatch_gemv(jnp.asarray(x), jnp.asarray(w),
+                                  policy=INTERP)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(out),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_autotune_memoizes_in_table():
+    pol = DispatchPolicy(autotune=True, interpret=True)
+    key = GemvKey(M=256, K=512, batch=1, bits=16, block=32,
+                  dtype="float32", backend="cpu")
+    k1, _ = dispatch.autotune_gemv(key, policy=pol)
+    assert key.table_key() in dispatch._AUTOTUNE_TABLE
+    # second call must not re-time: poison the timer to prove it
+    entry = dict(dispatch._AUTOTUNE_TABLE[key.table_key()])
+    k2, _ = dispatch.autotune_gemv(key, policy=pol)
+    assert k2 == k1
+    assert dispatch._AUTOTUNE_TABLE[key.table_key()] == entry
+
+
+# --------------------------------------------------------------------------
+# Numerical equivalence on config-registry shapes
+# --------------------------------------------------------------------------
+
+
+def _registry_decode_shapes():
+    from repro.configs.registry import ARCHS
+
+    shapes = []
+    for name in ("gemma3-1b", "olmo-1b", "minitron-8b"):
+        cfg = ARCHS[name].reduced()
+        shapes.append((f"{name}/ffn_up", cfg.d_ff, cfg.d_model))
+        shapes.append((f"{name}/ffn_down", cfg.d_model, cfg.d_ff))
+        shapes.append((f"{name}/lm_head", cfg.vocab, cfg.d_model))
+    return shapes
+
+
+@pytest.mark.parametrize("name,M,K", _registry_decode_shapes())
+def test_dispatched_matches_reference_on_registry_shapes(name, M, K):
+    w, x = _mk(M, K, 2)
+    out = dispatch.dispatch_gemv(jnp.asarray(x), jnp.asarray(w),
+                                 policy=INTERP)
+    np.testing.assert_allclose(np.asarray(out), x @ w.T, rtol=1e-4,
+                               atol=1e-3)
+
+
+def test_dispatched_quant_matches_reference():
+    w, x = _mk(1024, 2048, 1)
+    pq = ops.quantize_weight(w, bits=8, block=32)
+    out = dispatch.dispatch_gemv(jnp.asarray(x), pq, policy=INTERP)
+    from repro.kernels import ref
+
+    expect = ref.quant_gemv_ref(pq.w_t, pq.scales, jnp.asarray(x), 32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_dispatch_dense_matches_einsum():
+    B, S, d, f = 2, 1, 512, 1024
+    x = RNG.standard_normal((B, S, d)).astype(np.float32)
+    w = RNG.standard_normal((d, f)).astype(np.float32)
+    out = dispatch.dispatch_dense(jnp.asarray(x), jnp.asarray(w),
+                                  policy=INTERP)
+    assert out.shape == (B, S, f)
+    np.testing.assert_allclose(
+        np.asarray(out), np.einsum("bsd,df->bsf", x, w),
+        rtol=1e-4, atol=1e-3,
+    )
+
+
+def test_weight_normalization_forms_agree():
+    """PackedWeights, raw [M, K], and (w_q, scales) all normalize."""
+    w, x = _mk(512, 256, 1)
+    xj = jnp.asarray(x)
+    a = dispatch.dispatch_gemv(xj, jnp.asarray(w), policy=INTERP)
+    b = dispatch.dispatch_gemv(xj, ops.pack_weight(jnp.asarray(w)),
+                               policy=INTERP)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    pq = ops.quantize_weight(w, bits=8, block=32)
+    c = dispatch.dispatch_gemv(xj, (pq.w_t, pq.scales), policy=INTERP)
+    d = dispatch.dispatch_gemv(xj, pq, policy=INTERP)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(d))
+    # non-int8 tuples are rejected (packed int4 is ambiguous in tuple form)
+    with pytest.raises(ValueError, match="int8"):
+        dispatch.as_packed((jnp.asarray(w), pq.scales))
+
+
+def test_autotune_table_merges_across_processes(tmp_path):
+    """Saving must merge with on-disk entries, not overwrite them."""
+    table_path = str(tmp_path / "t.json")
+    dispatch._AUTOTUNE_TABLE["shapeA"] = {"kernel": "ref", "us": 1.0}
+    dispatch.save_autotune_table(table_path)
+    # simulate a second process: fresh in-memory table, new entry
+    dispatch.clear_autotune_table()
+    dispatch._AUTOTUNE_TABLE["shapeB"] = {"kernel": "ref", "us": 2.0}
+    dispatch.save_autotune_table(table_path)
+    with open(table_path) as f:
+        merged = json.load(f)
+    assert set(merged) == {"shapeA", "shapeB"}
+
+
+def test_autotune_reads_persisted_table_lazily(tmp_path):
+    """A new process with autotune=True + table_path reuses persisted
+    winners without re-timing (and without an explicit load call)."""
+    table_path = str(tmp_path / "t.json")
+    pol = DispatchPolicy(autotune=True, table_path=table_path,
+                         interpret=True)
+    key = GemvKey(M=256, K=512, batch=1, bits=16, block=32,
+                  dtype="float32", backend="cpu")
+    k1, _ = dispatch.autotune_gemv(key, policy=pol)
+    # fresh process: empty in-memory table, same table_path
+    dispatch.clear_autotune_table()
+    dispatch.clear_plan_cache()
+    entry_before = json.load(open(table_path))
+    k2, _ = dispatch.autotune_gemv(key, policy=pol)
+    assert k2 == k1
+    assert json.load(open(table_path)) == entry_before  # not re-timed

@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional test dep: degrade to the deterministic stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.pim_gemv import pim_gemv
@@ -163,8 +167,15 @@ def test_splitk_matches_ref(deg):
 
 
 def test_placed_gemv_auto_plan_and_fallback():
-    # pallas-applicable shape
+    # pallas path: explicit plan (the dispatcher's auto policy routes this
+    # sub-MB weight to XLA, so pin the plan to keep Pallas coverage here)
     w, x = _mk(512, 256, 1)
+    plan = plan_tpu_gemv(512, 256, 1, max_m_blk=128, max_k_blk=128)
+    out = ops.placed_gemv(jnp.asarray(x), ops.pack_weight(jnp.asarray(w)),
+                          plan=plan, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), x @ w.T, rtol=1e-4,
+                               atol=1e-3)
+    # auto selection (dispatcher cost model) stays correct on the same shape
     out = ops.placed_gemv(jnp.asarray(x), ops.pack_weight(jnp.asarray(w)),
                           interpret=True)
     np.testing.assert_allclose(np.asarray(out), x @ w.T, rtol=1e-4,

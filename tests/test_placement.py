@@ -4,7 +4,11 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional test dep: degrade to the deterministic stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.pim_arch import BF16, INT4, INT8, PIMConfig, RYZEN_LPDDR5X
 from repro.core.placement import (

@@ -4,7 +4,11 @@ paper's own evaluation claims (§VI)."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional test dep: degrade to the deterministic stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.opt_models import OPT_SUITE, lm_head_gemv, token_gemvs
 from repro.core.pim_arch import (

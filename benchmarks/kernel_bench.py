@@ -5,28 +5,35 @@ On this CPU container the Pallas kernels execute in interpret mode, so
 wall-clock numbers characterize the HARNESS, not TPU performance — the
 ``derived`` column is therefore the max abs error vs the oracle (the
 correctness contract), and per-kernel modeled HBM-bound time on v5e
-(weight bytes / 819 GB/s) is reported as ``v5e_model_us``.
+(weight bytes over the TPU backend's modeled bandwidth) is reported as
+``v5e_model_us``.
 
-The ``dispatch`` section is the paper's headline experiment in TPU form:
-for each model-config decode GEMV shape it reports the dispatcher's chosen
-kernel and its *modeled* v5e latency against every fixed kernel choice —
-the gap is the balancing win that a hard-coded kernel leaves on the table.
+The ``dispatch`` section is the paper's headline experiment in backend
+form: for each model-config decode GEMV shape it reports the chosen
+backend's picked kernel and its *modeled* latency against every fixed
+kernel of that backend — the gap is the balancing win that a hard-coded
+kernel leaves on the table.  ``--backend`` swaps the memory system under
+comparison (tpu / cpu / gpu cost models); ``--json OUT`` emits the rows as
+machine-readable records for the bench trajectory.
 
     PYTHONPATH=src python benchmarks/kernel_bench.py            # both parts
     PYTHONPATH=src python benchmarks/kernel_bench.py --dispatch # just the
                                                                 # comparison
+    PYTHONPATH=src python benchmarks/kernel_bench.py --dispatch \
+        --backend cpu --json bench.json
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import dispatch, ops
-from repro.kernels.dispatch import HBM_BW
+from repro.kernels import available_backends, dispatch, get_backend, ops
+from repro.kernels.dispatch import DispatchPolicy
 
 SHAPES = [
     # (name, M, K, B)  — decode-path GEMVs from the assigned archs
@@ -40,12 +47,21 @@ SHAPES = [
 # Dispatcher comparison runs over decode projections of registry configs
 # (kept to the smaller archs: interpret mode re-executes every kernel body).
 DISPATCH_ARCHS = ("gemma3-1b", "olmo-1b", "minitron-8b")
-FIXED_KERNELS = ("ref", "pim", "splitk")
+
+
+def fixed_kernels(backend_name: str) -> tuple[str, ...]:
+    """Fixed-kernel comparison rows: the backend's registered non-quant
+    set (quant kernels need quantized weights; these rows are bf16/f32)."""
+    return tuple(
+        k for k in get_backend(backend_name).kernels
+        if not k.startswith("quant")
+    )
 
 
 def kernel_rows() -> list[tuple[str, float, float]]:
     rows = []
     rng = np.random.default_rng(0)
+    hbm_bw = get_backend("tpu").cost_model.bandwidth_bps
     for name, M, K, B in SHAPES:
         w = rng.standard_normal((M, K)).astype(np.float32)
         x = rng.standard_normal((B, K)).astype(np.float32)
@@ -56,7 +72,7 @@ def kernel_rows() -> list[tuple[str, float, float]]:
         dt = (time.perf_counter() - t0) * 1e6
         err = float(np.abs(np.asarray(out) - x @ w.T).max())
         rows.append((f"kernel/{name}/interp", dt, err))
-        v5e_us = (M * K * 2) / HBM_BW * 1e6
+        v5e_us = (M * K * 2) / hbm_bw * 1e6
         rows.append((f"kernel/{name}/v5e_hbm_model", v5e_us, 0.0))
         # quantized variant (int8 + block scales)
         pq = ops.quantize_weight(w, bits=8, block=32)
@@ -84,23 +100,37 @@ def registry_gemv_shapes() -> list[tuple[str, int, int, int]]:
     return shapes
 
 
-def dispatch_rows(measure: bool = True) -> list[dict]:
-    """Dispatcher-picked vs fixed-kernel rows per registry shape.
+def dispatch_rows(measure: bool = True,
+                  backend_name: str = "tpu") -> list[dict]:
+    """Backend-picked vs fixed-kernel rows per registry shape.
 
-    Each row carries the picked kernel, the modeled v5e latency of every
-    candidate (the decision basis), and — when ``measure`` — interpret-mode
-    wall clock for the picked and fixed paths (harness numbers).
+    Each row carries the backend, its picked kernel, the modeled latency of
+    every fixed kernel (the decision basis), and — when ``measure`` —
+    measured wall clock for the picked and fixed paths.  On this container
+    the TPU/GPU backends measure in interpret mode (harness numbers); the
+    CPU backend's figures are real XLA executions.
     """
+    backend = get_backend(backend_name)
+    fixed = fixed_kernels(backend_name)
+    # The TPU/GPU backends need the explicit interpret opt-in to run their
+    # Pallas kernels on a CPU host; the CPU backend runs natively.
+    interp = backend_name != "cpu"
     rng = np.random.default_rng(0)
     rows = []
     for name, M, K, B in registry_gemv_shapes():
-        picked, _ = dispatch.select_kernel(M, K, B)
-        row: dict = {"shape": name, "M": M, "K": K, "B": B, "picked": picked}
-        for kern in FIXED_KERNELS:
-            _, plan = dispatch.select_kernel(
-                M, K, B, policy=dispatch.DispatchPolicy(kernel=kern)
+        sel_policy = DispatchPolicy(backend=backend_name, interpret=interp)
+        picked, _ = backend.select_kernel(M, K, B, policy=sel_policy)
+        row: dict = {
+            "shape": name, "M": M, "K": K, "B": B,
+            "backend": backend_name, "picked": picked,
+        }
+        for kern in fixed:
+            _, plan = backend.select_kernel(
+                M, K, B,
+                policy=DispatchPolicy(backend=backend_name, kernel=kern,
+                                      interpret=interp),
             )
-            row[f"model_us/{kern}"] = dispatch.estimate_cost_us(
+            row[f"model_us/{kern}"] = backend.estimate_cost_us(
                 "ref" if plan is None else kern, M, K, B, plan=plan
             )
         row["model_us/picked"] = row[f"model_us/{picked}"]
@@ -111,9 +141,10 @@ def dispatch_rows(measure: bool = True) -> list[dict]:
             x = rng.standard_normal((B, K)).astype(np.float32)
             pw = ops.pack_weight(jnp.asarray(w))
             xj = jnp.asarray(x)
-            for kern in ("auto",) + FIXED_KERNELS:
-                pol = dispatch.DispatchPolicy(kernel=kern, interpret=True)
-                row[f"interp_us/{kern}"] = dispatch.time_gemv_us(
+            for kern in ("auto",) + fixed:
+                pol = DispatchPolicy(backend=backend_name, kernel=kern,
+                                     interpret=interp or None)
+                row[f"measured_us/{kern}"] = dispatch.time_gemv_us(
                     lambda: dispatch.dispatch_gemv(xj, pw, policy=pol),
                     reps=2,
                 )
@@ -123,32 +154,49 @@ def dispatch_rows(measure: bool = True) -> list[dict]:
 
 def print_dispatch_table(rows: list[dict]) -> None:
     for r in rows:
-        fixed = " ".join(
-            f"{k}={r[f'model_us/{k}']:.1f}us" for k in FIXED_KERNELS
+        fixed = fixed_kernels(r["backend"])
+        fixed_s = " ".join(
+            f"{k}={r[f'model_us/{k}']:.1f}us" for k in fixed
         )
         line = (
             f"dispatch/{r['shape']} [{r['M']}x{r['K']} B={r['B']}] "
-            f"picked={r['picked']} model={r['model_us/picked']:.1f}us "
-            f"| fixed: {fixed}"
+            f"backend={r['backend']} picked={r['picked']} "
+            f"model={r['model_us/picked']:.1f}us | fixed: {fixed_s}"
         )
-        if "interp_us/auto" in r:
-            interp = " ".join(
-                f"{k}={r[f'interp_us/{k}']:.0f}us"
-                for k in ("auto",) + FIXED_KERNELS
-                if f"interp_us/{k}" in r
+        if "measured_us/auto" in r:
+            meas = " ".join(
+                f"{k}={r[f'measured_us/{k}']:.0f}us"
+                for k in ("auto",) + fixed
+                if f"measured_us/{k}" in r
             )
-            line += f" | interp: {interp}"
+            line += f" | measured: {meas}"
         print(line)
 
 
-if __name__ == "__main__":
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dispatch", action="store_true",
                     help="only the dispatcher-vs-fixed comparison")
+    ap.add_argument("--backend", default="tpu",
+                    choices=available_backends(),
+                    help="GemvBackend whose cost model/kernels to compare")
     ap.add_argument("--no-measure", action="store_true",
-                    help="skip interpret-mode wall clock (model only)")
-    args = ap.parse_args()
+                    help="skip measured wall clock (model only)")
+    ap.add_argument("--json", metavar="OUT", default=None,
+                    help="write the dispatcher rows as JSON records")
+    args = ap.parse_args(argv)
     if not args.dispatch:
         for r in kernel_rows():
             print(f"{r[0]},{r[1]:.3f},{r[2]:.6f}")
-    print_dispatch_table(dispatch_rows(measure=not args.no_measure))
+    rows = dispatch_rows(measure=not args.no_measure,
+                         backend_name=args.backend)
+    print_dispatch_table(rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1, sort_keys=True)
+        print(f"wrote {len(rows)} records -> {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

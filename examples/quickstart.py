@@ -16,7 +16,7 @@ import numpy as np
 from repro.core.pim_arch import BF16, INT8, RYZEN_LPDDR5X
 from repro.core.placement import GEMV
 from repro.pim.timing import pim_speedup
-from repro.kernels import ops, select_kernel
+from repro.kernels import get_backend, ops
 
 
 def main():
@@ -41,8 +41,9 @@ def main():
     w = rng.standard_normal((M, K), dtype=np.float32)
     x = rng.standard_normal((B, K), dtype=np.float32)
     packed = ops.pack_weight(jnp.asarray(w))   # "column-major" placement
-    # The dispatcher's selection is what placed_gemv actually executes.
-    kernel, plan = select_kernel(M, K, B)
+    # The TPU backend's selection is what placed_gemv(interpret=True)
+    # actually executes (interpret=True resolves the tpu backend).
+    kernel, plan = get_backend("tpu").select_kernel(M, K, B)
     desc = (f"m_blk={plan.m_blk} k_blk={plan.k_blk} grid={plan.grid} "
             f"split_k={plan.split_k}" if plan is not None else "XLA ref")
     print(f"TPU kernel plan for {M}x{K}: kernel={kernel} {desc}")

@@ -1,14 +1,27 @@
-"""PIM-GEMV kernel package: Pallas kernels + the unified dispatcher.
+"""PIM-GEMV kernel package: Pallas/XLA kernels + the unified dispatcher.
 
 Public surface:
   * :func:`repro.kernels.dispatch.dispatch_gemv` — the single GEMV entry
-    point (kernel selection, plan cache, optional autotuning);
-  * :mod:`repro.kernels.ops` — weight packing/quantization and the legacy
-    ``placed_gemv`` shim;
-  * the individual Pallas kernels (``pim_gemv``, ``splitk_gemv``,
-    ``quant_gemv``) for tests and benchmarks that pin a kernel.
+    point (backend resolution, kernel selection, plan cache, autotuning);
+  * :mod:`repro.kernels.backends` — the ``GemvBackend`` registry (``tpu`` /
+    ``cpu`` / ``gpu``), each bundling kernels, a frozen ``CostModel``, a
+    plan builder, and an autotune-table namespace;
+  * :mod:`repro.kernels.ops` — weight packing/quantization
+    (:class:`PackedWeights` is the canonical name; ``PackedWeight`` is the
+    back-compat alias) and the legacy ``placed_gemv`` shim;
+  * the individual kernels (``pim_gemv``, ``splitk_gemv``, ``quant_gemv``,
+    ``triton_gemv``, ``cpu_splitk_gemv``) for tests and benchmarks that pin
+    a kernel.
 """
 
+from repro.kernels.backends import (  # noqa: F401
+    CostModel,
+    GemvBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+    resolve_backend,
+)
 from repro.kernels.dispatch import (  # noqa: F401
     DispatchPolicy,
     PackedWeights,

@@ -1,0 +1,39 @@
+"""GEMV backend registry: per-memory-system kernel sets + cost models.
+
+Importing this package registers the three shipped backends:
+
+  * ``tpu`` — the Pallas kernel set (output-stationary / split-K / quant)
+    with the v5e-class cost model; also the interpret-mode validation
+    harness on CPU hosts (PR-1 behavior, selection-identical);
+  * ``cpu`` — XLA-native serving (ref dot, pre-chunked split-K reduce,
+    fused dequant) with DDR-class constants; never interpret-mode Pallas;
+  * ``gpu`` — XLA dot plus a Pallas-Triton GEMV behind a capability check,
+    with A100-class constants.
+
+See :mod:`repro.kernels.backends.base` for the :class:`GemvBackend`
+contract and DESIGN.md §6 for the registry design.
+"""
+
+from repro.kernels.backends.base import (  # noqa: F401
+    AutotuneTable,
+    CostModel,
+    DEFAULT_POLICY,
+    DispatchPolicy,
+    GemvBackend,
+    GemvKey,
+    GemvPlan,
+    available_backends,
+    backend_for_platform,
+    entry_to_plan,
+    get_backend,
+    plan_to_entry,
+    register_backend,
+    resolve_backend,
+    time_gemv_us,
+)
+
+# Self-registration: module import side effect is the registration call at
+# the bottom of each backend module.
+from repro.kernels.backends import cpu as _cpu    # noqa: F401,E402
+from repro.kernels.backends import gpu as _gpu    # noqa: F401,E402
+from repro.kernels.backends import tpu as _tpu    # noqa: F401,E402

@@ -1,0 +1,510 @@
+"""The `GemvBackend` contract: one pluggable target per memory system.
+
+The paper's thesis is that GEMV placement must be *parameterized by the
+memory system* — bank counts, row-open costs, command cadence are inputs to
+Algorithm 1, not constants baked into it.  This module is that
+parameterization at the software level (DESIGN.md §6): a backend bundles
+
+  (a) its **kernel set** and executors (`kernels`, :meth:`GemvBackend.execute`),
+  (b) its **cost-model constants** as a frozen :class:`CostModel` — the
+      bandwidth / launch / occupancy numbers that used to live as module
+      globals in ``kernels/dispatch.py``,
+  (c) a **plan builder** (:meth:`GemvBackend.candidate_plans`), and
+  (d) an **autotune-table namespace** (entries are stored per backend name,
+      so one JSON table serves a heterogeneous fleet).
+
+``kernels/dispatch.py`` stays the single entry point: it resolves a backend
+(:func:`resolve_backend`), then delegates selection, cost estimation,
+autotuning, and execution to it.  Registered implementations live in
+:mod:`repro.kernels.backends.tpu` / ``.cpu`` / ``.gpu``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import (
+    PackedWeights,
+    pack_weight,
+    quantize_weight,
+)
+from repro.kernels.tpu_plan import TPUGemvPlan
+
+# The plan dataclass is target-agnostic (block shape + grid + split degree);
+# the TPU-prefixed name is historical.
+GemvPlan = TPUGemvPlan
+
+
+# ---------------------------------------------------------------------------
+# Cost model constants (frozen, one instance per backend)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CostModel:
+    """Per-backend constants for the analytical GEMV latency model.
+
+    These are the memory-system parameters of the paper's performance model
+    translated to each execution target; a backend owns exactly one frozen
+    instance (no module globals, no cross-backend sharing).
+    """
+
+    bandwidth_gbps: float      # sustained memory bandwidth, GB/s (1e9 B/s)
+    gemv_efficiency: float     # fraction of peak BW the untuned ref GEMV gets
+    launch_us: float           # fixed kernel-launch / dispatch overhead
+    program_us: float          # per-grid-program (or per-chunk) step overhead
+    min_parallel_blocks: int   # grid fill target: fewer blocks starve the
+                               # machine (the paper's small-M rule, §VI-F)
+
+    @property
+    def bandwidth_bps(self) -> float:
+        return self.bandwidth_gbps * 1e9
+
+
+# ---------------------------------------------------------------------------
+# Dispatch policy + plan-cache key (shared vocabulary across backends)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DispatchPolicy:
+    """How :func:`repro.kernels.dispatch.dispatch_gemv` picks and runs a kernel.
+
+    ``backend`` explicitly selects a registered :class:`GemvBackend` by name;
+    ``None`` resolves from the runtime (see :func:`resolve_backend`).
+    ``kernel="auto"`` uses the backend's cost model; any other value pins one
+    of the backend's kernels.  ``autotune=True`` replaces the model with
+    measured timings, memoized per backend namespace in the JSON table at
+    ``table_path`` when set.
+    """
+
+    kernel: str = "auto"          # auto | one of backend.kernels
+    backend: str | None = None    # None -> resolve from the runtime platform
+    autotune: bool = False
+    table_path: str | None = None
+    # None -> the resolved backend decides (GemvBackend.default_interpret:
+    # only the tpu backend interprets off-TPU; cpu/gpu run natively).
+    interpret: bool | None = None
+    use_pallas: bool = True
+    batch_threshold: int = 8      # above this, decode is matmul-shaped: XLA
+    min_pallas_bytes: int = 1 << 20  # tiny weights: launch overhead dominates
+
+
+DEFAULT_POLICY = DispatchPolicy()
+
+
+@dataclass(frozen=True)
+class GemvKey:
+    """Process-level plan-cache key: shape + dtype + backend name."""
+
+    M: int
+    K: int
+    batch: int
+    bits: int
+    block: int
+    dtype: str
+    backend: str
+
+    def table_key(self) -> str:
+        # Backend-agnostic: the autotune table namespaces entries by backend
+        # name, so the shape key itself must not embed one.
+        return (
+            f"{self.M}x{self.K}xb{self.batch}_w{self.bits}g{self.block}"
+            f"_{self.dtype}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Autotune table: per-backend namespaces, one JSON file
+# ---------------------------------------------------------------------------
+
+_TABLE_FORMAT = 2
+
+
+def entry_to_plan(entry: dict) -> tuple[str, GemvPlan | None]:
+    """Rebuild a (kernel, plan) decision from a persisted table entry."""
+    if entry.get("m_blk") is None:
+        return entry["kernel"], None
+    return entry["kernel"], GemvPlan(
+        m_blk=entry["m_blk"], k_blk=entry["k_blk"], n_m=entry["n_m"],
+        n_k=entry["n_k"], vmem_bytes=entry.get("vmem_bytes", 0),
+        split_k=entry.get("split_k", 1),
+    )
+
+
+def plan_to_entry(kernel: str, plan: GemvPlan | None,
+                  elapsed_us: float) -> dict:
+    entry = {"kernel": kernel, "us": elapsed_us}
+    if plan is not None:
+        entry.update(
+            m_blk=plan.m_blk, k_blk=plan.k_blk, n_m=plan.n_m, n_k=plan.n_k,
+            vmem_bytes=plan.vmem_bytes, split_k=plan.split_k,
+        )
+    return entry
+
+
+class AutotuneTable:
+    """Measured (kernel, plan) winners, namespaced per backend.
+
+    On disk the table is one JSON document::
+
+        {"format": 2, "tables": {"tpu": {<shape key>: entry, ...},
+                                 "cpu": {...}}}
+
+    so tuners running on different substrates merge into a single file
+    without key collisions — the heterogeneous-fleet analogue of the paper
+    shipping pre-swept placements per memory configuration.  All mutation is
+    guarded by a lock: engines stepped from a thread pool share one table.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._tables: dict[str, dict[str, dict]] = {}
+        self._loaded_paths: set[str] = set()
+
+    # -- in-memory access ---------------------------------------------------
+
+    def get(self, namespace: str, key: str) -> dict | None:
+        with self._lock:
+            entry = self._tables.get(namespace, {}).get(key)
+            return dict(entry) if entry is not None else None
+
+    def put(self, namespace: str, key: str, entry: dict) -> None:
+        with self._lock:
+            self._tables.setdefault(namespace, {})[key] = dict(entry)
+
+    def namespaces(self) -> tuple[str, ...]:
+        with self._lock:
+            return tuple(sorted(self._tables))
+
+    def snapshot(self) -> dict[str, dict[str, dict]]:
+        with self._lock:
+            return {ns: {k: dict(e) for k, e in t.items()}
+                    for ns, t in self._tables.items()}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._tables.clear()
+            self._loaded_paths.clear()
+
+    # -- persistence --------------------------------------------------------
+
+    # PR-1 keys embedded the JAX platform the tuner ran on as a suffix
+    # ("..._float32_cpu"); the v2 shape key drops it (the namespace carries
+    # the backend instead), so v1 keys must be migrated or they never match.
+    _V1_KEY_SUFFIXES = ("cpu", "tpu", "gpu", "cuda", "rocm")
+
+    @classmethod
+    def _parse(cls, doc: dict) -> dict[str, dict[str, dict]]:
+        """Accept the v2 namespaced document or a v1 flat table.
+
+        v1 files (PR-1) map suffixed shape keys straight to entries; they
+        load into the ``tpu`` namespace — the kernel set those tables named
+        — with the platform suffix stripped so v2 lookups find them.
+        """
+        if "tables" in doc and isinstance(doc["tables"], dict):
+            return {ns: dict(t) for ns, t in doc["tables"].items()}
+        flat = {}
+        for k, v in doc.items():
+            if not (isinstance(v, dict) and "kernel" in v):
+                continue
+            head, _, tail = k.rpartition("_")
+            if head and tail in cls._V1_KEY_SUFFIXES:
+                k = head
+            flat[k] = v
+        return {"tpu": flat} if flat else {}
+
+    def load(self, path: str) -> dict[str, dict[str, dict]]:
+        """Merge the table at ``path`` into memory; returns what was read.
+
+        The returned mapping is the caller's to mutate: entries are copied
+        on insert so the shared table can only change under its lock.
+        """
+        with open(path) as f:
+            parsed = self._parse(json.load(f))
+        with self._lock:
+            for ns, entries in parsed.items():
+                self._tables.setdefault(ns, {}).update(
+                    {k: dict(e) for k, e in entries.items()}
+                )
+            self._loaded_paths.add(os.path.abspath(path))
+        return parsed
+
+    def ensure_loaded(self, path: str) -> None:
+        """Lazy one-shot load: pick up entries persisted by earlier runs."""
+        p = os.path.abspath(path)
+        with self._lock:
+            if p in self._loaded_paths:
+                return
+            self._loaded_paths.add(p)
+        if os.path.exists(p):
+            self.load(p)
+
+    def save(self, path: str) -> None:
+        """Merge this process's namespaces into the file at ``path``.
+
+        Read-merge-write with an atomic rename, per namespace: a CPU tuner
+        never erases a TPU tuner's entries (different namespace), and never
+        erases entries for shapes it didn't tune itself (inner-dict merge).
+        The whole read-merge-write runs under the table lock (and the temp
+        name carries the thread id): two engine threads saving after
+        concurrent autotunes must not interleave on one temp file.  Cross-
+        process racing on the same shape keeps the last writer's timing —
+        harmless, both are valid.
+        """
+        path = os.path.abspath(path)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with self._lock:
+            merged: dict[str, dict[str, dict]] = {}
+            try:
+                with open(path) as f:
+                    merged = self._parse(json.load(f))
+            except (FileNotFoundError, json.JSONDecodeError):
+                pass
+            for ns, entries in self._tables.items():
+                merged.setdefault(ns, {}).update(entries)
+            tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
+            with open(tmp, "w") as f:
+                json.dump({"format": _TABLE_FORMAT, "tables": merged}, f,
+                          indent=1, sort_keys=True)
+            os.replace(tmp, path)
+
+
+# ---------------------------------------------------------------------------
+# Timing harness (shared by autotuners and benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def time_gemv_us(run, reps: int = 3) -> float:
+    """Best-of-``reps`` wall clock (µs) for a thunk returning a jax array."""
+    run().block_until_ready()  # compile / warm up
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run().block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+# ---------------------------------------------------------------------------
+# The backend contract
+# ---------------------------------------------------------------------------
+
+
+class GemvBackend:
+    """One execution target behind ``dispatch_gemv``.
+
+    Subclasses set :attr:`name`, :attr:`kernels`, :attr:`cost_model` and
+    implement the selection / planning / execution methods.  The autotune
+    loop is shared: it times the backend's own candidates with the backend's
+    own executor and persists winners under the backend's namespace.
+    """
+
+    name: str = ""
+    kernels: tuple[str, ...] = ("ref",)
+    cost_model: CostModel = CostModel(
+        bandwidth_gbps=1.0, gemv_efficiency=1.0, launch_us=0.0,
+        program_us=0.0, min_parallel_blocks=1,
+    )
+
+    # -- cost model ---------------------------------------------------------
+
+    def estimate_cost_us(
+        self, kernel: str, M: int, K: int, batch: int, *,
+        bits: int = 16, x_bytes: int = 2, plan: GemvPlan | None = None,
+    ) -> float:
+        """Modeled GEMV latency (µs) on this backend.
+
+        Default: memory-bound ref path — bytes over (bandwidth × efficiency).
+        Backends override to model their non-ref kernels.
+        """
+        io = self.io_bytes(M, K, batch, bits=bits, x_bytes=x_bytes)
+        cm = self.cost_model
+        return io / (cm.bandwidth_bps * cm.gemv_efficiency) * 1e6
+
+    @staticmethod
+    def io_bytes(M: int, K: int, batch: int, *, bits: int = 16,
+                 x_bytes: int = 2) -> float:
+        return M * K * bits / 8 + batch * K * x_bytes + batch * M * x_bytes
+
+    # -- planning / selection ----------------------------------------------
+
+    def candidate_plans(
+        self, M: int, K: int, batch: int, bits: int
+    ) -> list[tuple[str, GemvPlan | None]]:
+        """Every kernel applicable to this shape, with an executable plan."""
+        return [("ref", None)]
+
+    def select_kernel(
+        self, M: int, K: int, batch: int, *,
+        bits: int = 16, block: int = 32, x_bytes: int = 2,
+        policy: DispatchPolicy = DEFAULT_POLICY,
+    ) -> tuple[str, GemvPlan | None]:
+        """Pure selection: (kernel name, executable plan) for one shape."""
+        raise NotImplementedError
+
+    def coerce_plan(
+        self, plan: GemvPlan, M: int, K: int, batch: int,
+        pw: PackedWeights, policy: DispatchPolicy,
+    ) -> tuple[str, GemvPlan | None]:
+        """Map a caller-supplied plan to this backend's (kernel, plan).
+
+        Legacy ``placed_gemv(plan=...)`` path; the default ignores the plan
+        and falls back to selection.
+        """
+        return self.select_kernel(
+            M, K, batch, bits=pw.bits, block=pw.block, policy=policy
+        )
+
+    def _check_pin(self, name: str, bits: int) -> None:
+        """Shared validation for explicitly pinned kernels."""
+        if name not in self.kernels:
+            raise ValueError(
+                f"unknown kernel {name!r} for backend {self.name!r}; "
+                f"expected one of {self.kernels}"
+            )
+        if name in ("quant", "quant4") and bits == 16:
+            raise ValueError(f"kernel={name!r} requires int8/int4 weights")
+
+    # -- execution ----------------------------------------------------------
+
+    def default_interpret(self) -> bool:
+        """Pallas interpret mode when the policy leaves it unset
+        (``policy.interpret is None``).
+
+        Base: False — a backend's kernels run natively wherever the backend
+        was resolved (the CPU set is pure XLA; the GPU set is capability-
+        gated at *selection* time, so a picked Triton kernel can lower).
+        Only the TPU backend overrides this: off-TPU it exists as the
+        interpret-mode validation harness.
+        """
+        return False
+
+    def execute(self, kernel: str, x: jnp.ndarray, pw: PackedWeights,
+                plan: GemvPlan | None, interpret: bool) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def _execute_ref(self, x: jnp.ndarray, pw: PackedWeights) -> jnp.ndarray:
+        """The shared XLA reference path: plain dot for float weights,
+        block-scale dequant oracles for int8 / packed int4."""
+        from repro.kernels import ref
+
+        if pw.bits == 16:
+            return ref.gemv_ref(pw.w_t, x)
+        if pw.bits == 8:
+            return ref.quant_gemv_ref(pw.w_t, pw.scales, x, pw.block)
+        return ref.quant4_gemv_ref(pw.w_t, pw.scales, x, pw.block)
+
+    # -- autotune (shared loop, backend-owned candidates + namespace) -------
+
+    def autotune_candidates(
+        self, key: GemvKey, pw: PackedWeights, policy: DispatchPolicy
+    ) -> list[tuple[str, GemvPlan | None]]:
+        """Candidates the autotuner times; default = the planner's set."""
+        return self.candidate_plans(key.M, key.K, key.batch, key.bits)
+
+    def autotune_gemv(
+        self, key: GemvKey, *, policy: DispatchPolicy, table: AutotuneTable,
+    ) -> tuple[str, GemvPlan | None]:
+        """Time every candidate on synthetic inputs; persist the winner.
+
+        Inputs are synthesized from the key (never the caller's arrays,
+        which may be tracers when dispatch happens inside a ``jit`` trace).
+        Entries land in this backend's namespace of ``table``.
+        """
+        if policy.table_path:
+            table.ensure_loaded(policy.table_path)
+        tkey = key.table_key()
+        entry = table.get(self.name, tkey)
+        if entry is not None:
+            return entry_to_plan(entry)
+        interpret = (
+            policy.interpret if policy.interpret is not None
+            else self.default_interpret()
+        )
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(
+            rng.standard_normal((key.batch, key.K)).astype(np.float32)
+        ).astype(key.dtype)
+        w = rng.standard_normal((key.M, key.K)).astype(np.float32)
+        if key.bits < 16:
+            pw = quantize_weight(w, bits=key.bits, block=key.block)
+        else:
+            pw = pack_weight(jnp.asarray(w).astype(key.dtype))
+        best: tuple[float, str, GemvPlan | None] | None = None
+        for kernel, plan in self.autotune_candidates(key, pw, policy):
+            try:
+                us = time_gemv_us(
+                    lambda: self.execute(kernel, x, pw, plan, interpret)
+                )
+            except Exception:  # a candidate that fails to lower never wins
+                continue
+            if best is None or us < best[0]:
+                best = (us, kernel, plan)
+        assert best is not None, key
+        table.put(self.name, tkey, plan_to_entry(best[1], best[2], best[0]))
+        if policy.table_path:
+            table.save(policy.table_path)
+        return best[1], best[2]
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, GemvBackend] = {}
+_PLATFORM_MAP: dict[str, str] = {}
+_REG_LOCK = threading.Lock()
+
+
+def register_backend(
+    backend: GemvBackend, *, platforms: tuple[str, ...] = ()
+) -> GemvBackend:
+    """Register a backend instance, optionally claiming JAX platform names
+    (``jax.default_backend()`` strings) it should serve by default."""
+    if not backend.name:
+        raise ValueError("backend must set a non-empty name")
+    with _REG_LOCK:
+        _REGISTRY[backend.name] = backend
+        for p in platforms:
+            _PLATFORM_MAP[p] = backend.name
+    return backend
+
+
+def get_backend(name: str) -> GemvBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown GEMV backend {name!r}; registered: "
+            f"{sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def backend_for_platform(platform: str) -> GemvBackend:
+    """Backend serving a JAX platform name; unknown platforms get ``cpu``
+    (the portable XLA path runs everywhere)."""
+    return get_backend(_PLATFORM_MAP.get(platform, "cpu"))
+
+
+def resolve_backend(policy: DispatchPolicy | None = None) -> GemvBackend:
+    """Resolution order: explicit ``policy.backend`` override, then the
+    explicit ``interpret=True`` opt-in (the TPU-analogue validation harness
+    on any host), then ``jax.default_backend()``."""
+    if policy is not None and policy.backend:
+        return get_backend(policy.backend)
+    if policy is not None and policy.interpret:
+        return get_backend("tpu")
+    return backend_for_platform(jax.default_backend())

@@ -1,0 +1,181 @@
+"""GPU `GemvBackend`: Pallas-Triton plans behind a capability check.
+
+The kernel set is deliberately small — decode GEMV on a GPU is served well
+by the library matmul (``ref``) except where a custom placement wins:
+
+* ``ref`` — XLA's dot (cuBLAS-class) on the transposed K-major layout;
+* ``triton`` — :func:`repro.kernels.triton_gemv.triton_gemv`, one CTA per
+  M-block with an in-kernel K walk.  The cost model's occupancy term makes
+  it the pick only when the shape yields enough M-blocks to cover the SMs
+  (the paper's grid-fill rule with ``min_parallel_blocks`` = SM count) —
+  large-M projections like LM heads; mid-size GEMVs stay on ``ref``.
+
+Capability gate: Triton plans are only *selected* when the running platform
+can lower them (``triton_lowering_available()``) or the caller explicitly
+opted into interpret mode (the CPU-hosted validation harness).  Anywhere
+else the backend degrades to ``ref`` — never a lowering error at dispatch
+time.  Quantized weights take the fused XLA dequant contraction; a Triton
+dequant kernel is future work (table namespace reserves the names).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.backends.base import (
+    DEFAULT_POLICY,
+    CostModel,
+    DispatchPolicy,
+    GemvBackend,
+    GemvKey,
+    GemvPlan,
+    register_backend,
+)
+from repro.kernels.ops import PackedWeights
+from repro.kernels.triton_gemv import triton_gemv
+
+GPU_PLATFORMS = ("gpu", "cuda", "rocm")
+
+try:  # the Triton flavor ships with jax, but guard old/partial installs
+    from jax.experimental.pallas import triton as _pallas_triton  # noqa: F401
+    _HAS_PALLAS_TRITON = True
+except Exception:  # pragma: no cover - jaxlib without Triton support
+    _HAS_PALLAS_TRITON = False
+
+
+def triton_lowering_available() -> bool:
+    """True when a ``pallas_call`` here would lower through Triton."""
+    return _HAS_PALLAS_TRITON and jax.default_backend() in GPU_PLATFORMS
+
+
+def _pow2_divisor(n: int, cap: int, floor: int) -> int | None:
+    """Largest power-of-two divisor of ``n`` in [floor, cap], else None."""
+    d = 1
+    while d * 2 <= cap and n % (d * 2) == 0:
+        d *= 2
+    return d if d >= floor and n % d == 0 else None
+
+
+def plan_triton_gemv(M: int, K: int, batch: int) -> GemvPlan | None:
+    """Plan builder: CTA-aligned M-blocks, power-of-two K chunks.
+
+    Triton tiles want power-of-two extents; a shape without a >=64 pow2
+    M-divisor or a >=16 pow2 K-divisor is left to ``ref``.
+    """
+    m_blk = _pow2_divisor(M, cap=512, floor=64)
+    k_blk = _pow2_divisor(K, cap=1024, floor=16)
+    if m_blk is None or k_blk is None:
+        return None
+    return GemvPlan(m_blk=m_blk, k_blk=k_blk, n_m=M // m_blk,
+                    n_k=K // k_blk, vmem_bytes=0, split_k=1)
+
+
+class GpuBackend(GemvBackend):
+    """A100-class memory system served by XLA dot + a Triton GEMV."""
+
+    name = "gpu"
+    kernels = ("ref", "triton")
+    cost_model = CostModel(
+        bandwidth_gbps=1555.0,     # A100-40GB HBM2e
+        gemv_efficiency=0.7,       # library GEMV (cuBLAS-class)
+        launch_us=3.0,             # kernel launch + driver overhead
+        program_us=0.02,           # per-CTA scheduling cost
+        min_parallel_blocks=108,   # SM count: the grid fill target
+    )
+
+    # -- cost model ---------------------------------------------------------
+
+    def estimate_cost_us(
+        self, kernel: str, M: int, K: int, batch: int, *,
+        bits: int = 16, x_bytes: int = 2, plan: GemvPlan | None = None,
+    ) -> float:
+        cm = self.cost_model
+        io = self.io_bytes(M, K, batch, bits=bits, x_bytes=x_bytes)
+        if kernel != "triton" or plan is None:
+            return io / (cm.bandwidth_bps * cm.gemv_efficiency) * 1e6
+        occupancy = min(1.0, plan.n_m / cm.min_parallel_blocks)
+        t = io / (cm.bandwidth_bps * occupancy) * 1e6
+        return t + cm.launch_us + cm.program_us * plan.n_m
+
+    # -- planning -----------------------------------------------------------
+
+    def candidate_plans(
+        self, M: int, K: int, batch: int, bits: int
+    ) -> list[tuple[str, GemvPlan | None]]:
+        cands: list[tuple[str, GemvPlan | None]] = [("ref", None)]
+        if bits < 16:
+            return cands  # quant: fused XLA dequant only (for now)
+        plan = plan_triton_gemv(M, K, batch)
+        if plan is not None:
+            cands.append(("triton", plan))
+        return cands
+
+    def _can_lower_triton(self, policy: DispatchPolicy) -> bool:
+        # The capability check: real Triton lowering on a GPU platform, or
+        # the explicit interpret opt-in (CPU-hosted validation of the same
+        # kernel body).  Everything else falls back to ref.
+        return triton_lowering_available() or bool(policy.interpret)
+
+    # -- selection ----------------------------------------------------------
+
+    def select_kernel(
+        self, M: int, K: int, batch: int, *,
+        bits: int = 16, block: int = 32, x_bytes: int = 2,
+        policy: DispatchPolicy = DEFAULT_POLICY,
+    ) -> tuple[str, GemvPlan | None]:
+        if policy.kernel != "auto":
+            return self._pinned(M, K, batch, bits, policy)
+        if (
+            bits < 16
+            or not policy.use_pallas
+            or not self._can_lower_triton(policy)
+            or batch > policy.batch_threshold
+            or M * K * bits / 8 < policy.min_pallas_bytes
+        ):
+            return "ref", None
+        cands = self.candidate_plans(M, K, batch, bits)
+        return min(
+            cands,
+            key=lambda kp: self.estimate_cost_us(
+                kp[0], M, K, batch, bits=bits, x_bytes=x_bytes, plan=kp[1]
+            ),
+        )
+
+    def _pinned(self, M, K, batch, bits, policy):
+        name = policy.kernel
+        self._check_pin(name, bits)
+        if name == "triton" and bits == 16 and self._can_lower_triton(policy):
+            plan = plan_triton_gemv(M, K, batch)
+            if plan is not None:
+                return "triton", plan
+        return "ref", None
+
+    def coerce_plan(
+        self, plan: GemvPlan, M: int, K: int, batch: int,
+        pw: PackedWeights, policy: DispatchPolicy,
+    ) -> tuple[str, GemvPlan | None]:
+        """TPU-shaped plans don't transfer (different tiling constraints);
+        re-plan with the Triton builder under the same capability gate."""
+        return self.select_kernel(
+            M, K, batch, bits=pw.bits, block=pw.block, policy=policy
+        )
+
+    def autotune_candidates(self, key: GemvKey, pw: PackedWeights,
+                            policy: DispatchPolicy):
+        if not self._can_lower_triton(policy):
+            return [("ref", None)]
+        return self.candidate_plans(key.M, key.K, key.batch, key.bits)
+
+    # -- execution ----------------------------------------------------------
+
+    def execute(self, kernel: str, x: jnp.ndarray, pw: PackedWeights,
+                plan: GemvPlan | None, interpret: bool) -> jnp.ndarray:
+        if kernel == "triton":
+            return triton_gemv(x, pw.w_t, plan=plan, interpret=interpret)
+        if kernel == "ref":
+            return self._execute_ref(x, pw)
+        raise ValueError(f"unknown kernel {kernel!r}")
+
+
+BACKEND = register_backend(GpuBackend(), platforms=GPU_PLATFORMS)

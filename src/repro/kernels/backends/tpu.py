@@ -1,0 +1,222 @@
+"""TPU `GemvBackend`: the Pallas kernel set behind ``dispatch_gemv``.
+
+This is the PR-1 dispatcher's TPU-shaped logic relocated behind the backend
+contract, selection-for-selection identical (regression-tested in
+``tests/test_dispatch.py``):
+
+* weights quantized to int8/int4  ->  ``quant`` / ``quant4`` path (block
+  scale-factors walk with the weight tiles, §VI-D2);
+* ragged shapes (M % 128 or K % 8 != 0), batches above
+  ``policy.batch_threshold``, or sub-``min_pallas_bytes`` weights  ->
+  ``ref`` (XLA fallback; still uses the transposed placement);
+* otherwise the cost model compares output-stationary vs split-K: modeled
+  time = weight+activation bytes over HBM bandwidth scaled by *grid
+  occupancy* plus per-program grid overhead and, for split-K, the
+  partial-reduction traffic (paper §VI-F).
+
+On a non-TPU host this backend is the *validation harness*: interpret-mode
+Pallas re-executes every kernel body with jnp.  It is resolved there only by
+explicit opt-in (``DispatchPolicy(interpret=True)`` or ``backend="tpu"``) —
+implicit resolution on a CPU host serves through the CPU backend instead.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.backends.base import (
+    DEFAULT_POLICY,
+    CostModel,
+    DispatchPolicy,
+    GemvBackend,
+    GemvKey,
+    GemvPlan,
+    register_backend,
+)
+from repro.kernels.ops import (
+    SPLITK_MIN_BLOCKS,
+    PackedWeights,
+    _align_plan_to_block,
+    pallas_applicable,
+)
+from repro.kernels.pim_gemv import pim_gemv
+from repro.kernels.quant_gemv import quant4_gemv, quant_gemv
+from repro.kernels.splitk_gemv import splitk_gemv
+from repro.kernels.tpu_plan import plan_splitk, plan_tpu_gemv, valid_splitk_degree
+
+
+class TpuBackend(GemvBackend):
+    """v5e-class analogue: output-stationary / split-K / quant Pallas kernels."""
+
+    name = "tpu"
+    kernels = ("ref", "pim", "splitk", "quant", "quant4")
+    # Constants formerly module globals HBM_BW / XLA_GEMV_EFF /
+    # PALLAS_LAUNCH_US / PROGRAM_US / MIN_PARALLEL_BLOCKS in dispatch.py.
+    cost_model = CostModel(
+        bandwidth_gbps=819.0,          # v5e HBM bytes/s
+        gemv_efficiency=0.6,           # untuned row-major XLA GEMV
+        launch_us=2.0,                 # fixed pallas_call overhead
+        program_us=0.05,               # per-grid-program step overhead
+        min_parallel_blocks=SPLITK_MIN_BLOCKS,  # grid fill target (§VI-F)
+    )
+
+    # -- cost model ---------------------------------------------------------
+
+    def estimate_cost_us(
+        self, kernel: str, M: int, K: int, batch: int, *,
+        bits: int = 16, x_bytes: int = 2, plan: GemvPlan | None = None,
+    ) -> float:
+        """Memory-bound decode GEMV: bytes / (BW × efficiency) + overheads.
+
+        The Pallas kernels' efficiency is the *grid occupancy* — with fewer
+        independent M-blocks than ``min_parallel_blocks`` the machine is
+        starved, which is exactly the paper's small-M argument for split-K
+        (§VI-F); split-K recovers occupancy at the cost of writing and
+        re-reducing ``degree`` partial outputs.
+        """
+        cm = self.cost_model
+        io = self.io_bytes(M, K, batch, bits=bits, x_bytes=x_bytes)
+        if kernel == "ref":
+            return io / (cm.bandwidth_bps * cm.gemv_efficiency) * 1e6
+        assert plan is not None, kernel
+        degree = plan.split_k if kernel == "splitk" else 1
+        n_programs = degree * plan.n_m * plan.n_k
+        occupancy = min(1.0, (degree * plan.n_m) / cm.min_parallel_blocks)
+        t = io / (cm.bandwidth_bps * occupancy) * 1e6
+        t += cm.launch_us + cm.program_us * n_programs
+        if degree > 1:
+            # partial outputs: kernel writes + host-side reduce reads (f32)
+            t += 2 * degree * batch * M * 4 / cm.bandwidth_bps * 1e6
+        return t
+
+    # -- planning -----------------------------------------------------------
+
+    def candidate_plans(
+        self, M: int, K: int, batch: int, bits: int
+    ) -> list[tuple[str, GemvPlan | None]]:
+        w_bytes = 2 if bits == 16 else 1
+        cands: list[tuple[str, GemvPlan | None]] = [("ref", None)]
+        if not pallas_applicable(M, K):
+            return cands
+        base = plan_tpu_gemv(M, K, batch, w_bytes=w_bytes)
+        if bits < 16:
+            cands.append(("quant" if bits == 8 else "quant4", base))
+            return cands  # quantized paths are output-stationary only
+        cands.append(("pim", base))
+        deg = valid_splitk_degree(K)
+        if deg is not None:  # highest valid degree; lower ones are dominated
+            cands.append(
+                ("splitk", plan_splitk(M, K, batch, degree=deg,
+                                       w_bytes=w_bytes))
+            )
+        return cands
+
+    def autotune_candidates(self, key: GemvKey, pw: PackedWeights,
+                            policy: DispatchPolicy):
+        cands = self.candidate_plans(key.M, key.K, key.batch, key.bits)
+        return [
+            (k, _align_plan_to_block(p, key.M, key.K, key.batch, pw)
+             if k in ("quant", "quant4") else p)
+            for k, p in cands
+        ]
+
+    # -- selection ----------------------------------------------------------
+
+    def select_kernel(
+        self, M: int, K: int, batch: int, *,
+        bits: int = 16, block: int = 32, x_bytes: int = 2,
+        policy: DispatchPolicy = DEFAULT_POLICY,
+    ) -> tuple[str, GemvPlan | None]:
+        if policy.kernel != "auto":
+            return self._pinned(M, K, batch, bits, block, policy)
+        if not policy.use_pallas or not pallas_applicable(M, K):
+            return "ref", None
+        if bits < 16:
+            # Quantized weights always take the quant kernel when Pallas can
+            # run at all (scales interleaved with weight tiles, §VI-D2) —
+            # ref would dequantize in XLA at full f32 weight traffic,
+            # defeating the low-precision placement — so the size/batch
+            # guards below don't apply to them.
+            kernel, plan = self.candidate_plans(M, K, batch, bits)[-1]
+            return kernel, _align_plan_to_block(plan, M, K, batch, block)
+        if (
+            batch > policy.batch_threshold
+            or M * K * bits / 8 < policy.min_pallas_bytes
+        ):
+            return "ref", None
+        cands = self.candidate_plans(M, K, batch, bits)
+        return min(
+            cands,
+            key=lambda kp: self.estimate_cost_us(
+                kp[0], M, K, batch, bits=bits, x_bytes=x_bytes, plan=kp[1]
+            ),
+        )
+
+    def _pinned(self, M, K, batch, bits, block,
+                policy) -> tuple[str, GemvPlan | None]:
+        """Resolve an explicitly requested kernel (benchmark fixed rows).
+
+        The pin cannot override the weight representation: quantized weights
+        always need a dequantizing kernel (pim/splitk on int8 codes would be
+        silently wrong), and ``quant`` on float weights has no scales.
+        """
+        name = policy.kernel
+        self._check_pin(name, bits)
+        if name == "ref" or not pallas_applicable(M, K):
+            return "ref", None
+        w_bytes = 2 if bits == 16 else 1
+        if bits < 16:
+            # any Pallas pin on quantized weights resolves to the quant path
+            return (
+                "quant" if bits == 8 else "quant4",
+                _align_plan_to_block(
+                    plan_tpu_gemv(M, K, batch, w_bytes=w_bytes),
+                    M, K, batch, block,
+                ),
+            )
+        if name == "splitk":
+            deg = valid_splitk_degree(K)
+            if deg is None:
+                return "ref", None
+            return "splitk", plan_splitk(M, K, batch, degree=deg,
+                                         w_bytes=w_bytes)
+        return "pim", plan_tpu_gemv(M, K, batch, w_bytes=w_bytes)
+
+    def coerce_plan(
+        self, plan: GemvPlan, M: int, K: int, batch: int,
+        pw: PackedWeights, policy: DispatchPolicy,
+    ) -> tuple[str, GemvPlan | None]:
+        """Legacy ``placed_gemv(plan=...)``: the plan names the kernel."""
+        if not policy.use_pallas or not pallas_applicable(M, K):
+            return "ref", None  # legacy placed_gemv fallback guard
+        if pw.bits < 16:
+            kernel = "quant" if pw.bits == 8 else "quant4"
+            return kernel, _align_plan_to_block(plan, M, K, batch, pw)
+        return ("splitk" if plan.split_k > 1 else "pim"), plan
+
+    # -- execution ----------------------------------------------------------
+
+    def default_interpret(self) -> bool:
+        """Off-TPU this backend IS the interpret-mode validation harness;
+        on a real TPU the kernels lower natively."""
+        return jax.default_backend() != "tpu"
+
+    def execute(self, kernel: str, x: jnp.ndarray, pw: PackedWeights,
+                plan: GemvPlan | None, interpret: bool) -> jnp.ndarray:
+        if kernel == "ref":
+            return self._execute_ref(x, pw)
+        if kernel == "pim":
+            return pim_gemv(x, pw.w_t, plan=plan, interpret=interpret)
+        if kernel == "splitk":
+            return splitk_gemv(x, pw.w_t, plan=plan, interpret=interpret)
+        if kernel == "quant":
+            return quant_gemv(x, pw.w_t, pw.scales, plan=plan,
+                              block=pw.block, interpret=interpret)
+        if kernel == "quant4":
+            return quant4_gemv(x, pw.w_t, pw.scales, plan=plan,
+                               block=pw.block, interpret=interpret)
+        raise ValueError(f"unknown kernel {kernel!r}")
+
+
+BACKEND = register_backend(TpuBackend(), platforms=("tpu",))

@@ -1,155 +1,122 @@
-"""Unified GEMV dispatch: one entry point, shape-aware kernel selection.
+"""Unified GEMV dispatch: one entry point, pluggable backends.
 
-The paper's core claim is that GEMV speedup comes from choosing the right
-placement *per matrix shape* — PIMnast balances tile shape, tile order, and
-CR-degree per (M, K) instead of fixing one layout (§IV, Algorithm 1).  This
-module is that balancing step at execution time for the TPU analogue: every
-GEMV in the repo (serving decode projections, ``ops.placed_gemv``, the
-benchmarks) routes through :func:`dispatch_gemv`, which
+The paper's core claim is that GEMV speedup comes from placement decisions
+*parameterized by the memory system* (§IV, Algorithm 1).  PR-1 hard-coded
+one memory system — the v5e-class TPU analogue — into this module; the
+dispatcher is now a thin entry point over the :mod:`repro.kernels.backends`
+registry, where each :class:`~repro.kernels.backends.GemvBackend` bundles
+its kernel set, its frozen cost-model constants, its plan builder, and its
+autotune-table namespace (DESIGN.md §6).  Every GEMV in the repo (serving
+decode projections, ``ops.placed_gemv``, the benchmarks) still routes
+through :func:`dispatch_gemv`, which
 
-1. **normalizes weights** into one :class:`PackedWeights` representation
+1. **resolves a backend** — explicit ``DispatchPolicy.backend`` override,
+   else the ``interpret=True`` validation opt-in (TPU analogue), else
+   ``jax.default_backend()`` (cpu -> XLA-native, tpu -> Pallas,
+   gpu -> Pallas-Triton behind a capability check);
+2. **normalizes weights** into one :class:`PackedWeights` representation
    (transposed K-major storage; optional int8/int4 + block scales),
-2. **selects a kernel** — ``ref`` (XLA), ``pim`` (output-stationary Pallas),
-   ``splitk`` (paper §VI-F), or the quantized variants — from an analytical
-   cost model over (M, K, batch, dtype), and
-3. **memoizes** the resulting :class:`~repro.kernels.tpu_plan.TPUGemvPlan`
-   in a process-level plan cache keyed on shape + dtype + backend.
-
-Selection policy (``DispatchPolicy``)
--------------------------------------
-* weights quantized to int8/int4  ->  ``quant`` / ``quant4`` path (block
-  scale-factors walk with the weight tiles, §VI-D2);
-* ragged shapes (M % 128 or K % 8 != 0), batches above
-  ``batch_threshold``, or sub-``min_pallas_bytes`` weights  ->  ``ref``
-  (XLA fallback; still uses the transposed placement);
-* otherwise the cost model compares output-stationary vs split-K: modeled
-  time = weight+activation bytes over HBM bandwidth scaled by *grid
-  occupancy* (few M-blocks starve the machine — the paper's small-M rule)
-  plus per-program grid overhead and, for split-K, the partial-reduction
-  traffic.  Small-M tall-K GEMVs therefore pick split-K, large GEMVs pick
-  the output-stationary kernel, and tiny GEMVs stay on XLA.
+3. **delegates selection** to the backend — cost model, loaded autotune
+   table entry, or measured autotune, in that precedence — and
+4. **memoizes** the (kernel, plan) decision in a process-level, thread-safe
+   plan cache keyed on shape + dtype + backend + policy.
 
 Plan cache and autotuning
 -------------------------
-``_PLAN_CACHE`` memoizes (kernel, plan) per :class:`GemvKey` so repeated
+``_PLAN_CACHE`` memoizes decisions per :class:`GemvKey` so repeated
 dispatches of one shape (every decode step, every scanned layer) do zero
-planning work; ``plan_cache_stats()`` exposes hit counts.  With
-``policy.autotune=True`` the candidate plans are *timed* (interpret mode on
-CPU; on a real TPU the same harness times compiled kernels) and the winner
-is persisted to a JSON table (``policy.table_path``) that later runs — and
-other processes — reload via ``load_autotune_table``.  Table entries
-override the cost model, mirroring how PIMnast ships pre-swept placements
-per shape instead of re-running Algorithm 1 at inference time.
+planning work; ``plan_cache_stats()`` exposes hit counts.  All cache and
+table mutation is lock-guarded: an :class:`~repro.serving.engine.Engine`
+can be stepped from a thread pool.  With ``policy.autotune=True`` the
+backend times its own candidates and persists winners to the JSON table at
+``policy.table_path`` under the backend's namespace, so one table file
+serves a heterogeneous fleet (see ``backends/base.py:AutotuneTable``).
+
+Deprecated surface
+------------------
+The PR-1 free functions (``select_kernel``, ``estimate_cost_us``,
+``autotune_gemv``) and cost-model module constants (``HBM_BW``,
+``XLA_GEMV_EFF``, ``PALLAS_LAUNCH_US``, ``PROGRAM_US``,
+``MIN_PARALLEL_BLOCKS``, ``KERNELS``) remain as thin shims over the ``tpu``
+backend — the one whose behavior they described — and warn on use.  New
+code should go through ``get_backend(...)`` / the backend methods.
 """
 
 from __future__ import annotations
 
-import json
-import os
-import time
-from dataclasses import dataclass
+import threading
+import warnings
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.kernels import ref
+from repro.kernels.backends import (
+    AutotuneTable,
+    DEFAULT_POLICY,
+    DispatchPolicy,
+    GemvKey,
+    GemvPlan,
+    available_backends,
+    get_backend,
+    resolve_backend,
+    time_gemv_us,  # noqa: F401  (re-export: benchmarks import it from here)
+)
+from repro.kernels.backends.base import entry_to_plan as _entry_to_plan
 from repro.kernels.ops import (
-    PackedWeight,
-    SPLITK_MIN_BLOCKS,
-    _align_plan_to_block,
-    default_interpret,
+    PackedWeights,
     pack_weight,
-    pallas_applicable,
-    quantize_weight,
 )
-from repro.kernels.pim_gemv import pim_gemv
-from repro.kernels.quant_gemv import quant4_gemv, quant_gemv
-from repro.kernels.splitk_gemv import splitk_gemv
-from repro.kernels.tpu_plan import (
-    TPUGemvPlan,
-    plan_splitk,
-    plan_tpu_gemv,
-    valid_splitk_degree,
-)
+from repro.kernels.tpu_plan import TPUGemvPlan
 
-# One canonical name for the normalized weight representation; the class
-# itself lives in ops.py (prepack is a deployment-time cost, §V-A2).
-PackedWeights = PackedWeight
+__all__ = [
+    "DispatchPolicy", "DEFAULT_POLICY", "GemvKey", "GemvPlan",
+    "dispatch_gemv", "dispatch_dense", "as_packed", "from_transposed",
+    "plan_cache_stats", "clear_plan_cache",
+    "load_autotune_table", "save_autotune_table", "clear_autotune_table",
+    "available_backends", "get_backend", "resolve_backend", "time_gemv_us",
+    "PackedWeights",
+]
 
 # ---------------------------------------------------------------------------
-# Cost-model constants (v5e-class analogue; see benchmarks/kernel_bench.py)
+# Process-level plan cache (thread-safe) + the shared autotune table
 # ---------------------------------------------------------------------------
 
-HBM_BW = 819e9          # bytes/s
-XLA_GEMV_EFF = 0.6      # fraction of peak BW the untuned row-major GEMV gets
-PALLAS_LAUNCH_US = 2.0  # fixed pallas_call overhead
-PROGRAM_US = 0.05       # per-grid-program step overhead
-MIN_PARALLEL_BLOCKS = SPLITK_MIN_BLOCKS  # grid fill target (paper §VI-F)
-
-KERNELS = ("ref", "pim", "splitk", "quant", "quant4")
-
-
-@dataclass(frozen=True)
-class DispatchPolicy:
-    """How :func:`dispatch_gemv` picks and runs a kernel.
-
-    ``kernel="auto"`` uses the cost model; any other value pins the kernel
-    (the benchmark's fixed-kernel rows).  ``autotune=True`` replaces the
-    model with measured timings, memoized in the JSON table at
-    ``table_path`` when set.
-    """
-
-    kernel: str = "auto"          # auto | ref | pim | splitk | quant
-    autotune: bool = False
-    table_path: str | None = None
-    interpret: bool | None = None  # None -> non-TPU backends interpret
-    use_pallas: bool = True
-    batch_threshold: int = 8      # above this, decode is matmul-shaped: XLA
-    min_pallas_bytes: int = 1 << 20  # tiny weights: launch overhead dominates
-
-
-DEFAULT_POLICY = DispatchPolicy()
-
-
-@dataclass(frozen=True)
-class GemvKey:
-    """Process-level plan-cache key: shape + dtype + backend."""
-
-    M: int
-    K: int
-    batch: int
-    bits: int
-    block: int
-    dtype: str
-    backend: str
-
-    def table_key(self) -> str:
-        return (
-            f"{self.M}x{self.K}xb{self.batch}_w{self.bits}g{self.block}"
-            f"_{self.dtype}_{self.backend}"
-        )
-
-
+_LOCK = threading.Lock()
 _PLAN_CACHE: dict[tuple[GemvKey, DispatchPolicy],
-                  tuple[str, TPUGemvPlan | None]] = {}
+                  tuple[str, GemvPlan | None]] = {}
+# Per-key in-flight guards: concurrent cold-cache dispatches of the SAME
+# shape serialize on one selection/autotune sweep instead of each running
+# it (the sweep is seconds when autotuning); distinct shapes stay parallel.
+_KEY_LOCKS: dict[tuple[GemvKey, DispatchPolicy], threading.Lock] = {}
 _CACHE_STATS = {"hits": 0, "misses": 0}
-_AUTOTUNE_TABLE: dict[str, dict] = {}
-_LOADED_TABLE_PATHS: set[str] = set()
+_AUTOTUNE_TABLE = AutotuneTable()
 
 
 def plan_cache_stats() -> dict[str, int]:
-    return dict(_CACHE_STATS)
+    with _LOCK:
+        return dict(_CACHE_STATS)
 
 
 def clear_plan_cache() -> None:
-    _PLAN_CACHE.clear()
-    _CACHE_STATS.update(hits=0, misses=0)
+    with _LOCK:
+        _PLAN_CACHE.clear()
+        _KEY_LOCKS.clear()
+        _CACHE_STATS.update(hits=0, misses=0)
 
 
 def clear_autotune_table() -> None:
     _AUTOTUNE_TABLE.clear()
-    _LOADED_TABLE_PATHS.clear()
+
+
+def load_autotune_table(path: str) -> dict[str, dict[str, dict]]:
+    """Load a persisted autotune table (v2 namespaced or v1 flat) into the
+    process-level table; returns the parsed ``{backend: {key: entry}}``."""
+    return _AUTOTUNE_TABLE.load(path)
+
+
+def save_autotune_table(path: str) -> None:
+    """Merge this process's per-backend namespaces into the table at
+    ``path`` (read-merge-write, atomic rename; see AutotuneTable.save)."""
+    _AUTOTUNE_TABLE.save(path)
 
 
 # ---------------------------------------------------------------------------
@@ -166,7 +133,7 @@ def as_packed(weights) -> PackedWeights:
     tuple form (K halves, block doubles — the decode would be silently
     wrong) and must come pre-wrapped as PackedWeights.
     """
-    if isinstance(weights, PackedWeight):
+    if isinstance(weights, PackedWeights):
         return weights
     if isinstance(weights, tuple) and len(weights) == 2:
         w_q, scales = jnp.asarray(weights[0]), jnp.asarray(weights[1])
@@ -184,274 +151,15 @@ def as_packed(weights) -> PackedWeights:
                 f"scales {scales.shape} do not tile int8 weights "
                 f"{w_q.shape} as [K // block, M]"
             )
-        return PackedWeight(w_t=w_q, scales=scales, bits=8,
-                            block=K // scales.shape[0])
+        return PackedWeights(w_t=w_q, scales=scales, bits=8,
+                             block=K // scales.shape[0])
     return pack_weight(jnp.asarray(weights))
 
 
 def from_transposed(w_t: jnp.ndarray) -> PackedWeights:
     """Wrap an already K-major [K, M] dense weight without re-transposing
     (model layers store projections as [d_in, d_out] = [K, M] natively)."""
-    return PackedWeight(w_t=w_t)
-
-
-# ---------------------------------------------------------------------------
-# Analytical cost model
-# ---------------------------------------------------------------------------
-
-
-def estimate_cost_us(
-    kernel: str,
-    M: int,
-    K: int,
-    batch: int,
-    *,
-    bits: int = 16,
-    x_bytes: int = 2,
-    plan: TPUGemvPlan | None = None,
-) -> float:
-    """Modeled GEMV latency in microseconds on the v5e-class analogue.
-
-    Memory-bound decode GEMV: time = bytes / (BW * efficiency) + overheads.
-    The Pallas kernels' efficiency is the *grid occupancy* — with fewer
-    independent M-blocks than ``MIN_PARALLEL_BLOCKS`` the machine is
-    starved, which is exactly the paper's small-M argument for split-K
-    (§VI-F); split-K recovers occupancy at the cost of writing and
-    re-reducing ``degree`` partial outputs.
-    """
-    w_bytes = M * K * bits / 8
-    io_bytes = w_bytes + batch * K * x_bytes + batch * M * x_bytes
-    if kernel == "ref":
-        return io_bytes / (HBM_BW * XLA_GEMV_EFF) * 1e6
-    assert plan is not None, kernel
-    degree = plan.split_k if kernel == "splitk" else 1
-    n_programs = degree * plan.n_m * plan.n_k
-    occupancy = min(1.0, (degree * plan.n_m) / MIN_PARALLEL_BLOCKS)
-    t = io_bytes / (HBM_BW * occupancy) * 1e6
-    t += PALLAS_LAUNCH_US + PROGRAM_US * n_programs
-    if degree > 1:
-        # partial outputs: kernel writes + host-side reduce reads (f32)
-        t += 2 * degree * batch * M * 4 / HBM_BW * 1e6
-    return t
-
-
-def _candidate_plans(
-    M: int, K: int, batch: int, bits: int
-) -> list[tuple[str, TPUGemvPlan | None]]:
-    """All kernels applicable to this shape, with their plans."""
-    w_bytes = 2 if bits == 16 else 1
-    cands: list[tuple[str, TPUGemvPlan | None]] = [("ref", None)]
-    if not pallas_applicable(M, K):
-        return cands
-    base = plan_tpu_gemv(M, K, batch, w_bytes=w_bytes)
-    if bits < 16:
-        cands.append(("quant" if bits == 8 else "quant4", base))
-        return cands  # quantized paths are output-stationary only
-    cands.append(("pim", base))
-    deg = valid_splitk_degree(K)
-    if deg is not None:  # highest valid degree; lower ones are dominated
-        cands.append(
-            ("splitk", plan_splitk(M, K, batch, degree=deg,
-                                   w_bytes=w_bytes))
-        )
-    return cands
-
-
-def select_kernel(
-    M: int,
-    K: int,
-    batch: int,
-    *,
-    bits: int = 16,
-    block: int = 32,
-    x_bytes: int = 2,
-    policy: DispatchPolicy = DEFAULT_POLICY,
-) -> tuple[str, TPUGemvPlan | None]:
-    """Pure selection: (kernel name, plan) for one GEMV shape.
-
-    The returned plan is directly executable — quant plans come back
-    already aligned to the ``block`` scale granularity.
-    """
-    if policy.kernel != "auto":
-        return _pinned(M, K, batch, bits, block, policy)
-    if not policy.use_pallas or not pallas_applicable(M, K):
-        return "ref", None
-    if bits < 16:
-        # Quantized weights always take the quant kernel when Pallas can
-        # run at all (scales interleaved with weight tiles, §VI-D2) — ref
-        # would dequantize in XLA at full f32 weight traffic, defeating the
-        # low-precision placement — so the size/batch guards below don't
-        # apply to them.
-        kernel, plan = _candidate_plans(M, K, batch, bits)[-1]
-        return kernel, _align_plan_to_block(plan, M, K, batch, block)
-    if (
-        batch > policy.batch_threshold
-        or M * K * bits / 8 < policy.min_pallas_bytes
-    ):
-        return "ref", None
-    cands = _candidate_plans(M, K, batch, bits)
-    return min(
-        cands,
-        key=lambda kp: estimate_cost_us(
-            kp[0], M, K, batch, bits=bits, x_bytes=x_bytes, plan=kp[1]
-        ),
-    )
-
-
-def _pinned(M, K, batch, bits, block,
-            policy) -> tuple[str, TPUGemvPlan | None]:
-    """Resolve an explicitly requested kernel (benchmark fixed rows).
-
-    The pin cannot override the weight representation: quantized weights
-    always need a dequantizing kernel (pim/splitk on int8 codes would be
-    silently wrong), and ``quant`` on float weights has no scales to apply.
-    """
-    name = policy.kernel
-    if name not in KERNELS:
-        raise ValueError(f"unknown kernel {name!r}; expected one of {KERNELS}")
-    if name in ("quant", "quant4") and bits == 16:
-        raise ValueError(
-            f"kernel={name!r} requires int8/int4 PackedWeights"
-        )
-    if name == "ref" or not pallas_applicable(M, K):
-        return "ref", None
-    w_bytes = 2 if bits == 16 else 1
-    if bits < 16:
-        # any Pallas pin on quantized weights resolves to the quant path
-        return ("quant" if bits == 8 else "quant4"), _align_plan_to_block(
-            plan_tpu_gemv(M, K, batch, w_bytes=w_bytes), M, K, batch, block)
-    if name == "splitk":
-        deg = valid_splitk_degree(K)
-        if deg is None:
-            return "ref", None
-        return "splitk", plan_splitk(M, K, batch, degree=deg,
-                                     w_bytes=w_bytes)
-    return "pim", plan_tpu_gemv(M, K, batch, w_bytes=w_bytes)
-
-
-# ---------------------------------------------------------------------------
-# Autotune: measured selection, persisted across runs
-# ---------------------------------------------------------------------------
-
-
-def load_autotune_table(path: str) -> dict[str, dict]:
-    """Load a persisted autotune table into the process-level cache."""
-    with open(path) as f:
-        table = json.load(f)
-    _AUTOTUNE_TABLE.update(table)
-    _LOADED_TABLE_PATHS.add(os.path.abspath(path))
-    return table
-
-
-def save_autotune_table(path: str) -> None:
-    """Merge this process's entries into the table at ``path``.
-
-    Read-merge-write with an atomic rename: a tuner never erases entries
-    another run persisted for shapes it didn't tune itself, and readers
-    never see a half-written JSON file. (Two tuners racing on the *same*
-    shape keep the last writer's timing — harmless, both are valid.)
-    """
-    path = os.path.abspath(path)
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    merged: dict[str, dict] = {}
-    try:
-        with open(path) as f:
-            merged = json.load(f)
-    except (FileNotFoundError, json.JSONDecodeError):
-        pass
-    merged.update(_AUTOTUNE_TABLE)
-    tmp = f"{path}.{os.getpid()}.tmp"
-    with open(tmp, "w") as f:
-        json.dump(merged, f, indent=1, sort_keys=True)
-    os.replace(tmp, path)
-
-
-def _entry_to_plan(entry: dict) -> tuple[str, TPUGemvPlan | None]:
-    if entry["kernel"] == "ref":
-        return "ref", None
-    return entry["kernel"], TPUGemvPlan(
-        m_blk=entry["m_blk"], k_blk=entry["k_blk"], n_m=entry["n_m"],
-        n_k=entry["n_k"], vmem_bytes=entry.get("vmem_bytes", 0),
-        split_k=entry.get("split_k", 1),
-    )
-
-
-def _plan_to_entry(kernel: str, plan: TPUGemvPlan | None,
-                   elapsed_us: float) -> dict:
-    entry = {"kernel": kernel, "us": elapsed_us}
-    if plan is not None:
-        entry.update(
-            m_blk=plan.m_blk, k_blk=plan.k_blk, n_m=plan.n_m, n_k=plan.n_k,
-            vmem_bytes=plan.vmem_bytes, split_k=plan.split_k,
-        )
-    return entry
-
-
-def time_gemv_us(run, reps: int = 3) -> float:
-    """Best-of-``reps`` wall clock (µs) for a thunk returning a jax array.
-
-    Shared by the autotuner and benchmarks/kernel_bench.py.
-    """
-    run().block_until_ready()  # compile / warm up
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        run().block_until_ready()
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6
-
-
-def autotune_gemv(
-    key: GemvKey, *, policy: DispatchPolicy
-) -> tuple[str, TPUGemvPlan | None]:
-    """Time every candidate kernel on synthetic inputs; persist the winner.
-
-    Interpret-mode wall clock on CPU characterizes the harness, not the TPU
-    — but the *relative* ranking it produces is what the table stores, and
-    on a TPU backend the same timing loop runs the compiled kernels.
-    Inputs are synthesized from the key (never the caller's arrays, which
-    may be tracers when dispatch happens inside a ``jit`` trace).
-    """
-    # Pick up entries persisted by earlier runs before tuning anything.
-    if policy.table_path:
-        p = os.path.abspath(policy.table_path)
-        if p not in _LOADED_TABLE_PATHS:
-            _LOADED_TABLE_PATHS.add(p)
-            if os.path.exists(p):
-                load_autotune_table(p)
-    tkey = key.table_key()
-    if tkey in _AUTOTUNE_TABLE:
-        return _entry_to_plan(_AUTOTUNE_TABLE[tkey])
-    interpret = (
-        policy.interpret if policy.interpret is not None
-        else default_interpret()
-    )
-    rng = np.random.default_rng(0)
-    x = jnp.asarray(
-        rng.standard_normal((key.batch, key.K)).astype(np.float32)
-    ).astype(key.dtype)
-    w = rng.standard_normal((key.M, key.K)).astype(np.float32)
-    if key.bits < 16:
-        pw = quantize_weight(w, bits=key.bits, block=key.block)
-    else:
-        pw = pack_weight(jnp.asarray(w).astype(key.dtype))
-    best: tuple[float, str, TPUGemvPlan | None] | None = None
-    for kernel, plan in _candidate_plans(key.M, key.K, key.batch, key.bits):
-        if kernel in ("quant", "quant4"):
-            plan = _align_plan_to_block(plan, key.M, key.K, key.batch, pw)
-        try:
-            us = time_gemv_us(
-                lambda: _execute(kernel, x, pw, plan, interpret)
-            )
-        except Exception:  # a candidate that fails to lower never wins
-            continue
-        if best is None or us < best[0]:
-            best = (us, kernel, plan)
-    assert best is not None, key
-    _AUTOTUNE_TABLE[tkey] = _plan_to_entry(best[1], best[2], best[0])
-    if policy.table_path:
-        save_autotune_table(policy.table_path)
-    return best[1], best[2]
+    return PackedWeights(w_t=w_t)
 
 
 # ---------------------------------------------------------------------------
@@ -459,56 +167,47 @@ def autotune_gemv(
 # ---------------------------------------------------------------------------
 
 
-def _resolve(
-    key: GemvKey, pw: PackedWeights, policy: DispatchPolicy
-) -> tuple[str, TPUGemvPlan | None]:
+def _resolve(backend, key: GemvKey,
+             policy: DispatchPolicy) -> tuple[str, GemvPlan | None]:
     """Memoized (kernel, plan) for one shape: cache -> table -> model.
 
     The cache key includes the (frozen, hashable) policy: a pinned-kernel
     or no-Pallas policy must never inherit another policy's decision for
-    the same shape.
+    the same shape.  Table entries live in the backend's namespace and
+    only stand in for the *cost model* — an unpinned auto policy; pins and
+    ``use_pallas=False`` outrank any table entry.
     """
-    cached = _PLAN_CACHE.get((key, policy))
-    if cached is not None:
-        _CACHE_STATS["hits"] += 1
-        return cached
-    _CACHE_STATS["misses"] += 1
-    # Measured decisions (autotune / loaded table) only stand in for the
-    # cost model — i.e. for an unpinned, Pallas-enabled auto policy. A
-    # pinned kernel or use_pallas=False must outrank any table entry.
-    tuned = policy.kernel == "auto" and policy.use_pallas
-    if tuned and policy.autotune:
-        kernel, plan = autotune_gemv(key, policy=policy)
-    elif tuned and key.table_key() in _AUTOTUNE_TABLE:
-        kernel, plan = _entry_to_plan(_AUTOTUNE_TABLE[key.table_key()])
-    else:
-        kernel, plan = select_kernel(
-            key.M, key.K, key.batch, bits=key.bits, block=key.block,
-            x_bytes=jnp.dtype(key.dtype).itemsize, policy=policy,
-        )
-    # every branch above returns quant plans already block-aligned
-    _PLAN_CACHE[(key, policy)] = (kernel, plan)
+    with _LOCK:
+        cached = _PLAN_CACHE.get((key, policy))
+        if cached is not None:
+            _CACHE_STATS["hits"] += 1
+            return cached
+        key_lock = _KEY_LOCKS.setdefault((key, policy), threading.Lock())
+    with key_lock:
+        with _LOCK:  # a racer may have finished while we waited
+            cached = _PLAN_CACHE.get((key, policy))
+            if cached is not None:
+                _CACHE_STATS["hits"] += 1
+                return cached
+            _CACHE_STATS["misses"] += 1
+        tuned = policy.kernel == "auto" and policy.use_pallas
+        if tuned and policy.autotune:
+            kernel, plan = backend.autotune_gemv(
+                key, policy=policy, table=_AUTOTUNE_TABLE
+            )
+        elif tuned and (
+            entry := _AUTOTUNE_TABLE.get(backend.name, key.table_key())
+        ) is not None:
+            kernel, plan = _entry_to_plan(entry)
+        else:
+            kernel, plan = backend.select_kernel(
+                key.M, key.K, key.batch, bits=key.bits, block=key.block,
+                x_bytes=jnp.dtype(key.dtype).itemsize, policy=policy,
+            )
+        # every branch above returns directly executable (aligned) plans
+        with _LOCK:
+            _PLAN_CACHE[(key, policy)] = (kernel, plan)
     return kernel, plan
-
-
-def _execute(kernel, x, pw, plan, interpret):
-    if kernel == "ref":
-        if pw.bits == 16:
-            return ref.gemv_ref(pw.w_t, x)
-        if pw.bits == 8:
-            return ref.quant_gemv_ref(pw.w_t, pw.scales, x, pw.block)
-        return ref.quant4_gemv_ref(pw.w_t, pw.scales, x, pw.block)
-    if kernel == "pim":
-        return pim_gemv(x, pw.w_t, plan=plan, interpret=interpret)
-    if kernel == "splitk":
-        return splitk_gemv(x, pw.w_t, plan=plan, interpret=interpret)
-    if kernel == "quant":
-        return quant_gemv(x, pw.w_t, pw.scales, plan=plan, block=pw.block,
-                          interpret=interpret)
-    if kernel == "quant4":
-        return quant4_gemv(x, pw.w_t, pw.scales, plan=plan, block=pw.block,
-                           interpret=interpret)
-    raise ValueError(f"unknown kernel {kernel!r}")
 
 
 def dispatch_gemv(
@@ -520,9 +219,10 @@ def dispatch_gemv(
 ) -> jnp.ndarray:
     """The single GEMV entry point: out[B, M] = x[B, K] @ W.T.
 
-    ``weights`` is anything :func:`as_packed` accepts.  Kernel selection and
-    planning happen at trace time from static shapes (zero runtime cost
-    under ``jit``); a ``plan`` argument bypasses selection entirely.
+    ``weights`` is anything :func:`as_packed` accepts.  Backend resolution,
+    kernel selection, and planning happen at trace time from static shapes
+    (zero runtime cost under ``jit``); a ``plan`` argument bypasses
+    selection (the backend coerces it to one of its own kernels).
 
     Eager callers should prepack once (:func:`~repro.kernels.ops.pack_weight`
     / :func:`from_transposed`): passing a raw [M, K] array re-transposes it
@@ -530,40 +230,22 @@ def dispatch_gemv(
     per GEMV.  Under ``jit`` the transpose is traced once and fused.
     """
     policy = policy or DEFAULT_POLICY
+    backend = resolve_backend(policy)
     pw = as_packed(weights)
     K, M = pw.shape
     B = x.shape[0]
     assert x.shape[1] == K, (x.shape, pw.shape)
     interpret = (
         policy.interpret if policy.interpret is not None
-        else default_interpret()
+        else backend.default_interpret()
     )
     if plan is not None:
-        if not policy.use_pallas or not pallas_applicable(M, K):
-            kernel, plan = "ref", None  # legacy placed_gemv fallback guard
-        elif pw.bits < 16:
-            kernel = "quant" if pw.bits == 8 else "quant4"
-            plan = _align_plan_to_block(plan, M, K, B, pw)
-        else:
-            kernel = "splitk" if plan.split_k > 1 else "pim"
-    elif (
-        interpret and policy.interpret is None
-        and policy.kernel == "auto" and not policy.autotune
-    ):
-        # Non-TPU backend and the caller didn't explicitly opt into
-        # interpret mode (policy.interpret is None): interpret-mode Pallas
-        # is a validation harness that re-executes the kernel body per grid
-        # program — orders of magnitude slower than XLA on CPU. The cost
-        # model models the TPU, so its pick is wrong for this runtime;
-        # serve decode through the XLA path instead. Explicit
-        # interpret=True (tests, benchmarks), pinned kernels, and autotune
-        # (which times the actual runtime) all bypass this downgrade.
-        kernel, plan = "ref", None
+        kernel, plan = backend.coerce_plan(plan, M, K, B, pw, policy)
     else:
         key = GemvKey(M=M, K=K, batch=B, bits=pw.bits, block=pw.block,
-                      dtype=str(x.dtype), backend=jax.default_backend())
-        kernel, plan = _resolve(key, pw, policy)
-    return _execute(kernel, x, pw, plan, interpret)
+                      dtype=str(x.dtype), backend=backend.name)
+        kernel, plan = _resolve(backend, key, policy)
+    return backend.execute(kernel, x, pw, plan, interpret)
 
 
 def dispatch_dense(
@@ -578,3 +260,102 @@ def dispatch_dense(
     out = dispatch_gemv(x.reshape(B * S, d), from_transposed(w_t),
                         policy=policy)
     return out.reshape(B, S, out.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Deprecated PR-1 surface: thin shims over the `tpu` backend
+# ---------------------------------------------------------------------------
+
+_DEPRECATED_CONSTANTS = {
+    # old module global -> accessor on the tpu backend's CostModel
+    "HBM_BW": lambda cm: cm.bandwidth_bps,
+    "XLA_GEMV_EFF": lambda cm: cm.gemv_efficiency,
+    "PALLAS_LAUNCH_US": lambda cm: cm.launch_us,
+    "PROGRAM_US": lambda cm: cm.program_us,
+    "MIN_PARALLEL_BLOCKS": lambda cm: cm.min_parallel_blocks,
+}
+
+
+def __getattr__(name: str):
+    if name in _DEPRECATED_CONSTANTS:
+        warnings.warn(
+            f"repro.kernels.dispatch.{name} is deprecated; cost-model "
+            f"constants live on get_backend(<name>).cost_model",
+            DeprecationWarning, stacklevel=2,
+        )
+        return _DEPRECATED_CONSTANTS[name](get_backend("tpu").cost_model)
+    if name == "KERNELS":
+        warnings.warn(
+            "repro.kernels.dispatch.KERNELS is deprecated; use "
+            "get_backend(<name>).kernels",
+            DeprecationWarning, stacklevel=2,
+        )
+        return get_backend("tpu").kernels
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def _warn_deprecated_shim(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.kernels.dispatch.{old} is deprecated; use {new}",
+        DeprecationWarning, stacklevel=3,
+    )
+
+
+def select_kernel(
+    M: int,
+    K: int,
+    batch: int,
+    *,
+    bits: int = 16,
+    block: int = 32,
+    x_bytes: int = 2,
+    policy: DispatchPolicy = DEFAULT_POLICY,
+) -> tuple[str, GemvPlan | None]:
+    """Deprecated: ``get_backend("tpu").select_kernel`` (or resolve one).
+
+    Kept as the PR-1 free function: it always answered for the TPU-analogue
+    kernel set regardless of host platform, so it delegates to the ``tpu``
+    backend explicitly (honoring a ``policy.backend`` override if set).
+    """
+    _warn_deprecated_shim("select_kernel",
+                          "get_backend(<name>).select_kernel")
+    backend = get_backend(policy.backend or "tpu")
+    return backend.select_kernel(
+        M, K, batch, bits=bits, block=block, x_bytes=x_bytes, policy=policy
+    )
+
+
+def estimate_cost_us(
+    kernel: str,
+    M: int,
+    K: int,
+    batch: int,
+    *,
+    bits: int = 16,
+    x_bytes: int = 2,
+    plan: GemvPlan | None = None,
+) -> float:
+    """Deprecated: ``get_backend(<name>).estimate_cost_us``."""
+    _warn_deprecated_shim("estimate_cost_us",
+                          "get_backend(<name>).estimate_cost_us")
+    return get_backend("tpu").estimate_cost_us(
+        kernel, M, K, batch, bits=bits, x_bytes=x_bytes, plan=plan
+    )
+
+
+def autotune_gemv(
+    key: GemvKey, *, policy: DispatchPolicy
+) -> tuple[str, GemvPlan | None]:
+    """Deprecated: ``get_backend(<name>).autotune_gemv(key, policy=...,
+    table=...)``.
+
+    Like the other PR-1 shims this delegates to the ``tpu`` backend
+    (honoring a ``policy.backend`` override): PR-1 always tuned the
+    TPU-analogue Pallas candidates and returned their TPU-tiled plans
+    regardless of the platform stored in ``key.backend``, and legacy
+    callers feed the returned plan to those kernels.
+    """
+    _warn_deprecated_shim("autotune_gemv",
+                          "get_backend(<name>).autotune_gemv")
+    backend = get_backend(policy.backend or "tpu")
+    return backend.autotune_gemv(key, policy=policy, table=_AUTOTUNE_TABLE)

@@ -1,6 +1,6 @@
 """Weight packing + the legacy ``placed_gemv`` entry point.
 
-This module owns the :class:`PackedWeight` representation (one-time prepack
+This module owns the :class:`PackedWeights` representation (one-time prepack
 into the transposed "column-major" layout, paper §IV-A1/§V-A2) and the
 quantizer.  Kernel *selection* lives in :mod:`repro.kernels.dispatch`;
 ``placed_gemv`` is kept as a thin shim over :func:`dispatch.dispatch_gemv`
@@ -49,9 +49,15 @@ def choose_plan(M: int, K: int, batch: int, w_bytes: int = 2) -> TPUGemvPlan:
 
 
 @dataclass(frozen=True)
-class PackedWeight:
+class PackedWeights:
     """A weight prepacked for PIM-style placement (one-time cost at model
-    deployment, paper §V-A2)."""
+    deployment, paper §V-A2).
+
+    Canonical name.  PR-1 exported both ``PackedWeight`` (the class) and a
+    ``PackedWeights`` alias with type annotations split between them; the
+    class now carries the canonical plural name and ``PackedWeight`` is the
+    back-compat alias (both are re-exported from ``repro.kernels``).
+    """
 
     w_t: jnp.ndarray                  # [K, M] (transposed storage)
     scales: jnp.ndarray | None = None # [K//block, M] for quantized weights
@@ -65,14 +71,19 @@ class PackedWeight:
         return self.w_t.shape
 
 
-def pack_weight(w: jnp.ndarray) -> PackedWeight:
+# Back-compat alias (PR-1 name); same class, not a subclass, so isinstance
+# checks and dataclass equality behave identically under either name.
+PackedWeight = PackedWeights
+
+
+def pack_weight(w: jnp.ndarray) -> PackedWeights:
     """[M, K] -> transposed placement."""
-    return PackedWeight(w_t=jnp.asarray(w).T)
+    return PackedWeights(w_t=jnp.asarray(w).T)
 
 
 def quantize_weight(
     w: np.ndarray | jnp.ndarray, *, bits: int = 8, block: int = 32
-) -> PackedWeight:
+) -> PackedWeights:
     """Symmetric per-(K-block, column) quantization (MX-style, §VI-D2).
 
     w: [M, K] float -> int8 [K, M] (or packed int4 [K//2, M]) + scales.
@@ -90,7 +101,7 @@ def quantize_weight(
         lo = q[0::2] & 0xF
         hi = (q[1::2] & 0xF) << 4
         q = (lo | hi).astype(np.int8)                  # [K//2, M]
-    return PackedWeight(
+    return PackedWeights(
         w_t=jnp.asarray(q), scales=jnp.asarray(scales.astype(np.float32)),
         bits=bits, block=block,
     )
@@ -98,7 +109,7 @@ def quantize_weight(
 
 def placed_gemv(
     x: jnp.ndarray,
-    packed: PackedWeight,
+    packed: PackedWeights,
     *,
     plan: TPUGemvPlan | None = None,
     interpret: bool | None = None,
@@ -107,8 +118,11 @@ def placed_gemv(
     """Decode GEMV through the unified dispatcher (see kernels/dispatch.py).
 
     x: [B, K] activations (B = decode batch), returns [B, M].  When no
-    ``plan`` is given the dispatcher's cost model picks the kernel (ref /
-    pim / split-K / quant); pass an explicit plan to force a kernel.
+    ``plan`` is given the resolved backend's cost model picks the kernel
+    (ref / pim / split-K / quant on TPU; XLA paths on CPU); pass an
+    explicit plan to force one.  ``interpret=True`` resolves the TPU
+    backend in interpret mode — the validation harness this repo's tests
+    run on CPU.
     """
     from repro.kernels import dispatch  # deferred: dispatch imports ops
 
@@ -120,10 +134,10 @@ def placed_gemv(
 
 def _align_plan_to_block(
     plan: TPUGemvPlan, M: int, K: int, B: int,
-    packed: PackedWeight | int,
+    packed: PackedWeights | int,
 ) -> TPUGemvPlan:
     """Make a plan executable by the quant kernels: k_blk must cover whole
-    scale blocks. ``packed`` is a PackedWeight or the bare block size."""
+    scale blocks. ``packed`` is a PackedWeights or the bare block size."""
     block = packed if isinstance(packed, int) else packed.block
     if plan.split_k == 1 and plan.k_blk % block == 0:
         return plan

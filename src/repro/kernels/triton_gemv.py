@@ -1,0 +1,89 @@
+"""PIMnast-placed GEMV as a Pallas kernel in the Triton (GPU) flavor.
+
+Same placement story as :mod:`repro.kernels.pim_gemv`, re-expressed for the
+GPU lowering path: one CTA ("bank") per M-block of outputs, each walking its
+K stream in ``k_blk`` chunks with a resident f32 accumulator (output-
+stationary).  Differences from the TPU kernel, forced by the Triton backend:
+
+* no ``pltpu`` scratch or compiler params — the accumulator is a loop-carried
+  value (registers/shared memory after lowering), and the K walk is an
+  in-kernel ``fori_loop`` instead of a sequential grid dimension (on GPU all
+  grid cells are parallel CTAs; revisiting an output block across grid steps
+  is not a sequential-grid accumulation like on TPU);
+* the activation block is the full [B, K] row — decode B is small, so it
+  fits and every CTA streams it once (the IV broadcast analogue).
+
+On a CPU host the kernel also runs under ``interpret=True`` (jnp semantics),
+which is how the test suite validates it without a GPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.tpu_plan import TPUGemvPlan
+
+
+# Triton's tl.dot requires every tile dimension >= 16; plan_triton_gemv
+# already floors k_blk (16) and m_blk (64), but the decode batch is 1-8, so
+# the x tile is zero-padded up to MIN_DOT_DIM rows.  The padding rows are
+# dead FLOPs on the tiny resident operand — the streamed W traffic, which
+# is what the kernel is bound on, is unchanged.
+MIN_DOT_DIM = 16
+
+
+def _gemv_kernel(x_ref, w_ref, out_ref, *, n_k: int, k_blk: int):
+    B = x_ref.shape[0]
+    m_blk = out_ref.shape[1]
+    Bp = max(MIN_DOT_DIM, -(-B // MIN_DOT_DIM) * MIN_DOT_DIM)
+
+    def body(ki, acc):
+        xs = pl.load(x_ref, (slice(None), pl.dslice(ki * k_blk, k_blk)))
+        if Bp != B:  # static: B is a trace-time constant
+            xs = jnp.pad(xs, ((0, Bp - B), (0, 0)))
+        ws = pl.load(w_ref, (pl.dslice(ki * k_blk, k_blk), slice(None)))
+        return acc + jnp.dot(
+            xs.astype(jnp.float32), ws.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    acc = jax.lax.fori_loop(
+        0, n_k, body, jnp.zeros((Bp, m_blk), jnp.float32)
+    )
+    out_ref[...] = acc[:B].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def triton_gemv(
+    x: jnp.ndarray,
+    w_t: jnp.ndarray,
+    *,
+    plan: TPUGemvPlan,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """x: [B, K], w_t: [K, M] -> [B, M] with f32 accumulation.
+
+    ``plan.n_k`` / ``plan.k_blk`` describe the in-kernel K walk; the grid is
+    one dimension of ``plan.n_m`` M-blocks.
+    """
+    B, K = x.shape
+    K2, M = w_t.shape
+    assert K == K2, (x.shape, w_t.shape)
+    assert M % plan.m_blk == 0 and K == plan.n_k * plan.k_blk, (plan, M, K)
+
+    return pl.pallas_call(
+        functools.partial(_gemv_kernel, n_k=plan.n_k, k_blk=plan.k_blk),
+        grid=(plan.n_m,),
+        in_specs=[
+            pl.BlockSpec((B, K), lambda mi: (0, 0)),
+            pl.BlockSpec((K, plan.m_blk), lambda mi: (0, mi)),
+        ],
+        out_specs=pl.BlockSpec((B, plan.m_blk), lambda mi: (0, mi)),
+        out_shape=jax.ShapeDtypeStruct((B, M), x.dtype),
+        interpret=interpret,
+        name="pimnast_triton_gemv",
+    )(x, w_t)

@@ -104,8 +104,13 @@ def cost_analysis_dict(cost) -> dict:
     return dict(cost)
 
 
-def _build_step(cfg, shape, mesh):
-    """Returns (fn, kwargs_specs, in_shardings_tree) for this cell."""
+def _build_step(cfg, shape, mesh, gemv_backend=None):
+    """Returns (fn, kwargs_specs, in_shardings_tree) for this cell.
+
+    ``gemv_backend`` routes decode-cell projections through the unified
+    GEMV dispatcher pinned to that registered backend (kernels/backends);
+    None keeps the plain einsum path the dry-run has always lowered.
+    """
     from repro.distributed import sharding as shd
     from repro.launch.shapes import input_specs
     from repro.models import lm
@@ -152,10 +157,17 @@ def _build_step(cfg, shape, mesh):
     cspec = shd.plan_cache(cache_shapes, mesh, cfg, shape.global_batch)
     c_shard = shd.to_named(cspec, mesh)
 
+    gemv_policy = None
+    if gemv_backend is not None and shape.kind == "decode":
+        from repro.kernels.dispatch import DispatchPolicy
+
+        gemv_policy = DispatchPolicy(backend=gemv_backend)
+
     def fn(params, tokens, cache, extra):
         logits, new_cache, _ = lm.forward(
             params, cfg, tokens, cache=cache,
             frames=extra.get("frames"), vision=extra.get("vision"),
+            gemv_policy=gemv_policy,
         )
         return logits[:, -1], new_cache
 
@@ -247,7 +259,7 @@ def roofline_corrected(cfg, shape) -> dict:
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
-             roofline: bool = True) -> dict:
+             roofline: bool = True, gemv_backend: str | None = None) -> dict:
     """Lower + compile one (arch, shape, mesh) cell; returns the record."""
     from repro.configs.registry import get_config
     from repro.launch.mesh import make_production_mesh
@@ -260,9 +272,17 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     )
     shape = SHAPES[shape_name]
     ok, why = applicable(cfg, shape)
+    from repro.kernels.backends import resolve_backend
+
     rec: dict = {
         "arch": arch, "shape": shape_name, "mesh": mesh_kind,
         "time": time.time(),
+        # Provenance: which GemvBackend decode GEMVs would route through in
+        # this process (explicit pin, else resolved from the platform), and
+        # whether this cell actually engaged the dispatcher (_build_step
+        # only installs the policy for decode-kind cells).
+        "gemv_backend": gemv_backend or resolve_backend(None).name,
+        "gemv_dispatch": gemv_backend is not None and shape.kind == "decode",
     }
     if not ok:
         rec["status"] = "skipped"
@@ -274,7 +294,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     from repro.distributed.axes import activation_mesh
 
     t0 = time.perf_counter()
-    fn, args, in_sh, donate, out_sh = _build_step(cfg, shape, mesh)
+    fn, args, in_sh, donate, out_sh = _build_step(
+        cfg, shape, mesh, gemv_backend=gemv_backend
+    )
     with activation_mesh(mesh):
         jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                          donate_argnums=donate)
@@ -339,6 +361,9 @@ def main(argv=None) -> int:
     ap.add_argument("--continue-on-error", action="store_true")
     ap.add_argument("--no-roofline", action="store_true",
                     help="skip the unrolled L1/L2 corrected-metric compiles")
+    ap.add_argument("--gemv-backend", default=None,
+                    help="route decode-cell GEMVs through this registered "
+                         "GemvBackend (cpu|gpu|tpu); default keeps einsum")
     args = ap.parse_args(argv)
 
     from repro.configs.registry import ARCHS
@@ -355,7 +380,8 @@ def main(argv=None) -> int:
                 tag = f"{arch} x {shape} x {mesh_kind}"
                 try:
                     rec = run_cell(arch, shape, mesh_kind,
-                                   roofline=not args.no_roofline)
+                                   roofline=not args.no_roofline,
+                                   gemv_backend=args.gemv_backend)
                 except Exception as e:
                     failures += 1
                     rec = {

@@ -298,8 +298,10 @@ def forward(
 
     ``gemv_policy`` (a ``repro.kernels.dispatch.DispatchPolicy``) engages
     the unified GEMV dispatcher for single-token (decode) projections: the
-    MLP up/gate/down matmuls and the LM head. Prefill and training shapes
-    (Sq > 1) keep the plain einsum path — they are matmul-bound, not
+    MLP up/gate/down matmuls and the LM head. The dispatcher resolves a
+    ``GemvBackend`` (``gemv_policy.backend`` or the host platform) and that
+    backend picks the kernel per projection shape. Prefill and training
+    shapes (Sq > 1) keep the plain einsum path — they are matmul-bound, not
     GEMV-bound.
     """
     B, Sq = tokens.shape

@@ -8,11 +8,14 @@ style at laptop scale) — exercised on the reduced configs in tests/examples.
 
 Decode-time matmuls are where the paper's technique lives: with batch <=
 ``gemv_batch_threshold`` the MLP projections and LM head route through the
-unified GEMV dispatcher (``repro.kernels.dispatch``), which picks ref /
-output-stationary / split-K per shape from its cost model
-(``use_pim_kernels=True``). On TPU the picked kernel lowers via Pallas; on
-CPU the dispatcher downgrades auto picks to the XLA path (interpret-mode
-Pallas is a validation harness, not a serving path).
+unified GEMV dispatcher (``repro.kernels.dispatch``), which resolves a
+``GemvBackend`` from the runtime — Pallas kernels on TPU, the XLA-native
+path (plain dot / pre-chunked split-K) on CPU, Pallas-Triton behind a
+capability check on GPU — and picks a kernel per shape from that backend's
+cost model (``use_pim_kernels=True``). ``gemv_backend`` pins a registered
+backend by name for the engine's lifetime (e.g. a CPU-serving tier in a
+heterogeneous fleet); auto picks on a CPU host never execute
+interpret-mode Pallas (that is a validation harness, not a serving path).
 """
 
 from __future__ import annotations
@@ -77,7 +80,8 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
                  max_len: int = 128, use_pim_kernels: bool = True,
-                 gemv_batch_threshold: int = 8):
+                 gemv_batch_threshold: int = 8,
+                 gemv_backend: str | None = None):
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
@@ -86,8 +90,10 @@ class Engine:
         # Above the batch threshold the dispatcher itself falls back to the
         # XLA path (decode becomes matmul-shaped), so the policy is safe to
         # install unconditionally when use_pim_kernels is on.
+        # ``gemv_backend=None`` resolves per host platform at dispatch time.
         self.gemv_policy = (
-            DispatchPolicy(batch_threshold=gemv_batch_threshold)
+            DispatchPolicy(batch_threshold=gemv_batch_threshold,
+                           backend=gemv_backend)
             if use_pim_kernels else None
         )
         self.prefill_fn, self.decode_fn = build_serve_fns(

@@ -1,18 +1,22 @@
 """Unified GEMV dispatcher: selection matrix, plan cache, autotune table
-round-trip, and numerical equivalence against the XLA oracle."""
+round-trip, numerical equivalence against the XLA oracle, and the PR-1
+selection regression (the backend refactor must not move TPU picks)."""
 
 import json
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels import dispatch, ops
+from repro.kernels.backends import get_backend
 from repro.kernels.dispatch import DispatchPolicy, GemvKey
 
 RNG = np.random.default_rng(7)
 
 INTERP = DispatchPolicy(interpret=True)
+TPU = get_backend("tpu")
 
 
 @pytest.fixture(autouse=True)
@@ -31,7 +35,7 @@ def _mk(M, K, B):
 
 
 # --------------------------------------------------------------------------
-# Kernel selection matrix over (M, K, batch, dtype)
+# Kernel selection matrix over (M, K, batch, dtype) — TPU backend
 # --------------------------------------------------------------------------
 
 
@@ -51,7 +55,7 @@ def _mk(M, K, B):
                                      # don't apply to quantized weights)
 ])
 def test_selection_matrix(M, K, B, bits, expected):
-    kernel, plan = dispatch.select_kernel(M, K, B, bits=bits)
+    kernel, plan = TPU.select_kernel(M, K, B, bits=bits)
     assert kernel == expected, (M, K, B, bits, kernel)
     if expected == "splitk":
         assert plan is not None and plan.split_k > 1
@@ -59,29 +63,61 @@ def test_selection_matrix(M, K, B, bits, expected):
         assert plan is None
 
 
+# PR-1 golden selections: (shape tag, M, K, B) -> (kernel,
+# (m_blk, k_blk, n_m, n_k, split_k)).  Recorded from the pre-refactor
+# dispatcher; the backend registry must reproduce them exactly.
+PR1_SELECTIONS = [
+    ("gemma3-1b/ffn_up", 6912, 1152, 1, "pim", (768, 1152, 9, 1, 1)),
+    ("gemma3-1b/ffn_down", 1152, 6912, 1, "splitk", (1152, 864, 1, 1, 8)),
+    ("gemma3-1b/lm_head", 262144, 1152, 1, "pim", (2048, 1152, 128, 1, 1)),
+    ("olmo-1b/ffn_up", 8192, 2048, 1, "pim", (2048, 2048, 4, 1, 1)),
+    ("olmo-1b/ffn_down", 2048, 8192, 1, "splitk", (2048, 1024, 1, 1, 8)),
+    ("olmo-1b/lm_head", 50304, 2048, 1, "pim", (384, 2048, 131, 1, 1)),
+    ("minitron-8b/ffn_up", 16384, 4096, 1, "pim", (2048, 2048, 8, 2, 1)),
+    ("minitron-8b/ffn_down", 4096, 16384, 1, "splitk", (2048, 2048, 2, 1, 8)),
+    ("minitron-8b/lm_head", 256000, 4096, 1, "pim", (2048, 2048, 125, 2, 1)),
+]
+
+
+@pytest.mark.parametrize(
+    "name,M,K,B,kernel,plan_tuple", PR1_SELECTIONS,
+    ids=[r[0] for r in PR1_SELECTIONS],
+)
+def test_tpu_selections_match_pr1(name, M, K, B, kernel, plan_tuple):
+    got_kernel, plan = TPU.select_kernel(M, K, B)
+    assert got_kernel == kernel
+    assert (plan.m_blk, plan.k_blk, plan.n_m, plan.n_k,
+            plan.split_k) == plan_tuple
+
+
 def test_auto_policy_serves_xla_on_non_tpu_backend():
-    """Production default (interpret=None) on a CPU backend must not serve
-    through interpret-mode Pallas — the cost model models the TPU, and
-    interpret mode is orders of magnitude slower than XLA."""
-    w, x = _mk(6912, 1152, 1)  # big enough that the model would pick pim
+    """Production default (interpret=None) on a CPU host resolves the CPU
+    backend — never interpret-mode Pallas (the cost model on that path is
+    the CPU's, and every CPU kernel is XLA-native)."""
+    w, x = _mk(6912, 1152, 1)  # big enough that the TPU model picks pim
+    resolved = dispatch.resolve_backend(DispatchPolicy())
+    assert resolved.name == "cpu"
     out = dispatch.dispatch_gemv(jnp.asarray(x), jnp.asarray(w),
                                  policy=DispatchPolicy())
     np.testing.assert_allclose(np.asarray(out), x @ w.T, rtol=1e-4,
                                atol=1e-3)
-    # the downgrade bypasses planning entirely: no cache activity
-    assert dispatch.plan_cache_stats() == {"hits": 0, "misses": 0}
-    # explicit interpret=True is an opt-in and still plans/dispatches
+    # the pick is one of the CPU backend's XLA kernels
+    kernel, _ = resolved.select_kernel(6912, 1152, 1)
+    assert kernel in ("ref", "splitk")
+    # explicit interpret=True opts into the TPU validation harness instead
+    assert dispatch.resolve_backend(INTERP).name == "tpu"
     dispatch.dispatch_gemv(jnp.asarray(x), jnp.asarray(w), policy=INTERP)
-    assert dispatch.plan_cache_stats()["misses"] == 1
+    stats = dispatch.plan_cache_stats()
+    assert stats["misses"] >= 1
 
 
 def test_quant_plans_returned_aligned_and_executable():
     """select_kernel's public contract: quant plans are directly runnable
     (k_blk covers whole scale blocks, even for awkward K)."""
-    kernel, plan = dispatch.select_kernel(2048, 2080, 1, bits=8, block=32)
+    kernel, plan = TPU.select_kernel(2048, 2080, 1, bits=8, block=32)
     assert kernel == "quant"
     assert plan.k_blk % 32 == 0 and 2080 % plan.k_blk == 0
-    kernel, plan = dispatch.select_kernel(
+    kernel, plan = TPU.select_kernel(
         2048, 2080, 1, bits=8, block=32,
         policy=DispatchPolicy(kernel="quant"))
     assert kernel == "quant"
@@ -90,11 +126,11 @@ def test_quant_plans_returned_aligned_and_executable():
 
 def test_selection_respects_policy_gates():
     # use_pallas off forces ref even on an ideal shape
-    k, _ = dispatch.select_kernel(
+    k, _ = TPU.select_kernel(
         6912, 1152, 1, policy=DispatchPolicy(use_pallas=False))
     assert k == "ref"
     # pinned kernel overrides the cost model
-    k, plan = dispatch.select_kernel(
+    k, plan = TPU.select_kernel(
         6912, 1152, 1, policy=DispatchPolicy(kernel="splitk"))
     assert k == "splitk" and plan.split_k > 1
 
@@ -102,13 +138,13 @@ def test_selection_respects_policy_gates():
 def test_cost_model_orders_small_m_toward_splitk():
     """The occupancy term must make split-K beat output-stationary exactly
     where the paper says it should: too few M-blocks to fill the grid."""
-    _, pim_plan = dispatch.select_kernel(
+    _, pim_plan = TPU.select_kernel(
         1152, 6912, 1, policy=DispatchPolicy(kernel="pim"))
-    _, sk_plan = dispatch.select_kernel(
+    _, sk_plan = TPU.select_kernel(
         1152, 6912, 1, policy=DispatchPolicy(kernel="splitk"))
-    t_pim = dispatch.estimate_cost_us("pim", 1152, 6912, 1, plan=pim_plan)
-    t_sk = dispatch.estimate_cost_us("splitk", 1152, 6912, 1, plan=sk_plan)
-    t_ref = dispatch.estimate_cost_us("ref", 1152, 6912, 1)
+    t_pim = TPU.estimate_cost_us("pim", 1152, 6912, 1, plan=pim_plan)
+    t_sk = TPU.estimate_cost_us("splitk", 1152, 6912, 1, plan=sk_plan)
+    t_ref = TPU.estimate_cost_us("ref", 1152, 6912, 1)
     assert t_sk < t_ref < t_pim
 
 
@@ -119,10 +155,9 @@ def test_cost_model_orders_small_m_toward_splitk():
 
 def test_plan_cache_hit_returns_same_plan_object():
     key = GemvKey(M=6912, K=1152, batch=1, bits=16, block=32,
-                  dtype="float32", backend="cpu")
-    pw = ops.pack_weight(jnp.asarray(_mk(6912, 1152, 1)[0]))
-    k1, p1 = dispatch._resolve(key, pw, INTERP)
-    k2, p2 = dispatch._resolve(key, pw, INTERP)
+                  dtype="float32", backend="tpu")
+    k1, p1 = dispatch._resolve(TPU, key, INTERP)
+    k2, p2 = dispatch._resolve(TPU, key, INTERP)
     assert k1 == k2 == "pim"
     assert p1 is p2  # memoized, not re-planned
     stats = dispatch.plan_cache_stats()
@@ -131,17 +166,15 @@ def test_plan_cache_hit_returns_same_plan_object():
 
 def test_plan_cache_keyed_on_policy():
     """A pinned or no-Pallas policy must not inherit a cached auto plan."""
-    w, x = _mk(1152, 6912, 1)
-    pw = ops.pack_weight(jnp.asarray(w))
     key = GemvKey(M=1152, K=6912, batch=1, bits=16, block=32,
-                  dtype="float32", backend="cpu")
-    k_auto, _ = dispatch._resolve(key, pw, INTERP)
+                  dtype="float32", backend="tpu")
+    k_auto, _ = dispatch._resolve(TPU, key, INTERP)
     assert k_auto == "splitk"
     k_pin, _ = dispatch._resolve(
-        key, pw, DispatchPolicy(kernel="pim", interpret=True))
+        TPU, key, DispatchPolicy(kernel="pim", interpret=True))
     assert k_pin == "pim"
     k_off, _ = dispatch._resolve(
-        key, pw, DispatchPolicy(use_pallas=False, interpret=True))
+        TPU, key, DispatchPolicy(use_pallas=False, interpret=True))
     assert k_off == "ref"
 
 
@@ -163,19 +196,18 @@ def test_table_never_overrides_policy_pins():
     """A loaded autotune entry stands in for the cost model only — never
     for an explicit kernel pin or use_pallas=False."""
     key = GemvKey(M=512, K=1024, batch=1, bits=16, block=32,
-                  dtype="float32", backend="cpu")
-    dispatch._AUTOTUNE_TABLE[key.table_key()] = {
+                  dtype="float32", backend="tpu")
+    dispatch._AUTOTUNE_TABLE.put("tpu", key.table_key(), {
         "kernel": "pim", "m_blk": 512, "k_blk": 1024, "n_m": 1, "n_k": 1,
         "split_k": 1, "us": 1.0,
-    }
-    pw = ops.pack_weight(jnp.asarray(_mk(512, 1024, 1)[0]))
-    k_auto, _ = dispatch._resolve(key, pw, INTERP)
+    })
+    k_auto, _ = dispatch._resolve(TPU, key, INTERP)
     assert k_auto == "pim"  # tabled entry honored for the auto policy
     k_off, _ = dispatch._resolve(
-        key, pw, DispatchPolicy(use_pallas=False, interpret=True))
+        TPU, key, DispatchPolicy(use_pallas=False, interpret=True))
     assert k_off == "ref"
     k_pin, _ = dispatch._resolve(
-        key, pw, DispatchPolicy(kernel="ref", interpret=True))
+        TPU, key, DispatchPolicy(kernel="ref", interpret=True))
     assert k_pin == "ref"
 
 
@@ -183,14 +215,14 @@ def test_pinned_kernel_respects_weight_bits():
     # quant pins on float weights have no scales to apply: explicit error
     for name in ("quant", "quant4"):
         with pytest.raises(ValueError, match="quant"):
-            dispatch.select_kernel(
+            TPU.select_kernel(
                 2048, 2048, 1, bits=16, policy=DispatchPolicy(kernel=name))
     # unknown kernel names never fall through to a silent default
     with pytest.raises(ValueError, match="unknown kernel"):
-        dispatch.select_kernel(
+        TPU.select_kernel(
             2048, 2048, 1, policy=DispatchPolicy(kernel="splitK"))
     # pim pin on quantized weights must still dequantize (quant path)
-    k, _ = dispatch.select_kernel(
+    k, _ = TPU.select_kernel(
         2048, 2048, 1, bits=8, policy=DispatchPolicy(kernel="pim"))
     assert k == "quant"
     w, x = _mk(1024, 2048, 1)
@@ -229,7 +261,10 @@ def test_autotune_roundtrip_json(tmp_path):
     np.testing.assert_allclose(np.asarray(out), x @ w.T, rtol=1e-4,
                                atol=1e-3)
     with open(table_path) as f:
-        table = json.load(f)
+        doc = json.load(f)
+    assert doc["format"] == 2
+    assert set(doc["tables"]) == {"tpu"}   # interpret opt-in tunes the TPU
+    table = doc["tables"]["tpu"]           # analogue's namespace
     assert len(table) == 1
     entry = next(iter(table.values()))
     assert entry["kernel"] in ("ref", "pim", "splitk")
@@ -238,12 +273,12 @@ def test_autotune_roundtrip_json(tmp_path):
     # a fresh process (cleared caches) reloads the table and honors it
     dispatch.clear_plan_cache()
     dispatch.clear_autotune_table()
-    dispatch.load_autotune_table(table_path)
+    parsed = dispatch.load_autotune_table(table_path)
+    assert set(parsed) == {"tpu"}
     key = GemvKey(M=256, K=512, batch=1, bits=16, block=32,
-                  dtype="float32", backend="cpu")
-    kernel, plan = dispatch._entry_to_plan(
-        dispatch._AUTOTUNE_TABLE[key.table_key()])
-    assert kernel == entry["kernel"]
+                  dtype="float32", backend="tpu")
+    stored = dispatch._AUTOTUNE_TABLE.get("tpu", key.table_key())
+    assert stored["kernel"] == entry["kernel"]
     # and dispatch with autotune=False now uses the table, not the model
     out2 = dispatch.dispatch_gemv(jnp.asarray(x), jnp.asarray(w),
                                   policy=INTERP)
@@ -251,17 +286,44 @@ def test_autotune_roundtrip_json(tmp_path):
                                rtol=1e-5, atol=1e-5)
 
 
+def test_autotune_loads_v1_flat_tables_into_tpu_namespace(tmp_path):
+    """PR-1 wrote flat {shape_key: entry} files whose keys carried the JAX
+    platform as a suffix; they load as ``tpu`` with the suffix stripped so
+    the v2 (suffix-less) lookups actually find them."""
+    table_path = str(tmp_path / "v1.json")
+    with open(table_path, "w") as f:
+        json.dump({
+            # exactly what PR-1's GemvKey.table_key() produced on this host
+            "256x512xb1_w16g32_float32_cpu": {"kernel": "ref", "us": 3.0},
+            # hand-written suffix-less keys pass through unchanged
+            "128x256xb1_w16g32_float32": {"kernel": "ref", "us": 4.0},
+        }, f)
+    parsed = dispatch.load_autotune_table(table_path)
+    assert set(parsed) == {"tpu"}
+    key = GemvKey(M=256, K=512, batch=1, bits=16, block=32,
+                  dtype="float32", backend="tpu")
+    assert dispatch._AUTOTUNE_TABLE.get(
+        "tpu", key.table_key())["kernel"] == "ref"
+    assert dispatch._AUTOTUNE_TABLE.get(
+        "tpu", "128x256xb1_w16g32_float32")["us"] == 4.0
+    # and the migrated entry is honored by a fresh auto dispatch
+    k, _ = dispatch._resolve(TPU, key, INTERP)
+    assert k == "ref"
+
+
 def test_autotune_memoizes_in_table():
     pol = DispatchPolicy(autotune=True, interpret=True)
     key = GemvKey(M=256, K=512, batch=1, bits=16, block=32,
-                  dtype="float32", backend="cpu")
-    k1, _ = dispatch.autotune_gemv(key, policy=pol)
-    assert key.table_key() in dispatch._AUTOTUNE_TABLE
-    # second call must not re-time: poison the timer to prove it
-    entry = dict(dispatch._AUTOTUNE_TABLE[key.table_key()])
-    k2, _ = dispatch.autotune_gemv(key, policy=pol)
+                  dtype="float32", backend="tpu")
+    k1, _ = TPU.autotune_gemv(key, policy=pol,
+                              table=dispatch._AUTOTUNE_TABLE)
+    entry = dispatch._AUTOTUNE_TABLE.get("tpu", key.table_key())
+    assert entry is not None
+    # second call must not re-time: the stored entry stays bit-identical
+    k2, _ = TPU.autotune_gemv(key, policy=pol,
+                              table=dispatch._AUTOTUNE_TABLE)
     assert k2 == k1
-    assert dispatch._AUTOTUNE_TABLE[key.table_key()] == entry
+    assert dispatch._AUTOTUNE_TABLE.get("tpu", key.table_key()) == entry
 
 
 # --------------------------------------------------------------------------
@@ -331,18 +393,30 @@ def test_weight_normalization_forms_agree():
         dispatch.as_packed((jnp.asarray(w), pq.scales))
 
 
+def test_packed_weights_canonical_name_and_alias():
+    """One class, two names: PackedWeights is canonical, PackedWeight the
+    PR-1 alias; isinstance checks are interchangeable."""
+    import repro.kernels as kpkg
+
+    assert kpkg.PackedWeights is kpkg.PackedWeight
+    pw = ops.pack_weight(jnp.ones((8, 4)))
+    assert isinstance(pw, kpkg.PackedWeights)
+    assert isinstance(pw, kpkg.PackedWeight)
+    assert isinstance(pw, dispatch.PackedWeights)
+
+
 def test_autotune_table_merges_across_processes(tmp_path):
     """Saving must merge with on-disk entries, not overwrite them."""
     table_path = str(tmp_path / "t.json")
-    dispatch._AUTOTUNE_TABLE["shapeA"] = {"kernel": "ref", "us": 1.0}
+    dispatch._AUTOTUNE_TABLE.put("tpu", "shapeA", {"kernel": "ref", "us": 1.0})
     dispatch.save_autotune_table(table_path)
     # simulate a second process: fresh in-memory table, new entry
     dispatch.clear_autotune_table()
-    dispatch._AUTOTUNE_TABLE["shapeB"] = {"kernel": "ref", "us": 2.0}
+    dispatch._AUTOTUNE_TABLE.put("tpu", "shapeB", {"kernel": "ref", "us": 2.0})
     dispatch.save_autotune_table(table_path)
     with open(table_path) as f:
-        merged = json.load(f)
-    assert set(merged) == {"shapeA", "shapeB"}
+        merged = json.load(f)["tables"]
+    assert set(merged["tpu"]) == {"shapeA", "shapeB"}
 
 
 def test_autotune_reads_persisted_table_lazily(tmp_path):
@@ -352,12 +426,46 @@ def test_autotune_reads_persisted_table_lazily(tmp_path):
     pol = DispatchPolicy(autotune=True, table_path=table_path,
                          interpret=True)
     key = GemvKey(M=256, K=512, batch=1, bits=16, block=32,
-                  dtype="float32", backend="cpu")
-    k1, _ = dispatch.autotune_gemv(key, policy=pol)
+                  dtype="float32", backend="tpu")
+    k1, _ = TPU.autotune_gemv(key, policy=pol,
+                              table=dispatch._AUTOTUNE_TABLE)
     # fresh process: empty in-memory table, same table_path
     dispatch.clear_autotune_table()
     dispatch.clear_plan_cache()
     entry_before = json.load(open(table_path))
-    k2, _ = dispatch.autotune_gemv(key, policy=pol)
+    k2, _ = TPU.autotune_gemv(key, policy=pol,
+                              table=dispatch._AUTOTUNE_TABLE)
     assert k2 == k1
     assert json.load(open(table_path)) == entry_before  # not re-timed
+
+
+# --------------------------------------------------------------------------
+# Deprecated PR-1 surface
+# --------------------------------------------------------------------------
+
+
+def test_deprecated_free_functions_delegate_to_tpu_backend():
+    with pytest.warns(DeprecationWarning):
+        k, plan = dispatch.select_kernel(1152, 6912, 1)
+    assert (k, plan) == TPU.select_kernel(1152, 6912, 1)
+    with pytest.warns(DeprecationWarning):
+        t = dispatch.estimate_cost_us("ref", 1024, 1024, 1)
+    assert t == TPU.estimate_cost_us("ref", 1024, 1024, 1)
+
+
+def test_deprecated_cost_constants_warn_and_match_cost_model():
+    cm = TPU.cost_model
+    expected = {
+        "HBM_BW": cm.bandwidth_bps,
+        "XLA_GEMV_EFF": cm.gemv_efficiency,
+        "PALLAS_LAUNCH_US": cm.launch_us,
+        "PROGRAM_US": cm.program_us,
+        "MIN_PARALLEL_BLOCKS": cm.min_parallel_blocks,
+    }
+    for name, want in expected.items():
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            assert getattr(dispatch, name) == want
+        assert any(r.category is DeprecationWarning for r in rec), name
+    with pytest.raises(AttributeError):
+        dispatch.NOT_A_CONSTANT

@@ -1,0 +1,68 @@
+"""benchmarks/kernel_bench.py: dispatcher-vs-fixed rows are machine-readable
+(--json) and self-consistent across backends."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH = os.path.join(REPO, "benchmarks", "kernel_bench.py")
+
+sys.path.insert(0, REPO)  # benchmarks/ is not a package
+
+from benchmarks import kernel_bench  # noqa: E402
+
+from repro.kernels.backends import get_backend  # noqa: E402
+
+
+@pytest.mark.parametrize("backend", ["tpu", "cpu", "gpu"])
+def test_dispatch_rows_model_only(backend):
+    rows = kernel_bench.dispatch_rows(measure=False, backend_name=backend)
+    assert len(rows) == len(kernel_bench.registry_gemv_shapes())
+    fixed = kernel_bench.fixed_kernels(backend)
+    for r in rows:
+        assert r["backend"] == backend
+        assert r["picked"] in get_backend(backend).kernels
+        for kern in fixed:
+            assert r[f"model_us/{kern}"] > 0
+        # the pick is the argmin of the modeled fixed rows (auto == best)
+        assert r["picked"] in fixed
+        assert r["model_us/picked"] == min(
+            r[f"model_us/{k}"] for k in fixed
+        )
+
+
+def test_tpu_rows_reproduce_pr1_headline():
+    """The headline comparison: ffn_down shapes (small-M tall-K) pick
+    split-K, ffn_up/lm_head pick the output-stationary kernel."""
+    rows = {r["shape"]: r for r in kernel_bench.dispatch_rows(
+        measure=False, backend_name="tpu")}
+    for shape, r in rows.items():
+        expect = "splitk" if shape.endswith("ffn_down") else "pim"
+        assert r["picked"] == expect, (shape, r["picked"])
+
+
+def test_json_cli_output_parses(tmp_path):
+    """Smoke test for the --json flag: run the CLI, parse the records."""
+    out_path = str(tmp_path / "bench.json")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, BENCH, "--dispatch", "--no-measure",
+         "--backend", "cpu", "--json", out_path],
+        capture_output=True, text=True, env=env, timeout=300,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    records = json.load(open(out_path))
+    assert len(records) == len(kernel_bench.registry_gemv_shapes())
+    for rec in records:
+        for field in ("shape", "M", "K", "B", "backend", "picked"):
+            assert field in rec, rec
+        assert rec["backend"] == "cpu"
+        assert any(k.startswith("model_us/") for k in rec)
+    # stdout carries the human-readable table alongside
+    assert "dispatch/" in proc.stdout

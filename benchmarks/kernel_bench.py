@@ -12,13 +12,18 @@ The ``dispatch`` section is the paper's headline experiment in backend
 form: for each model-config decode GEMV shape it reports the chosen
 backend's picked kernel and its *modeled* latency against every fixed
 kernel of that backend — the gap is the balancing win that a hard-coded
-kernel leaves on the table.  ``--backend`` swaps the memory system under
-comparison (tpu / cpu / gpu cost models); ``--json OUT`` emits the rows as
-machine-readable records for the bench trajectory.
+kernel leaves on the table.  The ``program`` section does the same for
+grouped/fused GEMV *programs* (fused QKV, MLP gate+up, MoE expert groups):
+each row compares the jointly planned program against N independent
+dispatches — launch counts and modeled latency — the amortization the
+``GemvProgram`` API exists for.  ``--backend`` swaps the memory system
+under comparison (tpu / cpu / gpu cost models); ``--json OUT`` emits a
+``{"schema": .., "rows": .., "program_rows": ..}`` document for the bench
+trajectory.
 
-    PYTHONPATH=src python benchmarks/kernel_bench.py            # both parts
+    PYTHONPATH=src python benchmarks/kernel_bench.py            # all parts
     PYTHONPATH=src python benchmarks/kernel_bench.py --dispatch # just the
-                                                                # comparison
+                                                                # comparisons
     PYTHONPATH=src python benchmarks/kernel_bench.py --dispatch \
         --backend cpu --json bench.json
 """
@@ -33,7 +38,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import available_backends, dispatch, get_backend, ops
+from repro.kernels.backends import ProgramKey
 from repro.kernels.dispatch import DispatchPolicy
+
+# --json document version: bump when the record layout changes.
+# 1 (implicit): bare list of dispatch rows.
+# 2: {"schema", "rows", "program_rows"} with the program comparison.
+SCHEMA_VERSION = 2
 
 SHAPES = [
     # (name, M, K, B)  — decode-path GEMVs from the assigned archs
@@ -152,6 +163,77 @@ def dispatch_rows(measure: bool = True,
     return rows
 
 
+def registry_program_shapes() -> list[tuple[str, str, tuple[int, ...],
+                                            int, int, int]]:
+    """Grouped/fused decode program shapes from the model-config registry.
+
+    Rows are (name, kind, Ms, K, batch, group): fused QKV and MLP gate+up
+    for the dense archs, expert groups for the MoE archs (batch = tokens
+    per expert at a decode step).
+    """
+    from repro.configs.registry import ARCHS
+
+    shapes = []
+    for name in ("gemma3-1b", "minitron-8b"):
+        cfg = ARCHS[name]
+        hd = cfg.hd
+        qkv = (cfg.n_heads * hd, cfg.n_kv_heads * hd, cfg.n_kv_heads * hd)
+        shapes.append((f"{name}/qkv", "fused", qkv, cfg.d_model, 1, 3))
+        if cfg.act in ("silu", "geglu"):
+            shapes.append((f"{name}/gate_up", "fused",
+                           (cfg.d_ff, cfg.d_ff), cfg.d_model, 1, 2))
+    for name in ("deepseek-moe-16b", "grok-1-314b"):
+        cfg = ARCHS[name]
+        e = cfg.moe
+        shapes.append((f"{name}/expert_up", "grouped", (e.d_expert,),
+                       cfg.d_model, 8, e.n_experts))
+    return shapes
+
+
+def program_rows(backend_name: str = "tpu") -> list[dict]:
+    """Program-vs-independent comparison per registry program shape.
+
+    Each row reports the backend's planned mode, the launch count of the
+    planned program vs N independent dispatches (the amortization the
+    acceptance criteria lock), and the modeled latency of both.
+    """
+    backend = get_backend(backend_name)
+    interp = backend_name != "cpu"
+    policy = DispatchPolicy(backend=backend_name, interpret=interp)
+    rows = []
+    for name, kind, Ms, K, batch, group in registry_program_shapes():
+        key = ProgramKey(kind=kind, Ms=Ms, K=K, batch=batch, group=group,
+                         bits=16, block=32, dtype="float32",
+                         backend=backend_name)
+        pplan = backend.plan_program(key, policy=policy)
+        rows.append({
+            "shape": name, "kind": kind, "Ms": list(Ms), "K": K,
+            "B": batch, "group": group, "backend": backend_name,
+            "mode": pplan.mode,
+            "kernel": pplan.kernel or None,
+            "launches_program": pplan.n_launches,
+            "launches_independent": key.n_requests,
+            "model_us/program": backend.estimate_program_cost_us(
+                key, mode=pplan.mode),
+            "model_us/independent": backend.estimate_program_cost_us(
+                key, mode="per_request"),
+        })
+    return rows
+
+
+def print_program_table(rows: list[dict]) -> None:
+    for r in rows:
+        ms = "+".join(str(m) for m in r["Ms"])
+        print(
+            f"program/{r['shape']} [{r['kind']} {ms}x{r['K']} B={r['B']} "
+            f"e={r['group']}] backend={r['backend']} mode={r['mode']} "
+            f"launches={r['launches_program']} "
+            f"(vs {r['launches_independent']} independent) "
+            f"model={r['model_us/program']:.1f}us "
+            f"(vs {r['model_us/independent']:.1f}us)"
+        )
+
+
 def print_dispatch_table(rows: list[dict]) -> None:
     for r in rows:
         fixed = fixed_kernels(r["backend"])
@@ -191,10 +273,14 @@ def main(argv=None) -> int:
     rows = dispatch_rows(measure=not args.no_measure,
                          backend_name=args.backend)
     print_dispatch_table(rows)
+    prog_rows = program_rows(backend_name=args.backend)
+    print_program_table(prog_rows)
     if args.json:
+        doc = {"schema": SCHEMA_VERSION, "rows": rows,
+               "program_rows": prog_rows}
         with open(args.json, "w") as f:
-            json.dump(rows, f, indent=1, sort_keys=True)
-        print(f"wrote {len(rows)} records -> {args.json}")
+            json.dump(doc, f, indent=1, sort_keys=True)
+        print(f"wrote {len(rows)} + {len(prog_rows)} records -> {args.json}")
     return 0
 
 

@@ -1,22 +1,31 @@
 """PIM-GEMV kernel package: Pallas/XLA kernels + the unified dispatcher.
 
 Public surface:
-  * :func:`repro.kernels.dispatch.dispatch_gemv` — the single GEMV entry
-    point (backend resolution, kernel selection, plan cache, autotuning);
+  * :func:`repro.kernels.dispatch.dispatch_program` — the GEMV-program
+    entry point (N requests planned jointly: fused multi-head and
+    grouped/expert shapes), with :func:`dispatch_fused` /
+    :func:`dispatch_grouped` conveniences and the single-request wrappers
+    :func:`dispatch_gemv` / :func:`dispatch_dense`;
   * :mod:`repro.kernels.backends` — the ``GemvBackend`` registry (``tpu`` /
     ``cpu`` / ``gpu``), each bundling kernels, a frozen ``CostModel``, a
-    plan builder, and an autotune-table namespace;
+    plan builder, program planning/execution, and an autotune-table
+    namespace;
   * :mod:`repro.kernels.ops` — weight packing/quantization
     (:class:`PackedWeights` is the canonical name; ``PackedWeight`` is the
-    back-compat alias) and the legacy ``placed_gemv`` shim;
+    back-compat alias; ``pack_fused`` / ``PackedWeights.stack`` build
+    program weights) and the legacy ``placed_gemv`` shim;
   * the individual kernels (``pim_gemv``, ``splitk_gemv``, ``quant_gemv``,
-    ``triton_gemv``, ``cpu_splitk_gemv``) for tests and benchmarks that pin
-    a kernel.
+    ``triton_gemv``, ``cpu_splitk_gemv``, ``cpu_grouped_gemv``) for tests
+    and benchmarks that pin a kernel.
 """
 
 from repro.kernels.backends import (  # noqa: F401
     CostModel,
     GemvBackend,
+    GemvProgram,
+    GemvRequest,
+    ProgramKey,
+    ProgramPlan,
     available_backends,
     get_backend,
     register_backend,
@@ -26,12 +35,16 @@ from repro.kernels.dispatch import (  # noqa: F401
     DispatchPolicy,
     PackedWeights,
     dispatch_dense,
+    dispatch_fused,
     dispatch_gemv,
+    dispatch_grouped,
+    dispatch_program,
     plan_cache_stats,
     select_kernel,
 )
 from repro.kernels.ops import (  # noqa: F401
     PackedWeight,
+    pack_fused,
     pack_weight,
     placed_gemv,
     quantize_weight,

@@ -22,11 +22,17 @@ from repro.kernels.backends.base import (  # noqa: F401
     GemvBackend,
     GemvKey,
     GemvPlan,
+    GemvProgram,
+    GemvRequest,
+    ProgramKey,
+    ProgramPlan,
     available_backends,
     backend_for_platform,
     entry_to_plan,
+    entry_to_program_plan,
     get_backend,
     plan_to_entry,
+    program_plan_to_entry,
     register_backend,
     resolve_backend,
     time_gemv_us,

@@ -96,6 +96,10 @@ class DispatchPolicy:
     use_pallas: bool = True
     batch_threshold: int = 8      # above this, decode is matmul-shaped: XLA
     min_pallas_bytes: int = 1 << 20  # tiny weights: launch overhead dominates
+    # Program (multi-request) dispatch: False decomposes every GemvProgram
+    # into independent per-request dispatches (the pre-program behavior),
+    # True lets the backend plan the group jointly (fused-M / grouped).
+    fuse_programs: bool = True
 
 
 DEFAULT_POLICY = DispatchPolicy()
@@ -123,10 +127,214 @@ class GemvKey:
 
 
 # ---------------------------------------------------------------------------
+# GEMV programs: N requests planned jointly (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class GemvRequest:
+    """One GEMV: out[B, M] = x[B, K] @ weights.  The unit a program plans.
+
+    ``weights`` is always a (2-D) :class:`PackedWeights`; ``tag`` labels the
+    request in program outputs (``"wq"``, ``"expert3"``, ...).
+    """
+
+    x: jnp.ndarray
+    weights: PackedWeights
+    tag: str = ""
+
+
+@dataclass(frozen=True)
+class GemvProgram:
+    """N GEMV requests planned *jointly* — the dispatcher's unit of work.
+
+    The paper's PIM broadcasts one command stream and one IV chunk to all
+    banks, so GEMVs that share an input vector or form an expert group must
+    be placed together to pay the broadcast/launch cost once.  Two
+    first-class shapes:
+
+    * ``fused`` — shared IV, per-request output widths (QKV, gate+up):
+      ``x [B, K]``, ``weights.w_t [K, sum(m_splits)]`` (see
+      :func:`repro.kernels.ops.pack_fused`); output ``[B, sum(m_splits)]``,
+      split back per request with :meth:`split`.
+    * ``grouped`` — expert group: ``x [E, C, K]`` per-expert token buffers,
+      ``weights.w_t [E, K, M]`` stacked experts
+      (:meth:`PackedWeights.stack`); output ``[E, C, M]``.
+
+    ``requests`` always carries the per-request decomposition so any backend
+    can fall back to independent dispatches (``ProgramPlan.mode ==
+    "per_request"``).
+    """
+
+    kind: str                            # "fused" | "grouped"
+    x: jnp.ndarray
+    weights: PackedWeights
+    m_splits: tuple[int, ...]
+    requests: tuple[GemvRequest, ...]
+
+    @classmethod
+    def fused(cls, x: jnp.ndarray,
+              members: "list[PackedWeights]",
+              tags: tuple[str, ...] = ()) -> "GemvProgram":
+        from repro.kernels.ops import pack_fused
+
+        fused_pw, splits = pack_fused(members)
+        tags = tags or tuple(f"m{i}" for i in range(len(members)))
+        reqs = tuple(
+            GemvRequest(x=x, weights=pw, tag=t)
+            for pw, t in zip(members, tags)
+        )
+        return cls(kind="fused", x=x, weights=fused_pw, m_splits=splits,
+                   requests=reqs)
+
+    @classmethod
+    def grouped(cls, xs: jnp.ndarray,
+                stacked: PackedWeights) -> "GemvProgram":
+        if stacked.w_t.ndim != 3:
+            raise ValueError(
+                f"grouped programs need stacked [E, K, M] weights, got "
+                f"{stacked.w_t.shape}"
+            )
+        E = stacked.group
+        if xs.ndim != 3 or xs.shape[0] != E:
+            raise ValueError(
+                f"grouped inputs must be [E, C, K] with E={E}, got {xs.shape}"
+            )
+        _, M = stacked.shape
+        reqs = tuple(
+            GemvRequest(x=xs[e], weights=stacked.member(e), tag=f"expert{e}")
+            for e in range(E)
+        )
+        return cls(kind="grouped", x=xs, weights=stacked, m_splits=(M,),
+                   requests=reqs)
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.requests)
+
+    def split(self, out: jnp.ndarray) -> list[jnp.ndarray]:
+        """Slice a fused program's [B, sum(M_i)] output back per request."""
+        assert self.kind == "fused", self.kind
+        bounds = np.cumsum(self.m_splits)[:-1].tolist()
+        return jnp.split(out, bounds, axis=-1)
+
+    def key(self, backend_name: str) -> "ProgramKey":
+        pw = self.weights
+        K, _ = pw.shape
+        if self.kind == "grouped":
+            batch = int(self.x.shape[1])          # tokens per expert
+        else:
+            batch = int(self.x.shape[0])
+        return ProgramKey(
+            kind=self.kind, Ms=self.m_splits, K=K, batch=batch,
+            group=pw.group if self.kind == "grouped" else len(self.m_splits),
+            bits=pw.bits, block=pw.block, dtype=str(self.x.dtype),
+            backend=backend_name,
+        )
+
+
+@dataclass(frozen=True)
+class ProgramKey:
+    """Plan-cache / autotune-table key for one program shape.
+
+    ``Ms`` is the per-request output-width tuple for fused programs and the
+    single per-expert ``(M,)`` for grouped ones; ``group`` is the request
+    count (fused) or expert count (grouped); ``batch`` is B (fused) or the
+    per-expert token count C (grouped).
+    """
+
+    kind: str
+    Ms: tuple[int, ...]
+    K: int
+    batch: int
+    group: int
+    bits: int
+    block: int
+    dtype: str
+    backend: str
+
+    @property
+    def n_requests(self) -> int:
+        return self.group
+
+    @property
+    def total_M(self) -> int:
+        return sum(self.Ms) if self.kind == "fused" else self.group * self.Ms[0]
+
+    def table_key(self) -> str:
+        ms = "+".join(str(m) for m in self.Ms)
+        return (
+            f"{self.kind}[{ms}]x{self.K}xb{self.batch}_e{self.group}"
+            f"_w{self.bits}g{self.block}_{self.dtype}"
+        )
+
+
+@dataclass(frozen=True)
+class ProgramPlan:
+    """How a backend executes one program.
+
+    ``mode``: ``fused`` (one joint kernel on the concatenated [K, sum M]
+    weight — ``kernel``/``plan`` name the inner decision), ``grouped`` (one
+    batched contraction over the expert stack), or ``per_request`` (N
+    independent dispatches — the default decomposition every backend
+    supports).  ``n_launches`` is the kernel-launch count the mode costs,
+    the quantity the program API exists to amortize.
+    """
+
+    mode: str
+    n_launches: int
+    kernel: str = ""
+    plan: GemvPlan | None = None
+
+
+def program_plan_to_entry(pplan: ProgramPlan, elapsed_us: float) -> dict:
+    entry = {"mode": pplan.mode, "n_launches": pplan.n_launches,
+             "us": elapsed_us}
+    if pplan.mode == "fused":
+        entry.update(plan_to_entry(pplan.kernel, pplan.plan, elapsed_us))
+    return entry
+
+
+def entry_to_program_plan(entry: dict) -> ProgramPlan:
+    if entry["mode"] == "fused":
+        kernel, plan = entry_to_plan(entry)
+        return ProgramPlan(mode="fused", n_launches=entry["n_launches"],
+                           kernel=kernel, plan=plan)
+    return ProgramPlan(mode=entry["mode"], n_launches=entry["n_launches"])
+
+
+def _synthesize_program(key: ProgramKey) -> GemvProgram:
+    """Build a program with random data matching a key — the autotuner must
+    never time the caller's arrays (they may be tracers mid-``jit``)."""
+    rng = np.random.default_rng(0)
+
+    def one(M: int) -> PackedWeights:
+        w = rng.standard_normal((M, key.K)).astype(np.float32)
+        if key.bits < 16:
+            return quantize_weight(w, bits=key.bits, block=key.block)
+        return pack_weight(jnp.asarray(w).astype(key.dtype))
+
+    if key.kind == "grouped":
+        xs = jnp.asarray(rng.standard_normal(
+            (key.group, key.batch, key.K)).astype(np.float32)
+        ).astype(key.dtype)
+        stacked = PackedWeights.stack([one(key.Ms[0])
+                                       for _ in range(key.group)])
+        return GemvProgram.grouped(xs, stacked)
+    x = jnp.asarray(
+        rng.standard_normal((key.batch, key.K)).astype(np.float32)
+    ).astype(key.dtype)
+    return GemvProgram.fused(x, [one(M) for M in key.Ms])
+
+
+# ---------------------------------------------------------------------------
 # Autotune table: per-backend namespaces, one JSON file
 # ---------------------------------------------------------------------------
 
-_TABLE_FORMAT = 2
+# v3 adds the per-backend "programs" section (grouped/fused GEMV-program
+# winners, keyed by ProgramKey.table_key()); v2 namespaced single-GEMV
+# tables and v1 flat files still load (see AutotuneTable._parse).
+_TABLE_FORMAT = 3
 
 
 def entry_to_plan(entry: dict) -> tuple[str, GemvPlan | None]:
@@ -154,20 +362,25 @@ def plan_to_entry(kernel: str, plan: GemvPlan | None,
 class AutotuneTable:
     """Measured (kernel, plan) winners, namespaced per backend.
 
-    On disk the table is one JSON document::
+    On disk the table is one JSON document (format 3)::
 
-        {"format": 2, "tables": {"tpu": {<shape key>: entry, ...},
-                                 "cpu": {...}}}
+        {"format": 3,
+         "tables":   {"tpu": {<shape key>: entry, ...}, "cpu": {...}},
+         "programs": {"tpu": {<program key>: entry, ...}, ...}}
 
     so tuners running on different substrates merge into a single file
     without key collisions — the heterogeneous-fleet analogue of the paper
-    shipping pre-swept placements per memory configuration.  All mutation is
-    guarded by a lock: engines stepped from a thread pool share one table.
+    shipping pre-swept placements per memory configuration.  ``programs``
+    (new in v3) holds grouped/fused GEMV-program winners; v2 files simply
+    have no such section and v1 flat files migrate as before.  All mutation
+    is guarded by a lock: engines stepped from a thread pool share one
+    table.
     """
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self._tables: dict[str, dict[str, dict]] = {}
+        self._programs: dict[str, dict[str, dict]] = {}
         self._loaded_paths: set[str] = set()
 
     # -- in-memory access ---------------------------------------------------
@@ -181,6 +394,15 @@ class AutotuneTable:
         with self._lock:
             self._tables.setdefault(namespace, {})[key] = dict(entry)
 
+    def get_program(self, namespace: str, key: str) -> dict | None:
+        with self._lock:
+            entry = self._programs.get(namespace, {}).get(key)
+            return dict(entry) if entry is not None else None
+
+    def put_program(self, namespace: str, key: str, entry: dict) -> None:
+        with self._lock:
+            self._programs.setdefault(namespace, {})[key] = dict(entry)
+
     def namespaces(self) -> tuple[str, ...]:
         with self._lock:
             return tuple(sorted(self._tables))
@@ -190,9 +412,15 @@ class AutotuneTable:
             return {ns: {k: dict(e) for k, e in t.items()}
                     for ns, t in self._tables.items()}
 
+    def snapshot_programs(self) -> dict[str, dict[str, dict]]:
+        with self._lock:
+            return {ns: {k: dict(e) for k, e in t.items()}
+                    for ns, t in self._programs.items()}
+
     def clear(self) -> None:
         with self._lock:
             self._tables.clear()
+            self._programs.clear()
             self._loaded_paths.clear()
 
     # -- persistence --------------------------------------------------------
@@ -203,15 +431,26 @@ class AutotuneTable:
     _V1_KEY_SUFFIXES = ("cpu", "tpu", "gpu", "cuda", "rocm")
 
     @classmethod
-    def _parse(cls, doc: dict) -> dict[str, dict[str, dict]]:
-        """Accept the v2 namespaced document or a v1 flat table.
+    def _parse(
+        cls, doc: dict
+    ) -> tuple[dict[str, dict[str, dict]], dict[str, dict[str, dict]]]:
+        """Accept a v3/v2 namespaced document or a v1 flat table; returns
+        ``(tables, programs)``.
 
-        v1 files (PR-1) map suffixed shape keys straight to entries; they
-        load into the ``tpu`` namespace — the kernel set those tables named
-        — with the platform suffix stripped so v2 lookups find them.
+        v2 documents have no ``programs`` section (empty mapping); unknown
+        namespaces in either section load verbatim — a fleet table may name
+        backends this process never registered.  v1 files (PR-1) map
+        suffixed shape keys straight to entries; they load into the ``tpu``
+        namespace — the kernel set those tables named — with the platform
+        suffix stripped so v2+ lookups find them.
         """
         if "tables" in doc and isinstance(doc["tables"], dict):
-            return {ns: dict(t) for ns, t in doc["tables"].items()}
+            tables = {ns: dict(t) for ns, t in doc["tables"].items()}
+            programs = {
+                ns: dict(t)
+                for ns, t in doc.get("programs", {}).items()
+            } if isinstance(doc.get("programs", {}), dict) else {}
+            return tables, programs
         flat = {}
         for k, v in doc.items():
             if not (isinstance(v, dict) and "kernel" in v):
@@ -220,19 +459,25 @@ class AutotuneTable:
             if head and tail in cls._V1_KEY_SUFFIXES:
                 k = head
             flat[k] = v
-        return {"tpu": flat} if flat else {}
+        return ({"tpu": flat} if flat else {}), {}
 
     def load(self, path: str) -> dict[str, dict[str, dict]]:
-        """Merge the table at ``path`` into memory; returns what was read.
+        """Merge the table at ``path`` into memory; returns the single-GEMV
+        ``{backend: {key: entry}}`` section that was read (program entries
+        merge too — inspect them via :meth:`snapshot_programs`).
 
         The returned mapping is the caller's to mutate: entries are copied
         on insert so the shared table can only change under its lock.
         """
         with open(path) as f:
-            parsed = self._parse(json.load(f))
+            parsed, programs = self._parse(json.load(f))
         with self._lock:
             for ns, entries in parsed.items():
                 self._tables.setdefault(ns, {}).update(
+                    {k: dict(e) for k, e in entries.items()}
+                )
+            for ns, entries in programs.items():
+                self._programs.setdefault(ns, {}).update(
                     {k: dict(e) for k, e in entries.items()}
                 )
             self._loaded_paths.add(os.path.abspath(path))
@@ -264,16 +509,20 @@ class AutotuneTable:
         os.makedirs(os.path.dirname(path), exist_ok=True)
         with self._lock:
             merged: dict[str, dict[str, dict]] = {}
+            merged_prog: dict[str, dict[str, dict]] = {}
             try:
                 with open(path) as f:
-                    merged = self._parse(json.load(f))
+                    merged, merged_prog = self._parse(json.load(f))
             except (FileNotFoundError, json.JSONDecodeError):
                 pass
             for ns, entries in self._tables.items():
                 merged.setdefault(ns, {}).update(entries)
+            for ns, entries in self._programs.items():
+                merged_prog.setdefault(ns, {}).update(entries)
             tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
             with open(tmp, "w") as f:
-                json.dump({"format": _TABLE_FORMAT, "tables": merged}, f,
+                json.dump({"format": _TABLE_FORMAT, "tables": merged,
+                           "programs": merged_prog}, f,
                           indent=1, sort_keys=True)
             os.replace(tmp, path)
 
@@ -454,6 +703,165 @@ class GemvBackend:
         if policy.table_path:
             table.save(policy.table_path)
         return best[1], best[2]
+
+    # -- GEMV programs (DESIGN.md §7) ----------------------------------------
+
+    # Joint execution modes this backend implements beyond the universal
+    # per-request decomposition.  Base: none — an unmodified third-party
+    # backend gets correct program dispatch as N independent requests.
+    program_modes: tuple[str, ...] = ()
+
+    def estimate_program_cost_us(
+        self, key: ProgramKey, *, mode: str, x_bytes: int = 2,
+    ) -> float:
+        """Modeled latency (µs) of one program under an execution mode.
+
+        Extends the single-GEMV model with the two terms the program API
+        exists to amortize: **shared-IV traffic** (a fused program reads the
+        input vector once, per-request reads it ``n_requests`` times) and
+        **launch cost** (one launch for a joint mode vs one per request).
+        Weight and output traffic are mode-independent.
+        """
+        cm = self.cost_model
+        w_bytes = key.total_M * key.K * key.bits / 8
+        out_bytes = key.batch * key.total_M * x_bytes
+        if key.kind == "grouped":
+            # every expert has its own token buffer: IV traffic is
+            # per-expert regardless of mode; grouping amortizes launches.
+            iv_reads = key.group
+        else:
+            iv_reads = 1 if mode == "fused" else key.n_requests
+        io = w_bytes + iv_reads * key.batch * key.K * x_bytes + out_bytes
+        launches = 1 if mode in ("fused", "grouped") else key.n_requests
+        t = io / (cm.bandwidth_bps * cm.gemv_efficiency) * 1e6
+        return t + cm.launch_us * launches
+
+    def plan_program(
+        self, key: ProgramKey, *, policy: DispatchPolicy = DEFAULT_POLICY,
+    ) -> ProgramPlan:
+        """(mode, launches, inner decision) for one program shape.
+
+        Default: the per-request decomposition.  Backends that register a
+        joint mode in :attr:`program_modes` get it planned here — ``fused``
+        selects an inner kernel for the concatenated [sum(Ms), K] GEMV with
+        the backend's own ``select_kernel`` (so kernel pins and
+        ``use_pallas`` gates apply to the fused matrix exactly as they
+        would to a single GEMV of that shape); ``grouped`` is one batched
+        contraction over the expert stack.
+        """
+        if not policy.fuse_programs:
+            return ProgramPlan(mode="per_request", n_launches=key.n_requests)
+        if key.kind == "grouped":
+            if "grouped" in self.program_modes:
+                return ProgramPlan(mode="grouped", n_launches=1)
+            return ProgramPlan(mode="per_request", n_launches=key.group)
+        if "fused" in self.program_modes:
+            kernel, plan = self.select_kernel(
+                sum(key.Ms), key.K, key.batch, bits=key.bits,
+                block=key.block, x_bytes=jnp.dtype(key.dtype).itemsize,
+                policy=policy,
+            )
+            return ProgramPlan(mode="fused", n_launches=1, kernel=kernel,
+                               plan=plan)
+        return ProgramPlan(mode="per_request", n_launches=len(key.Ms))
+
+    def execute_program(
+        self, program: GemvProgram, pplan: ProgramPlan,
+        policy: DispatchPolicy, interpret: bool,
+    ) -> jnp.ndarray:
+        """Run one program under a plan.
+
+        Returns ``[B, sum(Ms)]`` for fused-kind programs (split per request
+        with :meth:`GemvProgram.split`) and ``[E, C, M]`` for grouped ones
+        — identical output shape for every mode, so a mode change (table
+        entry, policy flip) can never change a caller's contract.
+        """
+        if pplan.mode == "fused":
+            return self.execute(pplan.kernel, program.x, program.weights,
+                                pplan.plan, interpret)
+        if pplan.mode == "grouped":
+            return self._execute_grouped(program.x, program.weights)
+        # Per-request decomposition, selected and executed entirely on THIS
+        # backend (no registry re-resolution) — the autotune loop times it
+        # as a candidate against the joint mode.  The public dispatch path
+        # (`dispatch.dispatch_program`) instead decomposes through the
+        # plan-cached request path for exact dispatch_gemv parity.
+        outs = []
+        for req in program.requests:
+            K, M = req.weights.shape
+            kernel, plan = self.select_kernel(
+                M, K, req.x.shape[0], bits=req.weights.bits,
+                block=req.weights.block,
+                x_bytes=jnp.dtype(req.x.dtype).itemsize, policy=policy,
+            )
+            outs.append(self.execute(kernel, req.x, req.weights, plan,
+                                     interpret))
+        if program.kind == "grouped":
+            return jnp.stack(outs)
+        return jnp.concatenate(outs, axis=-1)
+
+    def _execute_grouped(self, xs: jnp.ndarray,
+                         pw: PackedWeights) -> jnp.ndarray:
+        """Batched expert contraction: out[E, C, M] = xs[E, C, K] @ w[E, K, M].
+
+        XLA reference with f32 accumulation; quantized stacks dequantize
+        per expert (block scales broadcast over the stacked dim).  Backends
+        with a native grouped kernel override this.
+        """
+        from repro.kernels import ref
+
+        w = pw.w_t
+        if pw.bits == 4:
+            w = ref.unpack_int4(w)
+        if pw.bits < 16:
+            E, K, M = w.shape
+            w = w.astype(jnp.float32).reshape(E, K // pw.block, pw.block, M)
+            w = (w * pw.scales.astype(jnp.float32)[:, :, None, :]
+                 ).reshape(E, K, M)
+        return jnp.einsum(
+            "eck,ekm->ecm", xs.astype(jnp.float32), w.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        ).astype(xs.dtype)
+
+    def autotune_program(
+        self, key: ProgramKey, *, policy: DispatchPolicy,
+        table: AutotuneTable,
+    ) -> ProgramPlan:
+        """Time the joint mode against the per-request decomposition on a
+        synthetic program; persist the winner in the v3 ``programs``
+        section of this backend's namespace."""
+        if policy.table_path:
+            table.ensure_loaded(policy.table_path)
+        tkey = key.table_key()
+        entry = table.get_program(self.name, tkey)
+        if entry is not None:
+            return entry_to_program_plan(entry)
+        interpret = (
+            policy.interpret if policy.interpret is not None
+            else self.default_interpret()
+        )
+        program = _synthesize_program(key)
+        candidates = [self.plan_program(key, policy=policy)]
+        per_req = ProgramPlan(mode="per_request", n_launches=key.n_requests)
+        if candidates[0].mode != "per_request":
+            candidates.append(per_req)
+        best: tuple[float, ProgramPlan] | None = None
+        for cand in candidates:
+            try:
+                us = time_gemv_us(
+                    lambda: self.execute_program(program, cand, policy,
+                                                 interpret)
+                )
+            except Exception:  # a mode that fails to lower never wins
+                continue
+            if best is None or us < best[0]:
+                best = (us, cand)
+        assert best is not None, key
+        table.put_program(self.name, tkey,
+                          program_plan_to_entry(best[1], best[0]))
+        if policy.table_path:
+            table.save(policy.table_path)
+        return best[1]
 
 
 # ---------------------------------------------------------------------------

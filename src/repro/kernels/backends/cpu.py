@@ -42,6 +42,24 @@ from repro.kernels.ops import PackedWeights
 from repro.kernels.tpu_plan import valid_splitk_degree
 
 
+@jax.jit
+def cpu_grouped_gemv(xs: jnp.ndarray, w_t: jnp.ndarray) -> jnp.ndarray:
+    """Grouped/expert GEMV: out[E, C, M] = xs[E, C, K] @ w_t[E, K, M].
+
+    One batched einsum for the whole expert group — XLA:CPU parallelizes
+    over the E contractions, and the group pays ONE dispatch instead of E
+    (the launch-amortization term in the program cost model).  f32
+    accumulation, like every kernel on this backend.
+    """
+    E, C, K = xs.shape
+    E2, K2, M = w_t.shape
+    assert E == E2 and K == K2, (xs.shape, w_t.shape)
+    return jnp.einsum(
+        "eck,ekm->ecm", xs.astype(jnp.float32), w_t.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(xs.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("degree",))
 def cpu_splitk_gemv(
     x: jnp.ndarray, w_t: jnp.ndarray, *, degree: int
@@ -83,6 +101,10 @@ class CpuBackend(GemvBackend):
 
     name = "cpu"
     kernels = ("ref", "splitk", "quant", "quant4")
+    # GEMV programs: fused multi-head runs as one XLA dot on the
+    # concatenated weight (one dispatch, one IV stream); grouped/expert
+    # programs run through ``cpu_grouped_gemv`` (batched einsum).
+    program_modes = ("fused", "grouped")
     # Measured on the reference container (single-socket DDR): ~1/16 of the
     # TPU analogue's HBM bandwidth, near-zero dispatch cost, and the core
     # count as the fill target for the chunked reduce.
@@ -179,6 +201,14 @@ class CpuBackend(GemvBackend):
         return "ref", None
 
     # -- execution ----------------------------------------------------------
+
+    def _execute_grouped(self, xs: jnp.ndarray,
+                         pw: PackedWeights) -> jnp.ndarray:
+        # float stacks take the jitted batched einsum; quantized stacks
+        # keep the base dequant contraction (XLA fuses the dequant).
+        if pw.bits == 16:
+            return cpu_grouped_gemv(xs, pw.w_t)
+        return super()._execute_grouped(xs, pw)
 
     def execute(self, kernel: str, x: jnp.ndarray, pw: PackedWeights,
                 plan: GemvPlan | None, interpret: bool) -> jnp.ndarray:

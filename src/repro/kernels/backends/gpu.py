@@ -76,6 +76,12 @@ class GpuBackend(GemvBackend):
 
     name = "gpu"
     kernels = ("ref", "triton")
+    # GEMV programs: fused multi-head selects an inner kernel for the
+    # concatenated weight through ``select_kernel`` — i.e. behind the same
+    # Triton capability gate as any single GEMV (a fused lm-head-sized M
+    # can fill the SMs where the members alone could not); grouped/expert
+    # programs run the batched XLA contraction (cuBLAS-class batched GEMM).
+    program_modes = ("fused", "grouped")
     cost_model = CostModel(
         bandwidth_gbps=1555.0,     # A100-40GB HBM2e
         gemv_efficiency=0.7,       # library GEMV (cuBLAS-class)

@@ -51,6 +51,13 @@ class TpuBackend(GemvBackend):
 
     name = "tpu"
     kernels = ("ref", "pim", "splitk", "quant", "quant4")
+    # GEMV programs (DESIGN.md §7): a fused multi-head program runs as ONE
+    # Pallas kernel on the concatenated [K, sum(Ms)] weight — the IV chunk
+    # is broadcast once per K-block for the whole head group, and the grid
+    # gains sum(Ms)/m_blk M-blocks (better occupancy than any member alone,
+    # the paper's bank-fill argument applied to fused heads).  Grouped
+    # expert programs run as one batched XLA contraction over the stack.
+    program_modes = ("fused", "grouped")
     # Constants formerly module globals HBM_BW / XLA_GEMV_EFF /
     # PALLAS_LAUNCH_US / PROGRAM_US / MIN_PARALLEL_BLOCKS in dispatch.py.
     cost_model = CostModel(

@@ -1,36 +1,49 @@
-"""Unified GEMV dispatch: one entry point, pluggable backends.
+"""Unified GEMV dispatch: programs of requests, pluggable backends.
 
 The paper's core claim is that GEMV speedup comes from placement decisions
-*parameterized by the memory system* (§IV, Algorithm 1).  PR-1 hard-coded
-one memory system — the v5e-class TPU analogue — into this module; the
-dispatcher is now a thin entry point over the :mod:`repro.kernels.backends`
-registry, where each :class:`~repro.kernels.backends.GemvBackend` bundles
-its kernel set, its frozen cost-model constants, its plan builder, and its
-autotune-table namespace (DESIGN.md §6).  Every GEMV in the repo (serving
-decode projections, ``ops.placed_gemv``, the benchmarks) still routes
-through :func:`dispatch_gemv`, which
+*parameterized by the memory system* (§IV, Algorithm 1) — and its PIM
+broadcasts one command stream and one input-vector chunk to all banks, so
+GEMVs that share an IV (fused QKV, MLP gate+up) or form an expert group
+(MoE) must be planned **together** or the broadcast/launch cost is paid
+once per matrix instead of once per group.  The dispatcher's unit of work
+is therefore the :class:`GemvProgram` — N :class:`GemvRequest`\\ s planned
+jointly (DESIGN.md §7):
+
+* :func:`dispatch_program` — the program entry point.  The resolved
+  :class:`~repro.kernels.backends.GemvBackend` plans the group (a fused-M
+  kernel on the concatenated weight, a batched expert contraction, or the
+  per-request decomposition every backend supports) and executes it;
+* :func:`dispatch_fused` / :func:`dispatch_grouped` — conveniences that
+  build the two first-class program shapes;
+* :func:`dispatch_gemv` / :func:`dispatch_dense` — thin single-request
+  wrappers (one request is the degenerate program).
+
+Every entry point:
 
 1. **resolves a backend** — explicit ``DispatchPolicy.backend`` override,
    else the ``interpret=True`` validation opt-in (TPU analogue), else
    ``jax.default_backend()`` (cpu -> XLA-native, tpu -> Pallas,
    gpu -> Pallas-Triton behind a capability check);
 2. **normalizes weights** into one :class:`PackedWeights` representation
-   (transposed K-major storage; optional int8/int4 + block scales),
-3. **delegates selection** to the backend — cost model, loaded autotune
-   table entry, or measured autotune, in that precedence — and
-4. **memoizes** the (kernel, plan) decision in a process-level, thread-safe
-   plan cache keyed on shape + dtype + backend + policy.
+   (transposed K-major storage; optional int8/int4 + block scales;
+   ``pack_fused``/``PackedWeights.stack`` for program shapes),
+3. **delegates selection/planning** to the backend — cost model, loaded
+   autotune table entry, or measured autotune, in that precedence — and
+4. **memoizes** the decision in a process-level, thread-safe plan cache
+   keyed on shape + dtype + backend + policy.
 
 Plan cache and autotuning
 -------------------------
-``_PLAN_CACHE`` memoizes decisions per :class:`GemvKey` so repeated
-dispatches of one shape (every decode step, every scanned layer) do zero
-planning work; ``plan_cache_stats()`` exposes hit counts.  All cache and
-table mutation is lock-guarded: an :class:`~repro.serving.engine.Engine`
-can be stepped from a thread pool.  With ``policy.autotune=True`` the
-backend times its own candidates and persists winners to the JSON table at
-``policy.table_path`` under the backend's namespace, so one table file
-serves a heterogeneous fleet (see ``backends/base.py:AutotuneTable``).
+``_PLAN_CACHE`` / ``_PROGRAM_CACHE`` memoize decisions per
+:class:`GemvKey` / :class:`ProgramKey` so repeated dispatches of one shape
+(every decode step, every scanned layer) do zero planning work;
+``plan_cache_stats()`` exposes hit counts for both.  All cache and table
+mutation is lock-guarded: an :class:`~repro.serving.engine.Engine` can be
+stepped from a thread pool.  With ``policy.autotune=True`` the backend
+times its own candidates and persists winners to the JSON table at
+``policy.table_path`` under the backend's namespace — single-GEMV entries
+in ``tables``, program entries in the v3 ``programs`` section — so one
+table file serves a heterogeneous fleet (``backends/base.py:AutotuneTable``).
 
 Deprecated surface
 ------------------
@@ -38,12 +51,14 @@ The PR-1 free functions (``select_kernel``, ``estimate_cost_us``,
 ``autotune_gemv``) and cost-model module constants (``HBM_BW``,
 ``XLA_GEMV_EFF``, ``PALLAS_LAUNCH_US``, ``PROGRAM_US``,
 ``MIN_PARALLEL_BLOCKS``, ``KERNELS``) remain as thin shims over the ``tpu``
-backend — the one whose behavior they described — and warn on use.  New
-code should go through ``get_backend(...)`` / the backend methods.
+backend — the one whose behavior they described — and warn **once per call
+site** (they sit on per-step hot paths; see ``_warn_deprecated_once``).
+New code should go through ``get_backend(...)`` / the backend methods.
 """
 
 from __future__ import annotations
 
+import sys
 import threading
 import warnings
 
@@ -55,12 +70,19 @@ from repro.kernels.backends import (
     DispatchPolicy,
     GemvKey,
     GemvPlan,
+    GemvProgram,
+    GemvRequest,
+    ProgramKey,
+    ProgramPlan,
     available_backends,
     get_backend,
     resolve_backend,
     time_gemv_us,  # noqa: F401  (re-export: benchmarks import it from here)
 )
-from repro.kernels.backends.base import entry_to_plan as _entry_to_plan
+from repro.kernels.backends.base import (
+    entry_to_plan as _entry_to_plan,
+    entry_to_program_plan as _entry_to_program_plan,
+)
 from repro.kernels.ops import (
     PackedWeights,
     pack_weight,
@@ -69,7 +91,9 @@ from repro.kernels.tpu_plan import TPUGemvPlan
 
 __all__ = [
     "DispatchPolicy", "DEFAULT_POLICY", "GemvKey", "GemvPlan",
+    "GemvRequest", "GemvProgram", "ProgramKey", "ProgramPlan",
     "dispatch_gemv", "dispatch_dense", "as_packed", "from_transposed",
+    "dispatch_program", "dispatch_fused", "dispatch_grouped",
     "plan_cache_stats", "clear_plan_cache",
     "load_autotune_table", "save_autotune_table", "clear_autotune_table",
     "available_backends", "get_backend", "resolve_backend", "time_gemv_us",
@@ -83,11 +107,13 @@ __all__ = [
 _LOCK = threading.Lock()
 _PLAN_CACHE: dict[tuple[GemvKey, DispatchPolicy],
                   tuple[str, GemvPlan | None]] = {}
+_PROGRAM_CACHE: dict[tuple[ProgramKey, DispatchPolicy], ProgramPlan] = {}
 # Per-key in-flight guards: concurrent cold-cache dispatches of the SAME
 # shape serialize on one selection/autotune sweep instead of each running
 # it (the sweep is seconds when autotuning); distinct shapes stay parallel.
-_KEY_LOCKS: dict[tuple[GemvKey, DispatchPolicy], threading.Lock] = {}
-_CACHE_STATS = {"hits": 0, "misses": 0}
+_KEY_LOCKS: dict[tuple, threading.Lock] = {}
+_CACHE_STATS = {"hits": 0, "misses": 0,
+                "program_hits": 0, "program_misses": 0}
 _AUTOTUNE_TABLE = AutotuneTable()
 
 
@@ -99,8 +125,10 @@ def plan_cache_stats() -> dict[str, int]:
 def clear_plan_cache() -> None:
     with _LOCK:
         _PLAN_CACHE.clear()
+        _PROGRAM_CACHE.clear()
         _KEY_LOCKS.clear()
-        _CACHE_STATS.update(hits=0, misses=0)
+        _CACHE_STATS.update(hits=0, misses=0,
+                            program_hits=0, program_misses=0)
 
 
 def clear_autotune_table() -> None:
@@ -210,31 +238,21 @@ def _resolve(backend, key: GemvKey,
     return kernel, plan
 
 
-def dispatch_gemv(
-    x: jnp.ndarray,
-    weights,
-    *,
-    policy: DispatchPolicy | None = None,
+def _dispatch_request(
+    req: GemvRequest,
+    policy: DispatchPolicy,
     plan: TPUGemvPlan | None = None,
 ) -> jnp.ndarray:
-    """The single GEMV entry point: out[B, M] = x[B, K] @ W.T.
+    """Execute ONE request — the shared path under every entry point.
 
-    ``weights`` is anything :func:`as_packed` accepts.  Backend resolution,
-    kernel selection, and planning happen at trace time from static shapes
-    (zero runtime cost under ``jit``); a ``plan`` argument bypasses
-    selection (the backend coerces it to one of its own kernels).
-
-    Eager callers should prepack once (:func:`~repro.kernels.ops.pack_weight`
-    / :func:`from_transposed`): passing a raw [M, K] array re-transposes it
-    on every eager call — the paper's one-time deployment cost (§V-A2) paid
-    per GEMV.  Under ``jit`` the transpose is traced once and fused.
+    ``dispatch_gemv`` is this with a single caller-built request;
+    a program's ``per_request`` decomposition is N of these.
     """
-    policy = policy or DEFAULT_POLICY
     backend = resolve_backend(policy)
-    pw = as_packed(weights)
+    pw = req.weights
     K, M = pw.shape
-    B = x.shape[0]
-    assert x.shape[1] == K, (x.shape, pw.shape)
+    B = req.x.shape[0]
+    assert req.x.shape[1] == K, (req.x.shape, pw.shape)
     interpret = (
         policy.interpret if policy.interpret is not None
         else backend.default_interpret()
@@ -243,9 +261,37 @@ def dispatch_gemv(
         kernel, plan = backend.coerce_plan(plan, M, K, B, pw, policy)
     else:
         key = GemvKey(M=M, K=K, batch=B, bits=pw.bits, block=pw.block,
-                      dtype=str(x.dtype), backend=backend.name)
+                      dtype=str(req.x.dtype), backend=backend.name)
         kernel, plan = _resolve(backend, key, policy)
-    return backend.execute(kernel, x, pw, plan, interpret)
+    return backend.execute(kernel, req.x, pw, plan, interpret)
+
+
+def dispatch_gemv(
+    x: jnp.ndarray,
+    weights,
+    *,
+    policy: DispatchPolicy | None = None,
+    plan: TPUGemvPlan | None = None,
+) -> jnp.ndarray:
+    """Single-GEMV entry point: out[B, M] = x[B, K] @ W.T.
+
+    A thin single-request wrapper over the request path that
+    :func:`dispatch_program` plans in groups — one ``GemvRequest`` is the
+    degenerate program.  ``weights`` is anything :func:`as_packed` accepts.
+    Backend resolution, kernel selection, and planning happen at trace time
+    from static shapes (zero runtime cost under ``jit``); a ``plan``
+    argument bypasses selection (the backend coerces it to one of its own
+    kernels).
+
+    Eager callers should prepack once (:func:`~repro.kernels.ops.pack_weight`
+    / :func:`from_transposed`): passing a raw [M, K] array re-transposes it
+    on every eager call — the paper's one-time deployment cost (§V-A2) paid
+    per GEMV.  Under ``jit`` the transpose is traced once and fused.
+    """
+    policy = policy or DEFAULT_POLICY
+    return _dispatch_request(
+        GemvRequest(x=x, weights=as_packed(weights)), policy, plan
+    )
 
 
 def dispatch_dense(
@@ -263,6 +309,130 @@ def dispatch_dense(
 
 
 # ---------------------------------------------------------------------------
+# Program dispatch: N requests planned jointly (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+def _resolve_program(backend, key: ProgramKey,
+                     policy: DispatchPolicy) -> ProgramPlan:
+    """Memoized ProgramPlan for one program shape: cache -> table -> plan.
+
+    Mirrors :func:`_resolve`: table entries (the v3 ``programs`` section)
+    stand in for the planner only under an unpinned auto policy; a kernel
+    pin or ``use_pallas=False`` flows into ``plan_program``'s inner
+    selection instead.  ``fuse_programs=False`` outranks table AND
+    autotune — it must always force the per-request decomposition (the
+    dry-run's A/B arm), never inherit a fused winner tuned under another
+    policy, and never persist a per-request "winner" that would disable
+    fusing for every auto policy reading the table later.
+    """
+    with _LOCK:
+        cached = _PROGRAM_CACHE.get((key, policy))
+        if cached is not None:
+            _CACHE_STATS["program_hits"] += 1
+            return cached
+        key_lock = _KEY_LOCKS.setdefault((key, policy), threading.Lock())
+    with key_lock:
+        with _LOCK:  # a racer may have finished while we waited
+            cached = _PROGRAM_CACHE.get((key, policy))
+            if cached is not None:
+                _CACHE_STATS["program_hits"] += 1
+                return cached
+            _CACHE_STATS["program_misses"] += 1
+        tuned = (policy.kernel == "auto" and policy.use_pallas
+                 and policy.fuse_programs)
+        if tuned and policy.autotune:
+            pplan = backend.autotune_program(
+                key, policy=policy, table=_AUTOTUNE_TABLE
+            )
+        elif tuned and (
+            entry := _AUTOTUNE_TABLE.get_program(backend.name,
+                                                 key.table_key())
+        ) is not None:
+            pplan = _entry_to_program_plan(entry)
+        else:
+            pplan = backend.plan_program(key, policy=policy)
+        with _LOCK:
+            _PROGRAM_CACHE[(key, policy)] = pplan
+    return pplan
+
+
+def dispatch_program(
+    program: GemvProgram, *, policy: DispatchPolicy | None = None
+) -> jnp.ndarray:
+    """Execute a :class:`GemvProgram` — N GEMVs planned as one unit.
+
+    The resolved backend plans the whole group (fused-M kernel on the
+    concatenated weight, batched expert contraction, or the per-request
+    decomposition every backend supports) so the IV-broadcast and
+    kernel-launch costs are paid once per *program*, not once per matrix.
+
+    Returns ``[B, sum(Ms)]`` for fused programs (``program.split(out)``
+    slices per request) and ``[E, C, M]`` for grouped ones.
+    """
+    policy = policy or DEFAULT_POLICY
+    backend = resolve_backend(policy)
+    interpret = (
+        policy.interpret if policy.interpret is not None
+        else backend.default_interpret()
+    )
+    pplan = _resolve_program(backend, program.key(backend.name), policy)
+    if pplan.mode == "per_request":
+        # The decomposition IS N single-request dispatches — same plan
+        # cache, autotune table, and selection inputs as dispatch_gemv, so
+        # the unfused arm reproduces per-matrix dispatch exactly.
+        outs = [_dispatch_request(req, policy) for req in program.requests]
+        if program.kind == "grouped":
+            return jnp.stack(outs)
+        return jnp.concatenate(outs, axis=-1)
+    return backend.execute_program(program, pplan, policy, interpret)
+
+
+def dispatch_fused(
+    x: jnp.ndarray, weights, *, policy: DispatchPolicy | None = None,
+) -> list[jnp.ndarray]:
+    """Fused multi-head convenience: shared-IV projections in one program.
+
+    ``x`` is [B, K]; ``weights`` is a sequence whose members are
+    :class:`PackedWeights` or K-major ``[K, M_i]`` arrays (the layout model
+    layers store — matching :func:`dispatch_dense`, NOT the [M, K] form
+    ``dispatch_gemv`` transposes).  Returns the per-member outputs
+    ``[B, M_i]`` in order — e.g. ``q, k, v = dispatch_fused(x, [wq, wk,
+    wv])``.
+
+    The members are concatenated along M here, at call time — under ``jit``
+    that concat executes every step, an extra write+read of the fused
+    weight that XLA cannot elide (the dot needs the contiguous operand).
+    Callers on a per-step hot path who can restructure their parameters
+    should ``ops.pack_fused`` once at deployment and dispatch the prebuilt
+    :class:`GemvProgram` instead — the paper's one-time placement cost
+    (§V-A2) applied to the fused matrix (ROADMAP: prepacked fused weights
+    in the model param tree).
+    """
+    members = [
+        w if isinstance(w, PackedWeights) else from_transposed(jnp.asarray(w))
+        for w in weights
+    ]
+    program = GemvProgram.fused(x, members)
+    return program.split(dispatch_program(program, policy=policy))
+
+
+def dispatch_grouped(
+    xs: jnp.ndarray, weights, *, policy: DispatchPolicy | None = None,
+) -> jnp.ndarray:
+    """Grouped/expert convenience: out[E, C, M] = xs[E, C, K] @ W[E, K, M].
+
+    ``weights`` is a stacked :class:`PackedWeights` (see
+    :meth:`PackedWeights.stack`) or a raw ``[E, K, M]`` array of K-major
+    per-expert projections (the layout MoE layers store).
+    """
+    if not isinstance(weights, PackedWeights):
+        weights = PackedWeights(w_t=jnp.asarray(weights))
+    program = GemvProgram.grouped(xs, weights)
+    return dispatch_program(program, policy=policy)
+
+
+# ---------------------------------------------------------------------------
 # Deprecated PR-1 surface: thin shims over the `tpu` backend
 # ---------------------------------------------------------------------------
 
@@ -275,29 +445,55 @@ _DEPRECATED_CONSTANTS = {
     "MIN_PARALLEL_BLOCKS": lambda cm: cm.min_parallel_blocks,
 }
 
+# Deprecation warnings fire ONCE PER CALL SITE, not per call: the shims sit
+# on per-dispatch hot paths (a scanned decode loop touched a constant per
+# step pre-PR-2), and a warning per step floods logs without adding signal.
+# Keyed on (symbol, caller file, caller line) so distinct sites — and
+# distinct constants read from one line — each still get their one warning.
+_WARNED_SITES: set[tuple[str, str, int]] = set()
+
+
+def _warn_deprecated_once(name: str, message: str, *, depth: int) -> None:
+    """Warn for ``name`` unless this caller site already was warned.
+
+    ``depth`` is the ``sys._getframe`` hop count from this helper to the
+    *user's* frame (1 = our direct caller, 2 = its caller, ...); the same
+    frame feeds ``stacklevel`` so the warning points at the deprecated
+    use, not this helper.
+    """
+    frame = sys._getframe(depth)
+    site = (name, frame.f_code.co_filename, frame.f_lineno)
+    with _LOCK:
+        if site in _WARNED_SITES:
+            return
+        _WARNED_SITES.add(site)
+    warnings.warn(message, DeprecationWarning, stacklevel=depth + 1)
+
 
 def __getattr__(name: str):
     if name in _DEPRECATED_CONSTANTS:
-        warnings.warn(
+        _warn_deprecated_once(
+            name,
             f"repro.kernels.dispatch.{name} is deprecated; cost-model "
             f"constants live on get_backend(<name>).cost_model",
-            DeprecationWarning, stacklevel=2,
+            depth=2,  # helper -> __getattr__ -> the attribute access site
         )
         return _DEPRECATED_CONSTANTS[name](get_backend("tpu").cost_model)
     if name == "KERNELS":
-        warnings.warn(
+        _warn_deprecated_once(
+            "KERNELS",
             "repro.kernels.dispatch.KERNELS is deprecated; use "
             "get_backend(<name>).kernels",
-            DeprecationWarning, stacklevel=2,
+            depth=2,
         )
         return get_backend("tpu").kernels
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def _warn_deprecated_shim(old: str, new: str) -> None:
-    warnings.warn(
-        f"repro.kernels.dispatch.{old} is deprecated; use {new}",
-        DeprecationWarning, stacklevel=3,
+    _warn_deprecated_once(
+        old, f"repro.kernels.dispatch.{old} is deprecated; use {new}",
+        depth=3,  # helper -> this shim -> the deprecated function -> caller
     )
 
 

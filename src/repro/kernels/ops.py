@@ -59,16 +59,60 @@ class PackedWeights:
     back-compat alias (both are re-exported from ``repro.kernels``).
     """
 
-    w_t: jnp.ndarray                  # [K, M] (transposed storage)
+    w_t: jnp.ndarray                  # [K, M] (transposed storage); grouped
+                                      # program weights carry [E, K, M]
     scales: jnp.ndarray | None = None # [K//block, M] for quantized weights
     bits: int = 16
     block: int = 32
 
     @property
     def shape(self) -> tuple[int, int]:
+        """Logical (K, M) of the *last two* axes (int4 packs two K per byte);
+        grouped [E, K, M] weights report the per-member (K, M)."""
+        K, M = self.w_t.shape[-2], self.w_t.shape[-1]
         if self.bits == 4:
-            return (self.w_t.shape[0] * 2, self.w_t.shape[1])
-        return self.w_t.shape
+            K *= 2
+        return (K, M)
+
+    @property
+    def group(self) -> int:
+        """Leading stack size for grouped weights; 1 for a single matrix."""
+        return self.w_t.shape[0] if self.w_t.ndim == 3 else 1
+
+    def member(self, e: int) -> "PackedWeights":
+        """The e-th matrix of a grouped stack as a plain 2-D PackedWeights."""
+        if self.w_t.ndim != 3:
+            raise ValueError("member() requires stacked [E, K, M] weights")
+        return PackedWeights(
+            w_t=self.w_t[e],
+            scales=None if self.scales is None else self.scales[e],
+            bits=self.bits, block=self.block,
+        )
+
+    @staticmethod
+    def stack(members: "list[PackedWeights]") -> "PackedWeights":
+        """Stack same-shape members into grouped [E, K, M] storage.
+
+        The grouped/expert program shape: every member must agree on
+        (K, M, bits, block) — one placement decision serves the whole group
+        (the paper's IV broadcast goes to all banks once per group).
+        """
+        if not members:
+            raise ValueError("cannot stack an empty weight group")
+        head = members[0]
+        for pw in members[1:]:
+            if (pw.w_t.shape != head.w_t.shape or pw.bits != head.bits
+                    or pw.block != head.block):
+                raise ValueError(
+                    f"grouped weights must share shape/bits/block; got "
+                    f"{pw.w_t.shape}/w{pw.bits} vs {head.w_t.shape}/w{head.bits}"
+                )
+        return PackedWeights(
+            w_t=jnp.stack([pw.w_t for pw in members]),
+            scales=(None if head.scales is None
+                    else jnp.stack([pw.scales for pw in members])),
+            bits=head.bits, block=head.block,
+        )
 
 
 # Back-compat alias (PR-1 name); same class, not a subclass, so isinstance
@@ -130,6 +174,40 @@ def placed_gemv(
         interpret=interpret, use_pallas=use_pallas
     )
     return dispatch.dispatch_gemv(x, packed, policy=policy, plan=plan)
+
+
+def pack_fused(
+    members: "list[PackedWeights]",
+) -> tuple[PackedWeights, tuple[int, ...]]:
+    """Concatenate shared-IV projections along M into one fused weight.
+
+    The fused multi-head program shape (QKV, MLP gate+up): every member
+    consumes the same input vector, so placing them as ONE [K, sum(M_i)]
+    matrix lets a single kernel launch broadcast the IV once for the whole
+    group — the launch/IV amortization the per-matrix path pays N times.
+
+    Returns (fused PackedWeights, per-member M splits).  Members must share
+    K, bits, and block; quantized members concatenate scales along M too.
+    """
+    if not members:
+        raise ValueError("cannot fuse an empty projection group")
+    head = members[0]
+    for pw in members[1:]:
+        if (pw.w_t.ndim != 2 or head.w_t.ndim != 2
+                or pw.w_t.shape[0] != head.w_t.shape[0]
+                or pw.bits != head.bits or pw.block != head.block):
+            raise ValueError(
+                f"fused weights must share K/bits/block; got "
+                f"{pw.w_t.shape}/w{pw.bits} vs {head.w_t.shape}/w{head.bits}"
+            )
+    splits = tuple(int(pw.w_t.shape[1]) for pw in members)
+    fused = PackedWeights(
+        w_t=jnp.concatenate([pw.w_t for pw in members], axis=1),
+        scales=(None if head.scales is None
+                else jnp.concatenate([pw.scales for pw in members], axis=1)),
+        bits=head.bits, block=head.block,
+    )
+    return fused, splits
 
 
 def _align_plan_to_block(

@@ -42,14 +42,18 @@ def quant_gemv_ref(
 
 
 def unpack_int4(w_packed: jnp.ndarray) -> jnp.ndarray:
-    """[K//2, M] int8 (two nibbles per byte along K) -> [K, M] int8 in [-8, 7].
+    """[..., K//2, M] int8 (two nibbles per byte along K) -> [..., K, M]
+    int8 in [-8, 7].
 
-    Even K indices live in the low nibble, odd in the high nibble.
+    Even K indices live in the low nibble, odd in the high nibble.  The
+    single source of the nibble convention — leading batch dims (stacked
+    expert groups) pass through unchanged.
     """
     lo = jnp.left_shift(w_packed, 4) >> 4    # arithmetic shift sign-extends
     hi = w_packed >> 4
-    K2, M = w_packed.shape
-    return jnp.stack([lo, hi], axis=1).reshape(2 * K2, M)
+    K2, M = w_packed.shape[-2], w_packed.shape[-1]
+    return jnp.stack([lo, hi], axis=-2).reshape(
+        *w_packed.shape[:-2], 2 * K2, M)
 
 
 def quant4_gemv_ref(

@@ -104,12 +104,15 @@ def cost_analysis_dict(cost) -> dict:
     return dict(cost)
 
 
-def _build_step(cfg, shape, mesh, gemv_backend=None):
+def _build_step(cfg, shape, mesh, gemv_backend=None, gemv_fused=True):
     """Returns (fn, kwargs_specs, in_shardings_tree) for this cell.
 
     ``gemv_backend`` routes decode-cell projections through the unified
     GEMV dispatcher pinned to that registered backend (kernels/backends);
     None keeps the plain einsum path the dry-run has always lowered.
+    ``gemv_fused`` additionally plans shared-IV projections (QKV, MLP
+    gate+up) and MoE expert groups as joint GEMV programs; False lowers
+    the per-matrix dispatch of PR-2 for A/B comparison of the two HLOs.
     """
     from repro.distributed import sharding as shd
     from repro.launch.shapes import input_specs
@@ -161,7 +164,8 @@ def _build_step(cfg, shape, mesh, gemv_backend=None):
     if gemv_backend is not None and shape.kind == "decode":
         from repro.kernels.dispatch import DispatchPolicy
 
-        gemv_policy = DispatchPolicy(backend=gemv_backend)
+        gemv_policy = DispatchPolicy(backend=gemv_backend,
+                                     fuse_programs=gemv_fused)
 
     def fn(params, tokens, cache, extra):
         logits, new_cache, _ = lm.forward(
@@ -259,7 +263,8 @@ def roofline_corrected(cfg, shape) -> dict:
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
-             roofline: bool = True, gemv_backend: str | None = None) -> dict:
+             roofline: bool = True, gemv_backend: str | None = None,
+             gemv_fused: bool = True) -> dict:
     """Lower + compile one (arch, shape, mesh) cell; returns the record."""
     from repro.configs.registry import get_config
     from repro.launch.mesh import make_production_mesh
@@ -283,6 +288,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         # only installs the policy for decode-kind cells).
         "gemv_backend": gemv_backend or resolve_backend(None).name,
         "gemv_dispatch": gemv_backend is not None and shape.kind == "decode",
+        # Whether decode projections lower as joint GEMV programs (fused
+        # QKV / gate+up, grouped MoE experts) vs per-matrix dispatch.
+        "gemv_fused": (gemv_fused and gemv_backend is not None
+                       and shape.kind == "decode"),
     }
     if not ok:
         rec["status"] = "skipped"
@@ -295,7 +304,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
 
     t0 = time.perf_counter()
     fn, args, in_sh, donate, out_sh = _build_step(
-        cfg, shape, mesh, gemv_backend=gemv_backend
+        cfg, shape, mesh, gemv_backend=gemv_backend, gemv_fused=gemv_fused
     )
     with activation_mesh(mesh):
         jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
@@ -364,6 +373,9 @@ def main(argv=None) -> int:
     ap.add_argument("--gemv-backend", default=None,
                     help="route decode-cell GEMVs through this registered "
                          "GemvBackend (cpu|gpu|tpu); default keeps einsum")
+    ap.add_argument("--no-gemv-fused", action="store_true",
+                    help="with --gemv-backend: per-matrix dispatch instead "
+                         "of fused/grouped GEMV programs (A/B the HLOs)")
     args = ap.parse_args(argv)
 
     from repro.configs.registry import ARCHS
@@ -381,7 +393,8 @@ def main(argv=None) -> int:
                 try:
                     rec = run_cell(arch, shape, mesh_kind,
                                    roofline=not args.no_roofline,
-                                   gemv_backend=args.gemv_backend)
+                                   gemv_backend=args.gemv_backend,
+                                   gemv_fused=not args.no_gemv_fused)
                 except Exception as e:
                     failures += 1
                     rec = {

@@ -164,15 +164,36 @@ def apply_attention(
     window: jnp.ndarray | int | None,
     cache_kv: tuple[jnp.ndarray, jnp.ndarray] | None = None,
     cache_pos: jnp.ndarray | None = None,  # [] scalar write offset
+    gemv=None,                             # DispatchPolicy for decode QKV
 ) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray] | None]:
     """Self-attention with optional KV cache (decode).
 
     cache_kv: ([B, C, Hkv, D], [B, C, Hkv, D]) rolling caches. When given,
     new K/V are written at ``cache_pos`` and attention runs over the cache.
+
+    With a ``gemv`` DispatchPolicy and a single-token input, the Q/K/V
+    projections run as ONE fused GEMV program (shared input vector, one
+    kernel launch for the whole head group) instead of three einsums — the
+    paper's IV-broadcast amortization at the decode hot path.
     """
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
-    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
-    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    B, S, d = x.shape
+    if gemv is not None and S == 1 and gemv.fuse_programs:
+        from repro.kernels.dispatch import dispatch_fused
+
+        hd = cfg.hd
+        q2, k2, v2 = dispatch_fused(
+            x.reshape(B, d),
+            [p["wq"].reshape(d, -1), p["wk"].reshape(d, -1),
+             p["wv"].reshape(d, -1)],
+            policy=gemv,
+        )
+        q = q2.reshape(B, S, -1, hd)
+        k = k2.reshape(B, S, -1, hd)
+        v = v2.reshape(B, S, -1, hd)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
 
@@ -245,15 +266,29 @@ def apply_mlp(
 ) -> jnp.ndarray:
     """FFN. With a ``gemv`` DispatchPolicy and a single-token input (decode
     step), the projections route through the unified GEMV dispatcher —
-    the paper's per-shape placement decision at the decode hot path."""
-    if gemv is not None and x.shape[1] == 1:
-        from repro.kernels.dispatch import dispatch_dense
+    the paper's per-shape placement decision at the decode hot path.  The
+    gate and up projections share the input vector, so under a
+    program-fusing policy they dispatch as ONE fused GEMV program (one
+    launch, one IV broadcast) instead of two."""
+    decode_gemv = gemv is not None and x.shape[1] == 1
+    if decode_gemv:
+        from repro.kernels.dispatch import dispatch_dense, dispatch_fused
 
         def mm(a, w):
             return dispatch_dense(a, w, policy=gemv)
     else:
         def mm(a, w):
             return a @ w
+
+    if (decode_gemv and gemv.fuse_programs
+            and cfg.act in ("silu", "geglu")):
+        B, S, d = x.shape
+        g2, u2 = dispatch_fused(
+            x.reshape(B * S, d), [p["w_gate"], p["w_up"]], policy=gemv
+        )
+        gate, up = g2.reshape(B, S, -1), u2.reshape(B, S, -1)
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+        return mm(act(gate) * up, p["w_down"])
 
     up = mm(x, p["w_up"])
     if cfg.act == "silu":
@@ -332,9 +367,16 @@ def _combine_chunk(out, plan, T):
 
 
 def apply_moe(
-    p: Params, x: jnp.ndarray, cfg: ModelConfig
+    p: Params, x: jnp.ndarray, cfg: ModelConfig, gemv=None
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """x: [B, S, d] -> (y, aux_loss).
+
+    With a ``gemv`` DispatchPolicy and a single-token input (decode step),
+    the expert FFNs run as **grouped GEMV programs** through the unified
+    dispatcher (stacked [E, K, M] weights, per-expert token buffers) — the
+    MoE configs become real dispatch workloads instead of dense-einsum
+    bypasses, and the whole expert group pays one launch per projection.
+    Training/prefill shapes keep the einsum path below.
 
     CHUNKED sort-based dispatch (§Perf iteration 3 in EXPERIMENTS.md):
     routing, capacity, and the scatter/gather run per SEQUENCE (vmap over
@@ -382,10 +424,31 @@ def apply_moe(
     buf = constrain(buf, ("batch", "model", None, None))
 
     # ---- expert FFNs (batched over [B, E]) ----
+    grouped_gemv = gemv is not None and S == 1 and gemv.fuse_programs
+    if grouped_gemv:
+        # Decode: grouped GEMV programs over the expert stack.  The [B, E,
+        # C, d] buffers flatten to per-expert token batches [E, B*C, d];
+        # each projection is ONE program (one batched contraction / launch)
+        # instead of an E-way einsum the dispatcher never sees.
+        from repro.kernels.dispatch import dispatch_grouped
+
+        C_cap = buf.shape[2]
+
+        def expert_proj(t, w):  # t: [B, E, C, f_in], w: [E, f_in, f_out]
+            ts = t.transpose(1, 0, 2, 3).reshape(e.n_experts, B * C_cap, -1)
+            out = dispatch_grouped(ts, w, policy=gemv)
+            return out.reshape(e.n_experts, B, C_cap, -1).transpose(
+                1, 0, 2, 3)
     if cfg.act in ("silu", "geglu"):
         act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
-        h = act(jnp.einsum("becd,edf->becf", buf, p["w_gate"]))
-        h = h * jnp.einsum("becd,edf->becf", buf, p["w_up"])
+        if grouped_gemv:
+            h = act(expert_proj(buf, p["w_gate"]))
+            h = h * expert_proj(buf, p["w_up"])
+        else:
+            h = act(jnp.einsum("becd,edf->becf", buf, p["w_gate"]))
+            h = h * jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    elif grouped_gemv:
+        h = jax.nn.gelu(expert_proj(buf, p["w_up"]))
     else:
         h = jax.nn.gelu(jnp.einsum("becd,edf->becf", buf, p["w_up"]))
     # Placement sweep (Algorithm-1 analogue, §Perf A4): experts on 'model'
@@ -396,7 +459,10 @@ def apply_moe(
         ("batch", "model", None, None),      # expert-parallel
         ("batch", None, None, "model"),      # TP-in-expert (f sharded)
     ])
-    out = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    if grouped_gemv:
+        out = expert_proj(h, p["w_down"])
+    else:
+        out = jnp.einsum("becf,efd->becd", h, p["w_down"])
     # (A2 note, EXPERIMENTS.md §Perf: forcing an a2a back to batch-sharding
     # here before the combine gather was TRIED and refuted — GSPMD's own
     # gather+all-reduce schedule was cheaper. Keep expert-sharded.)
@@ -407,5 +473,5 @@ def apply_moe(
     y = constrain(y, ("batch", None, None))
 
     if e.n_shared:
-        y = y + apply_mlp(p["shared"], x, cfg)
+        y = y + apply_mlp(p["shared"], x, cfg, gemv=gemv)
     return y, aux

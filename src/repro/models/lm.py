@@ -189,7 +189,7 @@ def _self_block(
     h = L.apply_norm(p["ln1"], x, cfg)
     attn_out, new_kv = L.apply_attention(
         p["attn"], h, cfg, positions=positions, window=window,
-        cache_kv=cache_kv, cache_pos=cache_pos,
+        cache_kv=cache_kv, cache_pos=cache_pos, gemv=gemv,
     )
     new_state = {}
     if cfg.parallel_ssm:
@@ -203,7 +203,7 @@ def _self_block(
     x = x + attn_out
     h = L.apply_norm(p["ln2"], x, cfg)
     if cfg.moe is not None:
-        ff, aux = L.apply_moe(p["moe"], h, cfg)
+        ff, aux = L.apply_moe(p["moe"], h, cfg, gemv=gemv)
     else:
         ff = L.apply_mlp(p["mlp"], h, cfg, gemv=gemv)
     x = x + ff
@@ -298,11 +298,14 @@ def forward(
 
     ``gemv_policy`` (a ``repro.kernels.dispatch.DispatchPolicy``) engages
     the unified GEMV dispatcher for single-token (decode) projections: the
-    MLP up/gate/down matmuls and the LM head. The dispatcher resolves a
+    QKV projections and MLP gate+up dispatch as **fused GEMV programs**
+    (shared input vector, one launch per group), MoE expert FFNs as
+    **grouped programs** over the stacked expert weights, and the MLP down
+    projection and LM head as single requests.  The dispatcher resolves a
     ``GemvBackend`` (``gemv_policy.backend`` or the host platform) and that
-    backend picks the kernel per projection shape. Prefill and training
-    shapes (Sq > 1) keep the plain einsum path — they are matmul-bound, not
-    GEMV-bound.
+    backend plans kernel/program per shape; ``fuse_programs=False``
+    restores per-matrix dispatch.  Prefill and training shapes (Sq > 1)
+    keep the plain einsum path — they are matmul-bound, not GEMV-bound.
     """
     B, Sq = tokens.shape
     dtype = jnp.dtype(cfg.compute_dtype)

@@ -7,15 +7,19 @@ slots, finished slots are refilled without stopping the decode loop (vLLM-
 style at laptop scale) — exercised on the reduced configs in tests/examples.
 
 Decode-time matmuls are where the paper's technique lives: with batch <=
-``gemv_batch_threshold`` the MLP projections and LM head route through the
-unified GEMV dispatcher (``repro.kernels.dispatch``), which resolves a
-``GemvBackend`` from the runtime — Pallas kernels on TPU, the XLA-native
-path (plain dot / pre-chunked split-K) on CPU, Pallas-Triton behind a
-capability check on GPU — and picks a kernel per shape from that backend's
-cost model (``use_pim_kernels=True``). ``gemv_backend`` pins a registered
-backend by name for the engine's lifetime (e.g. a CPU-serving tier in a
-heterogeneous fleet); auto picks on a CPU host never execute
-interpret-mode Pallas (that is a validation harness, not a serving path).
+``gemv_batch_threshold`` the decode projections route through the unified
+GEMV dispatcher (``repro.kernels.dispatch``) as **GEMV programs** — QKV
+and MLP gate+up as fused shared-IV programs, MoE expert FFNs as grouped
+programs over the stacked expert weights, the LM head as a single request.
+The dispatcher resolves a ``GemvBackend`` from the runtime — Pallas
+kernels on TPU, the XLA-native path (plain dot / pre-chunked split-K /
+batched expert einsum) on CPU, Pallas-Triton behind a capability check on
+GPU — and plans kernel/program per shape from that backend's cost model
+(``use_pim_kernels=True``). ``gemv_backend`` pins a registered backend by
+name for the engine's lifetime (e.g. a CPU-serving tier in a heterogeneous
+fleet); ``gemv_fuse_programs=False`` restores per-matrix dispatch; auto
+picks on a CPU host never execute interpret-mode Pallas (that is a
+validation harness, not a serving path).
 """
 
 from __future__ import annotations
@@ -81,7 +85,8 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
                  max_len: int = 128, use_pim_kernels: bool = True,
                  gemv_batch_threshold: int = 8,
-                 gemv_backend: str | None = None):
+                 gemv_backend: str | None = None,
+                 gemv_fuse_programs: bool = True):
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
@@ -91,9 +96,13 @@ class Engine:
         # XLA path (decode becomes matmul-shaped), so the policy is safe to
         # install unconditionally when use_pim_kernels is on.
         # ``gemv_backend=None`` resolves per host platform at dispatch time.
+        # ``gemv_fuse_programs`` plans shared-IV projections (QKV, MLP
+        # gate+up) and MoE expert groups as joint GEMV programs — one
+        # launch per group per step; False restores per-matrix dispatch.
         self.gemv_policy = (
             DispatchPolicy(batch_threshold=gemv_batch_threshold,
-                           backend=gemv_backend)
+                           backend=gemv_backend,
+                           fuse_programs=gemv_fuse_programs)
             if use_pim_kernels else None
         )
         self.prefill_fn, self.decode_fn = build_serve_fns(

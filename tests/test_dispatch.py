@@ -262,7 +262,7 @@ def test_autotune_roundtrip_json(tmp_path):
                                atol=1e-3)
     with open(table_path) as f:
         doc = json.load(f)
-    assert doc["format"] == 2
+    assert doc["format"] == 3              # v3: adds the programs section
     assert set(doc["tables"]) == {"tpu"}   # interpret opt-in tunes the TPU
     table = doc["tables"]["tpu"]           # analogue's namespace
     assert len(table) == 1

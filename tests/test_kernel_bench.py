@@ -45,8 +45,28 @@ def test_tpu_rows_reproduce_pr1_headline():
         assert r["picked"] == expect, (shape, r["picked"])
 
 
+@pytest.mark.parametrize("backend", ["tpu", "cpu", "gpu"])
+def test_program_rows_amortize_launches(backend):
+    """The acceptance lock: every grouped/fused program row plans strictly
+    fewer kernel launches than N independent dispatches, and the modeled
+    program cost never exceeds the per-request decomposition (shared-IV +
+    launch-amortization terms)."""
+    rows = kernel_bench.program_rows(backend_name=backend)
+    assert len(rows) == len(kernel_bench.registry_program_shapes())
+    kinds = {r["kind"] for r in rows}
+    assert kinds == {"fused", "grouped"}
+    for r in rows:
+        assert r["backend"] == backend
+        assert r["launches_program"] < r["launches_independent"], r
+        assert r["launches_program"] == 1
+        assert r["model_us/program"] <= r["model_us/independent"], r
+        if r["mode"] == "fused":
+            assert r["kernel"] in get_backend(backend).kernels
+
+
 def test_json_cli_output_parses(tmp_path):
-    """Smoke test for the --json flag: run the CLI, parse the records."""
+    """Smoke test for the --json flag: run the CLI, parse the schema-2
+    document (dispatch rows + program rows)."""
     out_path = str(tmp_path / "bench.json")
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
@@ -57,12 +77,22 @@ def test_json_cli_output_parses(tmp_path):
         capture_output=True, text=True, env=env, timeout=300,
     )
     assert proc.returncode == 0, proc.stderr[-2000:]
-    records = json.load(open(out_path))
+    doc = json.load(open(out_path))
+    assert doc["schema"] == kernel_bench.SCHEMA_VERSION
+    records = doc["rows"]
     assert len(records) == len(kernel_bench.registry_gemv_shapes())
     for rec in records:
         for field in ("shape", "M", "K", "B", "backend", "picked"):
             assert field in rec, rec
         assert rec["backend"] == "cpu"
         assert any(k.startswith("model_us/") for k in rec)
-    # stdout carries the human-readable table alongside
+    prog = doc["program_rows"]
+    assert len(prog) == len(kernel_bench.registry_program_shapes())
+    for rec in prog:
+        for field in ("shape", "kind", "Ms", "K", "B", "group", "mode",
+                      "launches_program", "launches_independent"):
+            assert field in rec, rec
+        assert rec["launches_program"] < rec["launches_independent"]
+    # stdout carries the human-readable tables alongside
     assert "dispatch/" in proc.stdout
+    assert "program/" in proc.stdout

@@ -16,6 +16,7 @@ from repro.core.placement import (
     Placement,
     SplitK,
     TileOrder,
+    TileShape,
     baseline_colmajor_placement,
     baseline_rowmajor_placement,
     cr_order,
@@ -211,6 +212,63 @@ def test_materialize_stream_covers_matrix():
     stream = materialize(W, p)
     assert stream.shape[0] == p.m_TM * p.k_TM
     assert np.sort(stream.reshape(-1)).sum() == np.sort(W.reshape(-1)).sum()
+
+
+@given(
+    M=st.integers(1, 200),
+    K=st.integers(1, 200),
+    m_tile=st.sampled_from([2, 8, 32]),
+    k_tile=st.sampled_from([2, 8, 32]),
+)
+@settings(max_examples=100, deadline=None)
+def test_tile_roundtrip_ragged(M, K, m_tile, k_tile):
+    """Round-trip holds for ANY (M, K), including ragged edges: the tiler
+    zero-pads, the untiler drops exactly that padding."""
+    W = (np.arange(M * K, dtype=np.int64) + 1).reshape(M, K)
+    tiles = tile_matrix_roworder(W, m_tile, k_tile)
+    m_TM = math.ceil(M / m_tile)
+    k_TM = math.ceil(K / k_tile)
+    assert tiles.shape == (m_TM * k_TM, m_tile * k_tile)
+    back = untile_matrix_roworder(tiles, M, K, m_tile, k_tile)
+    np.testing.assert_array_equal(W, back)
+    # padding is zeros only — tile stream content equals the matrix content
+    assert tiles.sum() == W.sum()
+
+
+@given(
+    spread=st.integers(1, 3),
+    k_TM=st.integers(1, 6),
+    deg=st.sampled_from([1, 2]),
+    m_tile=st.sampled_from([2, 8]),
+    k_tile=st.sampled_from([2, 8]),
+)
+@settings(max_examples=60, deadline=None)
+def test_materialize_roundtrip(spread, k_TM, deg, m_tile, k_tile):
+    """materialize is invertible: undoing the CR-order permutation and
+    untiling the stream reproduces the original matrix exactly — the
+    virtual-address view loses no elements and aliases none (paper §V-A1)."""
+    banks = 16
+    m_TM = banks * deg * spread
+    M, K = m_TM * m_tile, k_TM * k_tile
+    g = GEMV(M, K, INT8, BF16)
+    tile = get_param(g, CFG, m_tile, k_tile)
+    p = Placement(
+        gemv=g,
+        tile=TileShape(m_tile, k_tile, tile[0], tile[1], even=True),
+        order=TileOrder.COLUMN_ROW, cr_degree=deg, split_k=SplitK(1),
+        in_reg_alloc=8, banks_used=banks, channels_used=2,
+    )
+    W = (np.arange(M * K, dtype=np.int64) % 251).reshape(M, K)
+    stream = materialize(W, p)
+    order = (
+        cr_order_with_degree(m_TM, k_TM, banks, deg) if deg > 1
+        else cr_order(m_TM, k_TM, banks)
+    )
+    # stream[j] == tiles[order[j]]  =>  invert the placement permutation
+    tiles = np.empty_like(stream)
+    tiles[order] = stream
+    back = untile_matrix_roworder(tiles, M, K, m_tile, k_tile)
+    np.testing.assert_array_equal(W, back)
 
 
 # --------------------------------------------------------------------------

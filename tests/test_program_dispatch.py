@@ -1,0 +1,413 @@
+"""GEMV programs (DESIGN.md §7): fused/grouped correctness vs the einsum
+oracle, launch amortization, program plan caching, autotune-table v3
+(programs section + v1/v2 migration edges), the model-layer integration,
+and the warn-once deprecation contract."""
+
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch, ops
+from repro.kernels.backends import (
+    GemvProgram,
+    ProgramKey,
+    get_backend,
+)
+from repro.kernels.dispatch import DispatchPolicy
+
+RNG = np.random.default_rng(3)
+
+CPU = DispatchPolicy(backend="cpu")
+INTERP = DispatchPolicy(interpret=True)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    dispatch.clear_plan_cache()
+    dispatch.clear_autotune_table()
+    yield
+    dispatch.clear_plan_cache()
+    dispatch.clear_autotune_table()
+
+
+def _mk_fused(K, Ms, B):
+    x = RNG.standard_normal((B, K)).astype(np.float32)
+    ws = [RNG.standard_normal((K, M)).astype(np.float32) for M in Ms]
+    return x, ws
+
+
+def _mk_grouped(E, C, K, M):
+    xs = RNG.standard_normal((E, C, K)).astype(np.float32)
+    w = RNG.standard_normal((E, K, M)).astype(np.float32)
+    return xs, w
+
+
+# --------------------------------------------------------------------------
+# Fused multi-head programs (shared IV): QKV / gate+up shapes
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", [CPU, INTERP], ids=["cpu", "tpu-interp"])
+def test_fused_qkv_matches_reference(policy):
+    """Acceptance: a fused QKV-shaped program matches the per-matrix einsum
+    to fp tolerance (gemma3-1b decode QKV widths)."""
+    K, Ms, B = 1152, (1024, 256, 256), 2
+    x, ws = _mk_fused(K, Ms, B)
+    outs = dispatch.dispatch_fused(jnp.asarray(x), ws, policy=policy)
+    assert [o.shape for o in outs] == [(B, M) for M in Ms]
+    for o, w in zip(outs, ws):
+        np.testing.assert_allclose(np.asarray(o), x @ w, rtol=1e-4,
+                                   atol=1e-3)
+
+
+def test_fused_program_single_launch_and_kernel():
+    """A fused program plans ONE inner kernel on the concatenated weight —
+    on the TPU backend that is a Pallas kernel (pim/splitk), the fused-M
+    placement the API exists for."""
+    tpu = get_backend("tpu")
+    key = ProgramKey(kind="fused", Ms=(1024, 256, 256), K=1152, batch=1,
+                     group=3, bits=16, block=32, dtype="float32",
+                     backend="tpu")
+    pplan = tpu.plan_program(key, policy=INTERP)
+    assert pplan.mode == "fused" and pplan.n_launches == 1
+    assert pplan.kernel in ("pim", "splitk")
+    # the inner selection is EXACTLY the single-GEMV selection for the
+    # concatenated shape — program planning adds no new selection logic
+    kernel, plan = tpu.select_kernel(sum(key.Ms), key.K, key.batch,
+                                     policy=INTERP)
+    assert (pplan.kernel, pplan.plan) == (kernel, plan)
+
+
+def test_fused_quantized_members_concatenate_scales():
+    K, Ms, B = 256, (128, 128), 1
+    x, ws = _mk_fused(K, Ms, B)
+    pqs = [ops.quantize_weight(w.T, bits=8, block=32) for w in ws]
+    outs = dispatch.dispatch_fused(jnp.asarray(x), pqs, policy=CPU)
+    for o, w in zip(outs, ws):
+        ref = x @ w
+        rel = np.abs(np.asarray(o) - ref).max() / np.abs(ref).max()
+        assert rel < 0.05
+    with pytest.raises(ValueError, match="share K/bits/block"):
+        ops.pack_fused([pqs[0], ops.pack_weight(jnp.asarray(ws[1].T))])
+
+
+def test_per_request_fallback_matches_joint():
+    """fuse_programs=False decomposes into N independent dispatches with
+    identical outputs (and N launches — the pre-program behavior)."""
+    K, Ms, B = 512, (256, 128), 1
+    x, ws = _mk_fused(K, Ms, B)
+    joint = dispatch.dispatch_fused(jnp.asarray(x), ws, policy=CPU)
+    apart = dispatch.dispatch_fused(
+        jnp.asarray(x), ws, policy=DispatchPolicy(backend="cpu",
+                                                  fuse_programs=False))
+    for a, b in zip(joint, apart):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    cpu = get_backend("cpu")
+    key = ProgramKey(kind="fused", Ms=Ms, K=K, batch=B, group=len(Ms),
+                     bits=16, block=32, dtype="float32", backend="cpu")
+    off = cpu.plan_program(key, policy=DispatchPolicy(
+        backend="cpu", fuse_programs=False))
+    assert off.mode == "per_request" and off.n_launches == len(Ms)
+
+
+# --------------------------------------------------------------------------
+# Grouped/expert programs: MoE decode shapes
+# --------------------------------------------------------------------------
+
+
+def test_grouped_deepseek_expert_group_matches_reference():
+    """Acceptance: a deepseek-moe-16b expert group (true per-expert
+    projection shape d_model -> d_expert, an 8-expert subgroup) matches
+    the reference einsum to fp tolerance on CPU."""
+    from repro.configs.registry import ARCHS
+
+    cfg = ARCHS["deepseek-moe-16b"]
+    E, C, K, M = 8, 4, cfg.d_model, cfg.moe.d_expert
+    xs, w = _mk_grouped(E, C, K, M)
+    out = dispatch.dispatch_grouped(jnp.asarray(xs), jnp.asarray(w),
+                                    policy=CPU)
+    assert out.shape == (E, C, M)
+    np.testing.assert_allclose(
+        np.asarray(out), np.einsum("eck,ekm->ecm", xs, w),
+        rtol=1e-4, atol=1e-3,
+    )
+    # grouped plans: one batched contraction vs E independent dispatches
+    cpu = get_backend("cpu")
+    key = ProgramKey(kind="grouped", Ms=(M,), K=K, batch=C, group=E,
+                     bits=16, block=32, dtype="float32", backend="cpu")
+    pplan = cpu.plan_program(key, policy=CPU)
+    assert pplan.mode == "grouped" and pplan.n_launches == 1
+    assert cpu.estimate_program_cost_us(key, mode="grouped") < \
+        cpu.estimate_program_cost_us(key, mode="per_request")
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_grouped_quantized_stack_dequantizes(bits):
+    """The grouped executor's per-expert dequant must match the single-GEMV
+    dequant oracles exactly (same scales, same nibble unpack)."""
+    from repro.kernels import ref
+
+    E, C, K, M = 4, 2, 128, 64
+    xs = RNG.standard_normal((E, C, K)).astype(np.float32)
+    ws = [RNG.standard_normal((M, K)).astype(np.float32) for _ in range(E)]
+    members = [ops.quantize_weight(w, bits=bits, block=32) for w in ws]
+    stacked = ops.PackedWeights.stack(members)
+    assert stacked.group == E and stacked.shape == (K, M)
+    out = dispatch.dispatch_grouped(jnp.asarray(xs), stacked, policy=CPU)
+    oracle = (ref.quant_gemv_ref if bits == 8 else ref.quant4_gemv_ref)
+    for e in range(E):
+        want = oracle(members[e].w_t, members[e].scales,
+                      jnp.asarray(xs[e]), 32)
+        np.testing.assert_allclose(np.asarray(out[e]), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_per_request_fallback_matches():
+    E, C, K, M = 4, 2, 64, 128
+    xs, w = _mk_grouped(E, C, K, M)
+    joint = dispatch.dispatch_grouped(jnp.asarray(xs), jnp.asarray(w),
+                                      policy=CPU)
+    apart = dispatch.dispatch_grouped(
+        jnp.asarray(xs), jnp.asarray(w),
+        policy=DispatchPolicy(backend="cpu", fuse_programs=False))
+    np.testing.assert_allclose(np.asarray(joint), np.asarray(apart),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_program_shape_validation():
+    xs, w = _mk_grouped(4, 2, 64, 32)
+    with pytest.raises(ValueError, match="stacked"):
+        GemvProgram.grouped(jnp.asarray(xs),
+                            ops.pack_weight(jnp.ones((8, 4))))
+    with pytest.raises(ValueError, match=r"\[E, C, K\]"):
+        GemvProgram.grouped(jnp.asarray(xs[:2]),
+                            dispatch.PackedWeights(w_t=jnp.asarray(w)))
+    with pytest.raises(ValueError, match="empty"):
+        ops.pack_fused([])
+    with pytest.raises(ValueError, match="share shape"):
+        ops.PackedWeights.stack([ops.pack_weight(jnp.ones((8, 4))),
+                                 ops.pack_weight(jnp.ones((8, 8)))])
+
+
+# --------------------------------------------------------------------------
+# Program plan cache
+# --------------------------------------------------------------------------
+
+
+def test_program_plans_are_cached_per_shape_and_policy():
+    K, Ms, B = 256, (128, 64), 1
+    x, ws = _mk_fused(K, Ms, B)
+    xj = jnp.asarray(x)
+    dispatch.dispatch_fused(xj, ws, policy=CPU)
+    dispatch.dispatch_fused(xj, ws, policy=CPU)         # same key: hit
+    dispatch.dispatch_fused(
+        xj, ws, policy=DispatchPolicy(backend="cpu",
+                                      fuse_programs=False))  # new policy
+    stats = dispatch.plan_cache_stats()
+    assert stats["program_hits"] == 1
+    assert stats["program_misses"] == 2
+    # joint dispatch never touches the single-GEMV cache; the per-request
+    # decomposition goes through it once per member shape (dispatch_gemv
+    # parity — same cache, same table)
+    assert stats["misses"] == 2
+
+
+# --------------------------------------------------------------------------
+# Autotune table v3: programs section + migration edges
+# --------------------------------------------------------------------------
+
+
+def test_program_autotune_persists_v3_and_reloads(tmp_path):
+    table_path = str(tmp_path / "t.json")
+    pol = DispatchPolicy(backend="cpu", autotune=True,
+                         table_path=table_path)
+    K, Ms, B = 256, (128, 64), 1
+    x, ws = _mk_fused(K, Ms, B)
+    outs = dispatch.dispatch_fused(jnp.asarray(x), ws, policy=pol)
+    for o, w in zip(outs, ws):
+        np.testing.assert_allclose(np.asarray(o), x @ w, rtol=1e-4,
+                                   atol=1e-3)
+    doc = json.load(open(table_path))
+    assert doc["format"] == 3
+    assert set(doc["programs"]) == {"cpu"}
+    (pkey,) = doc["programs"]["cpu"]
+    entry = doc["programs"]["cpu"][pkey]
+    assert entry["mode"] in ("fused", "per_request")
+    assert entry["us"] > 0
+
+    # a fresh process reuses the persisted winner without re-timing
+    dispatch.clear_plan_cache()
+    dispatch.clear_autotune_table()
+    before = json.load(open(table_path))
+    dispatch.dispatch_fused(jnp.asarray(x), ws, policy=pol)
+    assert json.load(open(table_path)) == before
+    assert dispatch._AUTOTUNE_TABLE.get_program("cpu", pkey) == entry
+
+
+def test_table_entries_never_override_fuse_programs_off():
+    """A loaded fused winner stands in for the planner only when the policy
+    allows joint planning: fuse_programs=False must always decompose (the
+    dry-run's A/B arm) — and autotuning under it must not persist a
+    per-request 'winner' that would disable fusing for auto policies."""
+    cpu = get_backend("cpu")
+    key = ProgramKey(kind="fused", Ms=(128, 64), K=256, batch=1, group=2,
+                     bits=16, block=32, dtype="float32", backend="cpu")
+    dispatch._AUTOTUNE_TABLE.put_program("cpu", key.table_key(), {
+        "mode": "fused", "n_launches": 1, "kernel": "ref", "us": 1.0,
+    })
+    on = dispatch._resolve_program(cpu, key, CPU)
+    assert on.mode == "fused"               # table honored for auto policy
+    off = dispatch._resolve_program(
+        cpu, key, DispatchPolicy(backend="cpu", fuse_programs=False))
+    assert off.mode == "per_request" and off.n_launches == 2
+    # autotune + fuse_programs=False: plans per_request, writes nothing new
+    before = dispatch._AUTOTUNE_TABLE.snapshot_programs()
+    off2 = dispatch._resolve_program(
+        cpu, key, DispatchPolicy(backend="cpu", fuse_programs=False,
+                                 autotune=True))
+    assert off2.mode == "per_request"
+    assert dispatch._AUTOTUNE_TABLE.snapshot_programs() == before
+
+
+def test_empty_v1_table_file_loads_as_empty(tmp_path):
+    p = str(tmp_path / "empty.json")
+    json.dump({}, open(p, "w"))
+    assert dispatch.load_autotune_table(p) == {}
+    assert dispatch._AUTOTUNE_TABLE.snapshot() == {}
+    assert dispatch._AUTOTUNE_TABLE.snapshot_programs() == {}
+
+
+def test_v2_table_with_unknown_backend_namespace_loads(tmp_path):
+    """A fleet table can name backends this process never registered; the
+    foreign namespace must load, persist, and never break dispatch."""
+    p = str(tmp_path / "v2.json")
+    json.dump({"format": 2, "tables": {
+        "cpu": {"256x512xb1_w16g32_float32": {"kernel": "ref", "us": 1.0}},
+        "npu9000": {"weird": {"kernel": "exotic", "us": 2.0}},
+    }}, open(p, "w"))
+    parsed = dispatch.load_autotune_table(p)
+    assert set(parsed) == {"cpu", "npu9000"}
+    assert dispatch._AUTOTUNE_TABLE.get("npu9000", "weird")["us"] == 2.0
+    # dispatch for a registered backend is unaffected
+    w, x = (RNG.standard_normal((512, 256)).astype(np.float32),
+            RNG.standard_normal((1, 256)).astype(np.float32))
+    out = dispatch.dispatch_gemv(jnp.asarray(x), jnp.asarray(w), policy=CPU)
+    np.testing.assert_allclose(np.asarray(out), x @ w.T, rtol=1e-4,
+                               atol=1e-3)
+
+
+def test_v2_to_v3_upgrade_on_save_preserves_tables(tmp_path):
+    """Loading a v2 file and saving writes format 3 with every v2 entry
+    intact and an (initially empty-or-new) programs section."""
+    p = str(tmp_path / "t.json")
+    json.dump({"format": 2, "tables": {
+        "tpu": {"shapeA": {"kernel": "pim", "us": 1.0}},
+    }}, open(p, "w"))
+    dispatch.load_autotune_table(p)
+    dispatch._AUTOTUNE_TABLE.put_program(
+        "cpu", "progB", {"mode": "grouped", "n_launches": 1, "us": 2.0})
+    dispatch.save_autotune_table(p)
+    doc = json.load(open(p))
+    assert doc["format"] == 3
+    assert doc["tables"]["tpu"]["shapeA"]["kernel"] == "pim"
+    assert doc["programs"]["cpu"]["progB"]["mode"] == "grouped"
+    # and the upgraded file round-trips
+    dispatch.clear_autotune_table()
+    dispatch.load_autotune_table(p)
+    assert dispatch._AUTOTUNE_TABLE.get("tpu", "shapeA")["us"] == 1.0
+    assert dispatch._AUTOTUNE_TABLE.get_program(
+        "cpu", "progB")["n_launches"] == 1
+
+
+# --------------------------------------------------------------------------
+# Model-layer integration: decode forward equals the einsum path
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "deepseek-moe-16b"])
+def test_decode_forward_with_programs_matches_einsum(arch):
+    """One decode step with fused QKV / gate+up (+ grouped experts for the
+    MoE config) matches the plain einsum forward — and the per-request
+    policy sits exactly in between."""
+    from repro.configs.registry import ARCHS
+    from repro.models import lm
+
+    cfg = ARCHS[arch].reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_lm(key, cfg)
+    prompt = jnp.asarray((np.arange(8, dtype=np.int32) % cfg.vocab)[None])
+    cache = lm.init_cache(cfg, 1, 32)
+    logits, cache, _ = lm.forward(params, cfg, prompt, cache=cache)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    base, _, _ = lm.forward(params, cfg, tok, cache=cache)
+    fused, _, _ = lm.forward(params, cfg, tok, cache=cache,
+                             gemv_policy=CPU)
+    apart, _, _ = lm.forward(
+        params, cfg, tok, cache=cache,
+        gemv_policy=DispatchPolicy(backend="cpu", fuse_programs=False))
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(base),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(apart), np.asarray(base),
+                               rtol=1e-4, atol=1e-4)
+    if cfg.moe is not None:
+        # the MoE decode path engaged grouped program dispatch (3 expert
+        # projections per layer -> at least one grouped miss in the cache)
+        stats = dispatch.plan_cache_stats()
+        assert stats["program_misses"] >= 1
+
+
+def test_engine_generations_identical_with_and_without_fusion():
+    from repro.configs.registry import ARCHS
+    from repro.models import lm
+    from repro.serving.engine import Engine, Request
+
+    cfg = ARCHS["olmo-1b"].reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    prompt = (np.arange(8, dtype=np.int32) % cfg.vocab)
+    gens = []
+    for fuse in (True, False):
+        eng = Engine(cfg, params, batch_slots=1, max_len=64,
+                     gemv_backend="cpu", gemv_fuse_programs=fuse)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
+        gens.append(eng.run_until_drained()[0].generated)
+    assert gens[0] == gens[1]
+
+
+# --------------------------------------------------------------------------
+# Deprecated PR-1 surface: warn ONCE per call site
+# --------------------------------------------------------------------------
+
+
+def test_deprecated_shim_warns_once_per_site():
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for _ in range(4):  # one site, four calls
+            dispatch.select_kernel(1152, 6912, 1)
+    deps = [r for r in rec if r.category is DeprecationWarning]
+    assert len(deps) == 1, [str(r.message) for r in deps]
+    # a DIFFERENT site still gets its own warning (the memo is per site,
+    # not per symbol)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        dispatch.select_kernel(1152, 6912, 1)
+    assert sum(r.category is DeprecationWarning for r in rec) == 1
+
+
+def test_deprecated_constant_warns_once_per_site():
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        vals = [dispatch.HBM_BW for _ in range(3)]  # one site, three reads
+    assert len(set(vals)) == 1
+    assert sum(r.category is DeprecationWarning for r in rec) == 1
+    # distinct constants read from one site each still warn once
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for name in ("PROGRAM_US", "MIN_PARALLEL_BLOCKS"):
+            for _ in range(2):
+                getattr(dispatch, name)
+    assert sum(r.category is DeprecationWarning for r in rec) == 2

@@ -1,0 +1,87 @@
+"""Serving bench: a synthetic multi-tenant trace through the Engine, one
+run per scheduler policy, emitting a schema-versioned JSON document.
+
+This is the serving-layer counterpart of ``kernel_bench.py``: instead of
+modeled kernel latencies it measures the END metrics the paper optimizes —
+TTFT and per-token decode latency (§V/§VII) — and snapshots the GEMV
+dispatcher's decision counters per run, so the scheduler's batch-shaping
+policy (``gemv_aware`` keeping decode under the dispatcher's batch gate vs
+``fcfs`` filling every slot) shows up as a measurable change in the
+GEMV-vs-matmul dispatch mix.  Everything runs on ``reduced()`` configs on
+the host — wall-clock numbers characterize the serving harness, not TPU
+performance; the dispatch-mix and scheduling behavior are real.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py                # full trace
+    PYTHONPATH=src python benchmarks/serve_bench.py --smoke --json SERVE.json
+    PYTHONPATH=src python benchmarks/serve_bench.py --policy gemv_aware
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.serving.bench import SCHEMA_VERSION, run_serve_trace  # noqa: F401
+from repro.serving.scheduler import POLICIES
+
+
+def print_run(run: dict) -> None:
+    ttft, ptok = run["ttft_ms"], run["per_token_ms"]
+    disp = run["dispatch"]
+    print(
+        f"serve/{run['policy']} slots={run['batch_slots']} "
+        f"thresh={run['gemv_batch_threshold']}: "
+        f"completed={run['completed']} "
+        f"ttft p50={ttft.get('p50', float('nan')):.1f}ms "
+        f"p99={ttft.get('p99', float('nan')):.1f}ms | "
+        f"tok p50={ptok.get('p50', float('nan')):.1f}ms "
+        f"p99={ptok.get('p99', float('nan')):.1f}ms | "
+        f"{run['tokens_per_s']:.1f} tok/s | "
+        f"dispatch gemv={disp['gemv_path']} "
+        f"matmul_fallback={disp['matmul_fallback']} "
+        f"program_hits={disp['plan_cache']['program_hits']}"
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--policy", default="all",
+                    choices=("all",) + POLICIES,
+                    help="scheduler policy to run (default: every policy, "
+                         "for the dispatch-mix comparison)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="override trace length")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--threshold", type=int, default=4,
+                    help="gemv_batch_threshold (kept below --slots so the "
+                         "policies measurably diverge)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default=None,
+                    help="pin a registered GemvBackend for decode dispatch")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace + slot count (CI leg)")
+    ap.add_argument("--json", metavar="OUT", default=None,
+                    help="write the schema-versioned comparison document")
+    args = ap.parse_args(argv)
+
+    policies = POLICIES if args.policy == "all" else (args.policy,)
+    tcfg = None
+    if args.requests is not None:
+        from repro.serving.bench import TraceConfig
+
+        base = TraceConfig.smoke() if args.smoke else TraceConfig()
+        tcfg = TraceConfig(**{**base.__dict__, "n_requests": args.requests})
+    doc = run_serve_trace(
+        args.arch, policies=policies, smoke=args.smoke, seed=args.seed,
+        batch_slots=args.slots, gemv_batch_threshold=args.threshold,
+        gemv_backend=args.backend, trace_config=tcfg, out=args.json,
+    )
+    for run in doc["runs"]:
+        print_run(run)
+    if args.json:
+        print(f"wrote {len(doc['runs'])} runs -> {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -21,24 +21,37 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--policy", default="fcfs",
+                    choices=("fcfs", "sjf", "gemv_aware"))
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
-    eng = Engine(cfg, params, batch_slots=args.slots, max_len=96)
+    eng = Engine(cfg, params, batch_slots=args.slots, max_len=96,
+                 scheduler=args.policy)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
+        # mixed prompt lengths: the slot-managed cache decodes them in one
+        # batch with per-slot positions (DESIGN.md §8.1)
+        plen = int(rng.integers(4, 17))
         eng.submit(Request(
-            rid=i, prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+            rid=i, prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
             max_new_tokens=args.new_tokens,
         ))
     done = eng.run_until_drained()
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.generated) for r in done)
     print(f"{len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens/dt:.1f} tok/s on CPU, {args.slots} slots)")
+          f"({total_tokens/dt:.1f} tok/s on CPU, {args.slots} slots, "
+          f"{args.policy})")
+    m = eng.metrics.to_dict(include_steps=False)
+    print(f"  ttft p50={m['ttft_ms'].get('p50', 0):.0f}ms "
+          f"p99={m['ttft_ms'].get('p99', 0):.0f}ms | per-token "
+          f"p50={m['per_token_ms'].get('p50', 0):.1f}ms | dispatch "
+          f"gemv={m['dispatch']['gemv_path']} "
+          f"matmul={m['dispatch']['matmul_fallback']}")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.generated}")
 

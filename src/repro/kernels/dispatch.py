@@ -63,6 +63,7 @@ import threading
 import warnings
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.backends import (
     AutotuneTable,
@@ -94,7 +95,8 @@ __all__ = [
     "GemvRequest", "GemvProgram", "ProgramKey", "ProgramPlan",
     "dispatch_gemv", "dispatch_dense", "as_packed", "from_transposed",
     "dispatch_program", "dispatch_fused", "dispatch_grouped",
-    "plan_cache_stats", "clear_plan_cache",
+    "dispatch_prepacked",
+    "plan_cache_stats", "clear_plan_cache", "dispatch_stats",
     "load_autotune_table", "save_autotune_table", "clear_autotune_table",
     "available_backends", "get_backend", "resolve_backend", "time_gemv_us",
     "PackedWeights",
@@ -114,12 +116,63 @@ _PROGRAM_CACHE: dict[tuple[ProgramKey, DispatchPolicy], ProgramPlan] = {}
 _KEY_LOCKS: dict[tuple, threading.Lock] = {}
 _CACHE_STATS = {"hits": 0, "misses": 0,
                 "program_hits": 0, "program_misses": 0}
+# Dispatch DECISION counters (incremented per plan-cache miss — i.e. per
+# fresh trace-time selection; cached shapes do zero planning work and so
+# add nothing here).  ``gemv_path`` / ``matmul_fallback`` classify each
+# decision by the policy's batch gate: above ``batch_threshold`` the shape
+# is matmul-bound and selection falls back to the XLA dot — the knob the
+# serving scheduler's batch-shaping policy moves (DESIGN.md §8.2).
+_DISPATCH_COUNTERS: dict = {
+    "kernel_picks": {},     # "backend:kernel" -> decisions
+    "program_modes": {},    # "backend:mode"   -> decisions
+    "gemv_path": 0,         # decisions with batch <= policy.batch_threshold
+    "matmul_fallback": 0,   # decisions the batch gate pushed to the XLA dot
+}
 _AUTOTUNE_TABLE = AutotuneTable()
 
 
 def plan_cache_stats() -> dict[str, int]:
     with _LOCK:
         return dict(_CACHE_STATS)
+
+
+def dispatch_stats() -> dict:
+    """Snapshot of dispatch decision counters + plan-cache stats.
+
+    Decisions are counted when a (shape, policy) is first planned (one per
+    plan-cache miss).  Under ``jit`` that is trace time, so the counters
+    reflect the *dispatch mix* the traced programs bake in — e.g. a serving
+    scheduler that caps decode batches at the GEMV threshold shifts
+    decisions from ``matmul_fallback`` to ``gemv_path`` (serving/metrics
+    snapshots this per engine step).  Reset by :func:`clear_plan_cache`.
+    """
+    with _LOCK:
+        return {
+            "plan_cache": dict(_CACHE_STATS),
+            "kernel_picks": dict(_DISPATCH_COUNTERS["kernel_picks"]),
+            "program_modes": dict(_DISPATCH_COUNTERS["program_modes"]),
+            "gemv_path": _DISPATCH_COUNTERS["gemv_path"],
+            "matmul_fallback": _DISPATCH_COUNTERS["matmul_fallback"],
+        }
+
+
+def _count_decision(backend_name: str, key_batch: int,
+                    policy: DispatchPolicy, *, kernel: str | None = None,
+                    mode: str | None = None) -> None:
+    """Record one fresh dispatch decision (caller holds no locks)."""
+    with _LOCK:
+        if kernel is not None:
+            picks = _DISPATCH_COUNTERS["kernel_picks"]
+            k = f"{backend_name}:{kernel}"
+            picks[k] = picks.get(k, 0) + 1
+        if mode is not None:
+            modes = _DISPATCH_COUNTERS["program_modes"]
+            m = f"{backend_name}:{mode}"
+            modes[m] = modes.get(m, 0) + 1
+        if key_batch > policy.batch_threshold:
+            _DISPATCH_COUNTERS["matmul_fallback"] += 1
+        else:
+            _DISPATCH_COUNTERS["gemv_path"] += 1
 
 
 def clear_plan_cache() -> None:
@@ -129,6 +182,10 @@ def clear_plan_cache() -> None:
         _KEY_LOCKS.clear()
         _CACHE_STATS.update(hits=0, misses=0,
                             program_hits=0, program_misses=0)
+        _DISPATCH_COUNTERS["kernel_picks"] = {}
+        _DISPATCH_COUNTERS["program_modes"] = {}
+        _DISPATCH_COUNTERS["gemv_path"] = 0
+        _DISPATCH_COUNTERS["matmul_fallback"] = 0
 
 
 def clear_autotune_table() -> None:
@@ -235,6 +292,7 @@ def _resolve(backend, key: GemvKey,
         # every branch above returns directly executable (aligned) plans
         with _LOCK:
             _PLAN_CACHE[(key, policy)] = (kernel, plan)
+        _count_decision(backend.name, key.batch, policy, kernel=kernel)
     return kernel, plan
 
 
@@ -354,6 +412,7 @@ def _resolve_program(backend, key: ProgramKey,
             pplan = backend.plan_program(key, policy=policy)
         with _LOCK:
             _PROGRAM_CACHE[(key, policy)] = pplan
+        _count_decision(backend.name, key.batch, policy, mode=pplan.mode)
     return pplan
 
 
@@ -414,6 +473,49 @@ def dispatch_fused(
         for w in weights
     ]
     program = GemvProgram.fused(x, members)
+    return program.split(dispatch_program(program, policy=policy))
+
+
+def dispatch_prepacked(
+    x: jnp.ndarray, fused, m_splits, *,
+    policy: DispatchPolicy | None = None,
+) -> list[jnp.ndarray]:
+    """Fused program over a PREPACKED ``[K, sum(Ms)]`` weight.
+
+    The hot-path variant of :func:`dispatch_fused`: the caller concatenated
+    the shared-IV members ONCE at deployment (``ops.pack_fused`` or
+    ``models.lm.prepack_decode_params`` — the paper's one-time §V-A2
+    placement cost), so no per-call concat is traced.  ``m_splits`` gives
+    the per-member output widths; returns the per-member ``[B, M_i]``
+    outputs in order, exactly like ``dispatch_fused``.
+
+    The per-request decomposition (the unfused arm a backend or policy may
+    pick) slices the fused weight lazily; under ``jit`` the slices are
+    dead-code-eliminated whenever the fused mode runs.
+    """
+    policy = policy or DEFAULT_POLICY
+    pw = (fused if isinstance(fused, PackedWeights)
+          else from_transposed(jnp.asarray(fused)))
+    splits = tuple(int(m) for m in m_splits)
+    K, M = pw.shape
+    if sum(splits) != M:
+        raise ValueError(f"m_splits {splits} do not tile M={M}")
+    offs = np.concatenate([[0], np.cumsum(splits)])
+    reqs = tuple(
+        GemvRequest(
+            x=x,
+            weights=PackedWeights(
+                w_t=pw.w_t[:, offs[i]:offs[i + 1]],
+                scales=(None if pw.scales is None
+                        else pw.scales[:, offs[i]:offs[i + 1]]),
+                bits=pw.bits, block=pw.block,
+            ),
+            tag=f"m{i}",
+        )
+        for i in range(len(splits))
+    )
+    program = GemvProgram(kind="fused", x=x, weights=pw, m_splits=splits,
+                          requests=reqs)
     return program.split(dispatch_program(program, policy=policy))
 
 

@@ -360,6 +360,54 @@ def save_record(rec: dict) -> str:
     return path
 
 
+def run_serve_traces(args) -> int:
+    """``--serve-trace``: drive the serving subsystem's synthetic
+    multi-tenant trace (Poisson arrivals, mixed prompt lengths) on the
+    reduced config of each requested arch and record the schema-versioned
+    serving document next to the dry-run artifacts.
+
+    Where the compile audit proves each cell *lowers*, this proves the
+    serving layer *serves* it — TTFT / per-token-latency percentiles plus
+    the per-policy GEMV-vs-matmul dispatch mix (DESIGN.md §8.5).
+    """
+    from repro.serving.bench import run_serve_trace
+
+    serve_dir = os.path.join(ARTIFACT_DIR, "..", "serving")
+    os.makedirs(serve_dir, exist_ok=True)
+    policies = tuple(
+        p for p in args.serve_policies.split(",") if p
+    )
+    archs = [args.arch] if args.arch else ["olmo-1b"]
+    if args.all:
+        from repro.configs.registry import ARCHS
+        archs = sorted(ARCHS)
+    failures = 0
+    for arch in archs:
+        path = os.path.join(serve_dir, f"{arch}__serve_trace.json")
+        try:
+            doc = run_serve_trace(
+                arch, policies=policies, smoke=True,
+                gemv_backend=args.gemv_backend, out=path,
+            )
+        except Exception as e:
+            failures += 1
+            print(f"[FAIL] serve-trace {arch}: {e!r}")
+            if not args.continue_on_error:
+                raise
+            continue
+        for run in doc["runs"]:
+            d = run["dispatch"]
+            print(
+                f"[ok]   serve-trace {arch} x {run['policy']}: "
+                f"{run['completed']} done, "
+                f"ttft p50 {run['ttft_ms'].get('p50', float('nan')):.0f}ms, "
+                f"tok p50 {run['per_token_ms'].get('p50', float('nan')):.1f}ms, "
+                f"gemv {d['gemv_path']} / matmul {d['matmul_fallback']} "
+                f"-> {os.path.basename(path)}"
+            )
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -376,7 +424,18 @@ def main(argv=None) -> int:
     ap.add_argument("--no-gemv-fused", action="store_true",
                     help="with --gemv-backend: per-matrix dispatch instead "
                          "of fused/grouped GEMV programs (A/B the HLOs)")
+    ap.add_argument("--serve-trace", action="store_true",
+                    help="run the synthetic multi-tenant serving trace "
+                         "(repro.serving.bench) on the reduced config "
+                         "instead of the compile audit; writes "
+                         "artifacts/serving/<arch>__serve_trace.json")
+    ap.add_argument("--serve-policies", default="fcfs,sjf,gemv_aware",
+                    help="comma-separated scheduler policies for "
+                         "--serve-trace")
     args = ap.parse_args(argv)
+
+    if args.serve_trace:
+        return run_serve_traces(args)
 
     from repro.configs.registry import ARCHS
     from repro.launch.shapes import SHAPES

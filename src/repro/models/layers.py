@@ -178,15 +178,24 @@ def apply_attention(
     """
     B, S, d = x.shape
     if gemv is not None and S == 1 and gemv.fuse_programs:
-        from repro.kernels.dispatch import dispatch_fused
+        from repro.kernels.dispatch import dispatch_fused, dispatch_prepacked
 
         hd = cfg.hd
-        q2, k2, v2 = dispatch_fused(
-            x.reshape(B, d),
-            [p["wq"].reshape(d, -1), p["wk"].reshape(d, -1),
-             p["wv"].reshape(d, -1)],
-            policy=gemv,
-        )
+        if "wqkv" in p:
+            # Prepacked fused weight (lm.prepack_decode_params): the concat
+            # was paid once at deployment, not per decode step.
+            splits = (cfg.n_heads * hd, cfg.n_kv_heads * hd,
+                      cfg.n_kv_heads * hd)
+            q2, k2, v2 = dispatch_prepacked(
+                x.reshape(B, d), p["wqkv"], splits, policy=gemv
+            )
+        else:
+            q2, k2, v2 = dispatch_fused(
+                x.reshape(B, d),
+                [p["wq"].reshape(d, -1), p["wk"].reshape(d, -1),
+                 p["wv"].reshape(d, -1)],
+                policy=gemv,
+            )
         q = q2.reshape(B, S, -1, hd)
         k = k2.reshape(B, S, -1, hd)
         v = v2.reshape(B, S, -1, hd)
@@ -199,11 +208,23 @@ def apply_attention(
 
     if cache_kv is not None:
         ck, cv = cache_kv
-        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
-                                                 cache_pos, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
-                                                 cache_pos, axis=1)
-        kv_valid = cache_pos + x.shape[1]
+        cp = jnp.asarray(cache_pos)
+        if cp.ndim == 0:
+            # Lockstep scalar offset: every slot writes at the same position.
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                ck, k.astype(ck.dtype), cache_pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cv, v.astype(cv.dtype), cache_pos, axis=1)
+        else:
+            # Per-slot position vector [B] (slot-managed cache, DESIGN.md
+            # §8): each slot writes its new K/V at its own offset.
+            def wr(c1, u1, p1):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    c1, u1, p1, axis=0)
+
+            ck = jax.vmap(wr)(ck, k.astype(ck.dtype), cp)
+            cv = jax.vmap(wr)(cv, v.astype(cv.dtype), cp)
+        kv_valid = cp + x.shape[1]
         out = attention_core(
             q, ck, cv, q_positions=positions, kv_valid_len=kv_valid,
             window=window, causal=True,
@@ -283,9 +304,19 @@ def apply_mlp(
     if (decode_gemv and gemv.fuse_programs
             and cfg.act in ("silu", "geglu")):
         B, S, d = x.shape
-        g2, u2 = dispatch_fused(
-            x.reshape(B * S, d), [p["w_gate"], p["w_up"]], policy=gemv
-        )
+        if "w_gateup" in p:
+            # Prepacked fused weight (lm.prepack_decode_params): no
+            # per-step concat of gate and up.
+            from repro.kernels.dispatch import dispatch_prepacked
+
+            f = p["w_up"].shape[-1]
+            g2, u2 = dispatch_prepacked(
+                x.reshape(B * S, d), p["w_gateup"], (f, f), policy=gemv
+            )
+        else:
+            g2, u2 = dispatch_fused(
+                x.reshape(B * S, d), [p["w_gate"], p["w_up"]], policy=gemv
+            )
         gate, up = g2.reshape(B, S, -1), u2.reshape(B, S, -1)
         act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
         return mm(act(gate) * up, p["w_down"])

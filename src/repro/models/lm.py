@@ -154,12 +154,20 @@ def init_lm(key, cfg: ModelConfig) -> Params:
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=None) -> Params:
+               dtype=None, *, per_slot_pos: bool = False) -> Params:
     """Decode state for every family; entries have a leading layer dim so the
-    layer scan threads them as xs/ys."""
+    layer scan threads them as xs/ys.
+
+    ``per_slot_pos=True`` makes ``cache["pos"]`` a ``[batch]`` int32 vector
+    (one write offset / valid-kv length per batch slot) instead of the
+    lockstep scalar — the serving subsystem's slot-managed layout
+    (DESIGN.md §8), which lets heterogeneous prompt lengths decode
+    correctly in one batch.  ``forward`` accepts either form.
+    """
     dtype = dtype or _dtype(cfg)
     n, d, hd = cfg.n_layers, cfg.d_model, cfg.hd
-    cache: Params = {"pos": jnp.zeros((), jnp.int32)}
+    pos_shape = (batch,) if per_slot_pos else ()
+    cache: Params = {"pos": jnp.zeros(pos_shape, jnp.int32)}
     if cfg.family != "ssm":
         cache["k"] = jnp.zeros((n, batch, max_len, cfg.n_kv_heads, hd), dtype)
         cache["v"] = jnp.zeros((n, batch, max_len, cfg.n_kv_heads, hd), dtype)
@@ -173,6 +181,73 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         cache["mamba_conv"] = jnp.zeros((n, batch, cw - 1, di), dtype)
         cache["mamba_h"] = jnp.zeros((n, batch, di, st), jnp.float32)
     return cache
+
+
+# --------------------------------------------------------------------------
+# Decode-weight prepack (one-time §V-A2 deployment cost)
+# --------------------------------------------------------------------------
+
+
+def _fuse_block_params(p: Params, cfg: ModelConfig) -> Params:
+    """Add prepacked fused projections next to the originals in one block.
+
+    ``wqkv`` is the [.., d, (H+2Hkv)*hd] concat of the flattened Q/K/V
+    projections; ``w_gateup`` the [.., d, 2f] concat of gate and up.  The
+    originals stay: prefill/training keep the einsum path (and the fused
+    copies ride the same leading layer-stack dims, so `lax.scan` slices
+    them per layer like any other param leaf).
+    """
+
+    def flat(w):  # [.., d, H, hd] -> [.., d, H*hd]
+        return w.reshape(w.shape[:-2] + (-1,))
+
+    p = dict(p)
+    if "attn" in p:
+        a = dict(p["attn"])
+        a["wqkv"] = jnp.concatenate(
+            [flat(a["wq"]), flat(a["wk"]), flat(a["wv"])], axis=-1
+        )
+        p["attn"] = a
+    for mlp_key in ("mlp",):
+        if mlp_key in p and "w_gate" in p[mlp_key]:
+            m = dict(p[mlp_key])
+            m["w_gateup"] = jnp.concatenate(
+                [m["w_gate"], m["w_up"]], axis=-1
+            )
+            p[mlp_key] = m
+    if "moe" in p and "shared" in p["moe"] and "w_gate" in p["moe"]["shared"]:
+        moe = dict(p["moe"])
+        sh = dict(moe["shared"])
+        sh["w_gateup"] = jnp.concatenate([sh["w_gate"], sh["w_up"]], axis=-1)
+        moe["shared"] = sh
+        p["moe"] = moe
+    return p
+
+
+def prepack_decode_params(params: Params, cfg: ModelConfig) -> Params:
+    """Prepack fused QKV and MLP gate+up weights for the decode hot path.
+
+    ``dispatch_fused`` concatenates its members at call time — under ``jit``
+    that concat executes every decode step, an extra fused-weight write+read
+    per token that offsets the program launch/IV amortization (ROADMAP
+    follow-up).  This pays the concat ONCE at engine init (the paper's
+    one-time placement/deployment cost, §V-A2); ``layers.apply_attention`` /
+    ``layers.apply_mlp`` dispatch the prebuilt ``wqkv`` / ``w_gateup``
+    matrices through :func:`repro.kernels.dispatch.dispatch_prepacked`
+    when present.  Returns a NEW params tree (originals untouched) that is
+    a drop-in for ``forward``.
+    """
+    if cfg.family == "ssm":
+        return params
+    params = dict(params)
+    if "layers" in params:
+        params["layers"] = _fuse_block_params(params["layers"], cfg)
+    if "groups" in params:
+        g = dict(params["groups"])
+        g["plain"] = _fuse_block_params(g["plain"], cfg)
+        g["cross_layer"] = _fuse_block_params(g["cross_layer"], cfg)
+        params["groups"] = g
+    return params
 
 
 # --------------------------------------------------------------------------
@@ -313,8 +388,11 @@ def forward(
     x = x * jnp.asarray(jnp.sqrt(cfg.d_model), dtype)  # gemma-style scale
     x = constrain(x, ("batch", None, None))
 
+    # ``pos`` is a lockstep scalar (training / legacy serving) or a [B]
+    # per-slot vector (slot-managed KV cache, DESIGN.md §8): reshape to a
+    # column so both broadcast to per-slot absolute positions.
     pos0 = cache["pos"] if cache is not None else jnp.zeros((), jnp.int32)
-    positions = pos0 + jnp.arange(Sq)[None, :]
+    positions = jnp.reshape(pos0, (-1, 1)) + jnp.arange(Sq)[None, :]
     positions = jnp.broadcast_to(positions, (B, Sq))
 
     ctx = None

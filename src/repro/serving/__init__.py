@@ -1,1 +1,29 @@
-"""repro.serving"""
+"""repro.serving — the production serving subsystem (DESIGN.md §8).
+
+``Engine`` composes the four parts: :mod:`~repro.serving.kv_cache`
+(slot-managed KV cache, per-slot positions), :mod:`~repro.serving.scheduler`
+(admission policies + backpressure + deadlines), :mod:`~repro.serving.metrics`
+(TTFT / per-token-latency / dispatcher-counter telemetry), and
+:mod:`~repro.serving.sampling` (greedy-compatible temperature/top-k/top-p).
+:mod:`~repro.serving.bench` drives a synthetic multi-tenant trace over it.
+"""
+
+from repro.serving.engine import (  # noqa: F401
+    Engine,
+    Request,
+    build_serve_fns,
+    greedy,
+)
+from repro.serving.kv_cache import SlotKVCache  # noqa: F401
+from repro.serving.metrics import Histogram, ServingMetrics  # noqa: F401
+from repro.serving.sampling import (  # noqa: F401
+    GREEDY,
+    SamplingParams,
+    sample_token,
+)
+from repro.serving.scheduler import (  # noqa: F401
+    POLICIES,
+    QueueFull,
+    Scheduler,
+    SchedulerConfig,
+)

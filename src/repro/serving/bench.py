@@ -1,0 +1,180 @@
+"""Synthetic multi-tenant serving trace (DESIGN.md §8.5).
+
+Drives an :class:`~repro.serving.engine.Engine` with a seeded multi-tenant
+workload — mixed prompt lengths, Poisson arrivals (exponential
+inter-arrival gaps drawn from the rng the caller passes in, in units of
+engine steps) — once per scheduler policy, and emits one schema-versioned
+JSON document with TTFT / per-token-latency percentiles, throughput, and
+the GEMV dispatcher's decision counters per run.
+
+Comparing the ``runs`` entries is the point: the ``gemv_aware`` policy's
+batch shaping keeps every decode dispatch on the GEMV path
+(``dispatch.matmul_fallback == 0``) where ``fcfs`` fills all slots and
+pushes the big-batch shapes onto the XLA matmul fallback — the paper's
+orchestration-knob claim (§VII) made measurable at the serving layer.
+
+The dispatcher's plan cache is cleared before each run so decision
+counters attribute cleanly per policy (each run constructs a fresh engine,
+so its jitted steps re-trace and re-plan; re-planning small shapes is
+microseconds).
+
+CLI wrapper: ``benchmarks/serve_bench.py``; the dry-run exposes the same
+trace as ``python -m repro.launch.dryrun --serve-trace``.  Everything runs
+on ``reduced()`` configs — this is the laptop-scale serving harness, not a
+hardware benchmark.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+# --json document version: bump when the record layout changes.
+SCHEMA_VERSION = 1
+
+
+@dataclass(frozen=True)
+class TraceConfig:
+    n_requests: int = 24
+    arrival_rate: float = 1.5       # mean arrivals per engine step (Poisson)
+    prompt_len_range: tuple[int, int] = (4, 24)   # inclusive, mixed tenants
+    max_new_range: tuple[int, int] = (4, 12)
+    seed: int = 0
+
+    @classmethod
+    def smoke(cls) -> "TraceConfig":
+        return cls(n_requests=10, arrival_rate=4.0,
+                   prompt_len_range=(2, 10), max_new_range=(3, 5))
+
+
+def build_trace(tcfg: TraceConfig, vocab: int,
+                rng: np.random.Generator) -> list[dict]:
+    """[{arrival_step, prompt, max_new_tokens}] — arrivals are a Poisson
+    process: cumulative exponential gaps from the caller's seeded rng."""
+    lo, hi = tcfg.prompt_len_range
+    nlo, nhi = tcfg.max_new_range
+    t = 0.0
+    out = []
+    for i in range(tcfg.n_requests):
+        t += rng.exponential(1.0 / tcfg.arrival_rate)
+        plen = int(rng.integers(lo, hi + 1))
+        out.append({
+            "arrival_step": int(t),
+            "prompt": rng.integers(0, vocab, plen).astype(np.int32),
+            "max_new_tokens": int(rng.integers(nlo, nhi + 1)),
+        })
+    return out
+
+
+def run_policy(cfg, params, policy: str, trace: list[dict], *,
+               batch_slots: int, max_len: int, gemv_batch_threshold: int,
+               gemv_backend: str | None = None, max_queue: int = 0,
+               max_iters: int = 5000) -> dict:
+    """Serve one trace under one scheduler policy; returns the metrics doc
+    (per-step snapshots dropped — aggregates only) tagged with the run
+    configuration."""
+    from repro.kernels import dispatch
+    from repro.serving.engine import Engine, Request
+    from repro.serving.scheduler import QueueFull
+
+    dispatch.clear_plan_cache()  # attribute dispatch decisions to this run
+    eng = Engine(
+        cfg, params, batch_slots=batch_slots, max_len=max_len,
+        gemv_batch_threshold=gemv_batch_threshold,
+        gemv_backend=gemv_backend, scheduler=policy, max_queue=max_queue,
+    )
+    pending = [
+        Request(rid=i, prompt=t["prompt"],
+                max_new_tokens=t["max_new_tokens"])
+        for i, t in enumerate(trace)
+    ]
+    arrivals = [t["arrival_step"] for t in trace]
+    done = []
+    retry: list = []
+    for step_i in range(max_iters):
+        due = retry
+        retry = []
+        while pending and arrivals[0] <= step_i:
+            due.append(pending.pop(0))
+            arrivals.pop(0)
+        for req in due:
+            try:
+                eng.submit(req)
+            except QueueFull:
+                retry.append(req)  # backpressure: retry next step
+        done.extend(eng.step())
+        if (not pending and not retry and not eng.active
+                and not eng.scheduler.queue):
+            break
+    doc = eng.metrics.to_dict(include_steps=False)
+    doc.update(
+        policy=policy,
+        batch_slots=batch_slots,
+        gemv_batch_threshold=gemv_batch_threshold,
+        completed=len(done),
+        total_generated=sum(len(r.generated) for r in done),
+    )
+    return doc
+
+
+def run_serve_trace(
+    arch: str = "olmo-1b", *,
+    policies: tuple[str, ...] = ("fcfs", "sjf", "gemv_aware"),
+    smoke: bool = False,
+    seed: int = 0,
+    batch_slots: int = 8,
+    max_len: int = 96,
+    gemv_batch_threshold: int = 4,
+    gemv_backend: str | None = None,
+    trace_config: TraceConfig | None = None,
+    out: str | None = None,
+) -> dict:
+    """Serve one synthetic trace under each policy; returns (and optionally
+    writes) the schema-versioned comparison document.
+
+    ``gemv_batch_threshold < batch_slots`` on purpose: a slot-filling
+    policy then provably crosses the dispatcher's batch gate while
+    ``gemv_aware`` stays under it — the dispatch-mix contrast the
+    acceptance criteria lock.
+    """
+    from repro.configs.registry import get_config
+    from repro.models import lm
+
+    cfg = get_config(arch).reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    if smoke:
+        batch_slots = min(batch_slots, 4)
+        gemv_batch_threshold = min(gemv_batch_threshold, 2)
+        tcfg = trace_config or TraceConfig.smoke()
+    else:
+        tcfg = trace_config or TraceConfig()
+    tcfg = TraceConfig(**{**tcfg.__dict__, "seed": seed})
+    rng = np.random.default_rng(tcfg.seed)
+    trace = build_trace(tcfg, cfg.vocab, rng)
+    runs = [
+        run_policy(cfg, params, policy, trace, batch_slots=batch_slots,
+                   max_len=max_len,
+                   gemv_batch_threshold=gemv_batch_threshold,
+                   gemv_backend=gemv_backend)
+        for policy in policies
+    ]
+    doc = {
+        "schema": SCHEMA_VERSION,
+        "arch": arch,
+        "reduced": True,
+        "trace": {
+            "n_requests": tcfg.n_requests,
+            "arrival_rate": tcfg.arrival_rate,
+            "prompt_len_range": list(tcfg.prompt_len_range),
+            "max_new_range": list(tcfg.max_new_range),
+            "seed": tcfg.seed,
+        },
+        "runs": runs,
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+    return doc

@@ -1,32 +1,39 @@
-"""Serving: prefill/decode steps and a continuous-batching engine.
+"""Serving: prefill/decode steps and a slot-managed continuous-batching engine.
 
-``build_serve_fns`` produces the two jitted entry points the dry-run lowers
-(prefill over the full prompt; decode = one token against the KV cache).
-``Engine`` is a minimal continuous-batching scheduler: requests occupy batch
-slots, finished slots are refilled without stopping the decode loop (vLLM-
-style at laptop scale) — exercised on the reduced configs in tests/examples.
+``Engine`` is a thin composition of the serving subsystem (DESIGN.md §8):
 
-Decode-time matmuls are where the paper's technique lives: with batch <=
-``gemv_batch_threshold`` the decode projections route through the unified
-GEMV dispatcher (``repro.kernels.dispatch``) as **GEMV programs** — QKV
-and MLP gate+up as fused shared-IV programs, MoE expert FFNs as grouped
-programs over the stacked expert weights, the LM head as a single request.
-The dispatcher resolves a ``GemvBackend`` from the runtime — Pallas
-kernels on TPU, the XLA-native path (plain dot / pre-chunked split-K /
-batched expert einsum) on CPU, Pallas-Triton behind a capability check on
-GPU — and plans kernel/program per shape from that backend's cost model
-(``use_pim_kernels=True``). ``gemv_backend`` pins a registered backend by
-name for the engine's lifetime (e.g. a CPU-serving tier in a heterogeneous
-fleet); ``gemv_fuse_programs=False`` restores per-matrix dispatch; auto
-picks on a CPU host never execute interpret-mode Pallas (that is a
-validation harness, not a serving path).
+* :class:`~repro.serving.kv_cache.SlotKVCache` — slot-managed decode state
+  with **per-slot position vectors** (heterogeneous prompt lengths decode
+  correctly in one batch; the lockstep equal-length restriction of the
+  pre-PR-4 engine is gone), slot alloc/free/defrag, batched multi-slot
+  prefill splicing;
+* :class:`~repro.serving.scheduler.Scheduler` — admission policies (FCFS /
+  shortest-prompt-first / a ``gemv_aware`` policy that caps concurrent
+  decode slots at ``gemv_batch_threshold`` so decode stays on the
+  GEMV-program fast path — the paper's orchestration knob lifted to the
+  request level), waiting-queue backpressure, per-request deadlines;
+* :class:`~repro.serving.metrics.ServingMetrics` — TTFT / per-token-latency
+  / throughput histograms plus per-step GEMV-dispatcher counter snapshots,
+  exportable as a schema-versioned JSON document;
+* :mod:`~repro.serving.sampling` — temperature/top-k/top-p sampling,
+  greedy-compatible (the default stays exact argmax).
+
+Decode-time matmuls are where the paper's technique lives: with the decode
+batch <= ``gemv_batch_threshold`` the projections route through the unified
+GEMV dispatcher (``repro.kernels.dispatch``) as **GEMV programs** — QKV and
+MLP gate+up as fused shared-IV programs over weights **prepacked at engine
+init** (``lm.prepack_decode_params``, the one-time §V-A2 cost; no per-step
+concat), MoE expert FFNs as grouped programs, the LM head as a single
+request.  The engine decodes a defragmented power-of-two *bucket* of active
+slots, so the scheduler's admission cap is what decides whether those
+dispatches stay GEMV-shaped or fall back to the XLA matmul path — the mix
+is visible in ``dispatch_stats()`` and in every metrics snapshot.
 """
 
 from __future__ import annotations
 
-import functools
+import time
 from dataclasses import dataclass, field
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +42,15 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.kernels.dispatch import DispatchPolicy
 from repro.models import lm
+from repro.serving.kv_cache import SlotKVCache
+from repro.serving.metrics import ServingMetrics
+from repro.serving.sampling import SamplingParams, request_rng, sample_token
+from repro.serving.scheduler import QueueFull, Scheduler, SchedulerConfig
+
+__all__ = [
+    "Engine", "Request", "build_serve_fns", "greedy", "QueueFull",
+    "SamplingParams", "Scheduler", "SchedulerConfig", "ServingMetrics",
+]
 
 
 @dataclass
@@ -43,8 +59,17 @@ class Request:
     prompt: np.ndarray              # [S] int32
     max_new_tokens: int = 16
     eos_id: int = -1                # -1: never
+    sampling: SamplingParams | None = None   # None: greedy
+    deadline: float | None = None   # absolute engine-clock time; queued
+                                    # requests past it are expired
     generated: list[int] = field(default_factory=list)
     done: bool = False
+    expired: bool = False
+    slot: int = -1
+    submit_time: float = 0.0
+    arrival_seq: int = 0
+    first_token_time: float | None = None
+    finish_time: float | None = None
 
 
 def build_serve_fns(cfg: ModelConfig, max_len: int,
@@ -53,6 +78,8 @@ def build_serve_fns(cfg: ModelConfig, max_len: int,
 
     ``gemv_policy`` routes decode-step projections through the unified GEMV
     dispatcher; prefill keeps the matmul path (Sq > 1 is not GEMV-shaped).
+    Kept as the dry-run/examples entry point; the Engine builds its own
+    variants (per-slot last-token gather for heterogeneous prefill).
     """
 
     def prefill(params, tokens, cache, extra):
@@ -79,42 +106,91 @@ def greedy(logits: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
 class Engine:
-    """Continuous batching over a fixed number of slots."""
+    """Continuous batching over a slot-managed KV cache.
+
+    Batch shaping: active slots are kept a contiguous prefix (defrag on
+    free), and decode runs over the smallest power-of-two bucket covering
+    them — so jit caches stay bounded AND the scheduler's admission cap
+    translates directly into the batch size the GEMV dispatcher sees.
+    """
 
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
                  max_len: int = 128, use_pim_kernels: bool = True,
                  gemv_batch_threshold: int = 8,
                  gemv_backend: str | None = None,
-                 gemv_fuse_programs: bool = True):
+                 gemv_fuse_programs: bool = True,
+                 scheduler: Scheduler | SchedulerConfig | str = "fcfs",
+                 max_queue: int = 0,
+                 prepack_weights: bool = True,
+                 metrics: ServingMetrics | None = None,
+                 clock=time.monotonic):
         self.cfg = cfg
-        self.params = params
         self.slots = batch_slots
         self.max_len = max_len
+        self.clock = clock
         # Decode GEMV routing: one DispatchPolicy for the engine's lifetime.
         # Above the batch threshold the dispatcher itself falls back to the
         # XLA path (decode becomes matmul-shaped), so the policy is safe to
         # install unconditionally when use_pim_kernels is on.
-        # ``gemv_backend=None`` resolves per host platform at dispatch time.
-        # ``gemv_fuse_programs`` plans shared-IV projections (QKV, MLP
-        # gate+up) and MoE expert groups as joint GEMV programs — one
-        # launch per group per step; False restores per-matrix dispatch.
         self.gemv_policy = (
             DispatchPolicy(batch_threshold=gemv_batch_threshold,
                            backend=gemv_backend,
                            fuse_programs=gemv_fuse_programs)
             if use_pim_kernels else None
         )
-        self.prefill_fn, self.decode_fn = build_serve_fns(
-            cfg, max_len, gemv_policy=self.gemv_policy
+        # One-time fused-weight prepack (§V-A2): dispatch_prepacked then
+        # skips the per-step QKV / gate+up concat inside the jitted decode.
+        self.params = (
+            lm.prepack_decode_params(params, cfg)
+            if (prepack_weights and self.gemv_policy is not None
+                and gemv_fuse_programs)
+            else params
         )
-        self._jit_decode = jax.jit(self.decode_fn)
-        self._jit_prefill = jax.jit(self.prefill_fn)
-        self.cache = lm.init_cache(cfg, batch_slots, max_len)
+        if isinstance(scheduler, Scheduler):
+            self.scheduler = scheduler
+        elif isinstance(scheduler, SchedulerConfig):
+            self.scheduler = Scheduler(scheduler)
+        else:
+            self.scheduler = Scheduler(SchedulerConfig(
+                policy=scheduler, max_queue=max_queue,
+                gemv_batch_threshold=gemv_batch_threshold,
+            ))
+        self.metrics = metrics or ServingMetrics(clock=clock)
+        self.kv = SlotKVCache(cfg, batch_slots, max_len)
         self.active: dict[int, Request] = {}   # slot -> request
-        self.queue: list[Request] = []
+        self.expired: list[Request] = []
         self.last_tok = jnp.zeros((batch_slots, 1), jnp.int32)
         self._extra = self._make_extra(batch_slots)
+        self._rngs: dict[int, np.random.Generator] = {}
+        self._jit_prefill = jax.jit(self._prefill_fn)
+        self._jit_decode = jax.jit(self._decode_fn)
+
+    # -- jitted step functions ----------------------------------------------
+
+    def _prefill_fn(self, params, tokens, lengths, cache, extra):
+        """Batched heterogeneous prefill: right-padded [n, Lpad] prompts,
+        per-slot last-valid-token logits gathered by ``lengths``."""
+        logits, cache, _ = lm.forward(
+            params, self.cfg, tokens, cache=cache,
+            frames=extra.get("frames"), vision=extra.get("vision"),
+        )
+        last = jnp.take_along_axis(
+            logits, (lengths - 1)[:, None, None], axis=1
+        )[:, 0]
+        return last, cache
+
+    def _decode_fn(self, params, last_tok, cache, extra):
+        logits, cache, _ = lm.forward(
+            params, self.cfg, last_tok, cache=cache,
+            frames=extra.get("frames"), vision=extra.get("vision"),
+            gemv_policy=self.gemv_policy,
+        )
+        return logits[:, -1], cache
 
     def _make_extra(self, b):
         extra = {}
@@ -129,69 +205,249 @@ class Engine:
                 dtype=np.float32))
         return extra
 
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
+    # -- back-compat views ---------------------------------------------------
 
-    def _admit(self) -> None:
-        """Fill free slots. Single-request prefill per admission (simple,
-        correct with per-slot cache isolation via batch dimension)."""
-        free = [s for s in range(self.slots) if s not in self.active]
-        while free and self.queue:
-            slot = free.pop(0)
-            req = self.queue.pop(0)
-            # prefill this slot: run a b=1 forward and splice the slot's cache
-            tokens = jnp.asarray(req.prompt[None, :])
-            c1 = lm.init_cache(self.cfg, 1, self.max_len)
-            extra1 = {
-                k: v[slot:slot + 1] for k, v in self._extra.items()
-            }
-            logits, c1 = self._jit_prefill(self.params, tokens, c1, extra1)
-            self.cache = _splice_cache(self.cache, c1, slot)
-            nxt = int(greedy(logits)[0])
-            req.generated.append(nxt)
-            self.last_tok = self.last_tok.at[slot, 0].set(nxt)
-            self.active[slot] = req
+    @property
+    def cache(self):
+        """The slot-managed cache pytree (``pos`` is a per-slot vector)."""
+        return self.kv.cache
+
+    @property
+    def queue(self) -> list[Request]:
+        return self.scheduler.queue
+
+    @property
+    def lockstep_cache(self):
+        """Deprecated: the pre-PR-4 lockstep cache view (scalar ``pos``).
+
+        The slot-managed layout keeps one position per slot; the lockstep
+        scalar was only ever correct for equal prompt lengths.  This shim
+        reduces ``pos`` with ``max`` — the old engine's semantics — for
+        callers that still read ``engine.cache["pos"]`` as a scalar.
+        """
+        from repro.kernels.dispatch import _warn_deprecated_once
+
+        _warn_deprecated_once(
+            "serving.engine.Engine.lockstep_cache",
+            "Engine.lockstep_cache is deprecated; the slot-managed cache "
+            "(Engine.kv) keeps per-slot positions — use kv.cache / "
+            "kv.kv_valid_len()",
+            depth=2,
+        )
+        view = dict(self.kv.cache)
+        view["pos"] = jnp.max(view["pos"])
+        return view
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        """Enqueue a request.
+
+        Raises ``ValueError`` for prompts longer than ``max_len`` (they
+        could never be admitted — the pre-PR-4 engine spun on them until
+        ``max_iters``) and :class:`QueueFull` under backpressure.
+        """
+        if len(req.prompt) > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} "
+                f"exceeds engine max_len={self.max_len}; it can never be "
+                f"admitted — truncate the prompt or raise max_len"
+            )
+        try:
+            self.scheduler.submit(req, self.clock())
+        except QueueFull:
+            self.metrics.request_rejected()
+            raise
+        self.metrics.request_submitted()
 
     def step(self) -> list[Request]:
-        """One engine iteration: admit + one decode step for all slots.
+        """One engine iteration: expire + admit + one decode step.
         Returns requests completed this step."""
-        self._admit()
-        if not self.active:
-            return []
-        logits, self.cache = self._jit_decode(
-            self.params, self.last_tok, self.cache, self._extra
+        t0 = self.clock()
+        expired = self.scheduler.expire(t0)
+        for r in expired:
+            r.expired = True
+        self.expired.extend(expired)
+        if expired:
+            self.metrics.requests_expired(len(expired))
+
+        admitted = self.scheduler.select(self.kv.n_free, self.kv.n_active,
+                                         t0)
+        finished: list[Request] = []
+        if admitted:
+            finished.extend(self._prefill(admitted))
+            # an instant finish (eos / max_new_tokens=1 at prefill) can
+            # punch a hole in the active prefix; decode needs it contiguous
+            self._compact()
+        decode_batch, decode_s = 0, 0.0
+        if self.active:
+            done, decode_batch, decode_s = self._decode()
+            finished.extend(done)
+        self._compact()
+        t1 = self.clock()
+        self.metrics.record_step(
+            t1, step_s=t1 - t0, decode_s=decode_s,
+            decode_batch=decode_batch, n_active=self.kv.n_active,
+            queue_depth=len(self.scheduler),
         )
-        nxt = np.asarray(greedy(logits))
-        finished = []
-        for slot, req in list(self.active.items()):
-            tok = int(nxt[slot])
-            req.generated.append(tok)
-            self.last_tok = self.last_tok.at[slot, 0].set(tok)
-            if (
-                tok == req.eos_id
-                or len(req.generated) >= req.max_new_tokens
-            ):
-                req.done = True
-                finished.append(req)
-                del self.active[slot]
         return finished
 
     def run_until_drained(self, max_iters: int = 1000) -> list[Request]:
         done: list[Request] = []
         for _ in range(max_iters):
             done.extend(self.step())
-            if not self.active and not self.queue:
+            if not self.active and not self.scheduler.queue:
                 break
         return done
 
+    # -- internals -----------------------------------------------------------
+
+    def _prefill(self, admitted: list[Request]) -> list[Request]:
+        # Recurrent state (rwkv / parallel mamba) must never see pad
+        # tokens, so those families prefill per request; pure-attention
+        # families prefill the whole admission wave in ONE right-padded
+        # batched forward (pad KVs stay masked by per-slot kv_valid_len).
+        if self.cfg.family == "ssm" or self.cfg.parallel_ssm:
+            waves = [[r] for r in admitted]
+        else:
+            waves = [admitted]
+        finished = []
+        for wave in waves:
+            finished.extend(self._prefill_wave(wave))
+        return finished
+
+    def _prefill_wave(self, wave: list[Request]) -> list[Request]:
+        slots = [self.kv.alloc() for _ in wave]
+        lengths = [len(r.prompt) for r in wave]
+        Lmax = max(lengths)
+        if self.cfg.family == "ssm" or self.cfg.parallel_ssm:
+            Lpad = Lmax  # exact: no pads through the recurrence
+        else:
+            Lpad = max(min(_next_pow2(Lmax), self.max_len), Lmax)
+        nb = min(_next_pow2(len(wave)), self.slots)
+        tokens = np.zeros((nb, Lpad), np.int32)
+        lens = np.ones((nb,), np.int32)
+        for i, r in enumerate(wave):
+            tokens[i, :lengths[i]] = r.prompt
+            lens[i] = lengths[i]
+        # batch-pad rows reuse the first slot's modality features
+        row_idx = slots + [slots[0]] * (nb - len(wave))
+        extra = {k: v[jnp.asarray(row_idx)] for k, v in self._extra.items()}
+        sub = lm.init_cache(self.cfg, nb, self.max_len, per_slot_pos=True)
+        last, sub = self._jit_prefill(
+            self.params, jnp.asarray(tokens), jnp.asarray(lens), sub, extra
+        )
+        self.kv.splice(sub, slots, lengths)
+        last_np = np.asarray(last)
+        now = self.clock()
+        finished = []
+        for i, (r, slot) in enumerate(zip(wave, slots)):
+            tok = self._sample(r, last_np[i])
+            r.generated.append(tok)
+            r.slot = slot
+            self.active[slot] = r
+            self.last_tok = self.last_tok.at[slot, 0].set(tok)
+            self.metrics.first_token(r, now)
+            self.metrics.tokens_generated(1)
+            if self._should_finish(r, tok):
+                self._finish(r, slot, now)
+                finished.append(r)
+        self.metrics.prefill_wave(len(wave), sum(lengths))
+        return finished
+
+    def _decode(self) -> tuple[list[Request], int, float]:
+        t0 = self.clock()
+        n = self.kv.n_active  # compact() keeps active slots a prefix
+        b = min(_next_pow2(n), self.slots)
+        if self.gemv_policy is not None:
+            # Don't let power-of-two rounding push the batch past the
+            # dispatcher's GEMV gate when the actives themselves fit under
+            # it (a non-pow2 threshold would otherwise silently defeat the
+            # gemv_aware policy); the threshold-sized bucket is one extra
+            # jit shape, still bounded.
+            thresh = self.gemv_policy.batch_threshold
+            if n <= thresh < b:
+                b = thresh
+        cache_b = self.kv.slice_prefix(b)
+        extra_b = {k: v[:b] for k, v in self._extra.items()}
+        logits, new_cache = self._jit_decode(
+            self.params, self.last_tok[:b], cache_b, extra_b
+        )
+        self.kv.merge_prefix(new_cache, b)
+        logits_np = np.asarray(logits)
+        decode_s = self.clock() - t0
+        now = self.clock()
+        finished = []
+        for slot, r in list(self.active.items()):
+            tok = self._sample(r, logits_np[slot])
+            r.generated.append(tok)
+            self.last_tok = self.last_tok.at[slot, 0].set(tok)
+            self.metrics.tokens_generated(1)
+            if self._should_finish(r, tok):
+                self._finish(r, slot, now)
+                finished.append(r)
+        return finished, b, decode_s
+
+    def _sample(self, r: Request, logits_row: np.ndarray) -> int:
+        # greedy-vs-stochastic decision lives in sampling.sample_token;
+        # the engine only caches the per-request generator.
+        if r.sampling is None or r.sampling.temperature <= 0:
+            return sample_token(logits_row, r.sampling)
+        rng = self._rngs.get(r.rid)
+        if rng is None:
+            rng = self._rngs[r.rid] = request_rng(r.sampling, r.rid)
+        return sample_token(logits_row, r.sampling, rng)
+
+    def _should_finish(self, r: Request, tok: int) -> bool:
+        return (
+            tok == r.eos_id
+            or len(r.generated) >= r.max_new_tokens
+            # cache budget: the next decode step would write past max_len
+            or len(r.prompt) + len(r.generated) >= self.max_len
+        )
+
+    def _finish(self, r: Request, slot: int, now: float) -> None:
+        r.done = True
+        self.metrics.request_finished(r, now)
+        self.kv.free(slot)
+        del self.active[slot]
+        self._rngs.pop(r.rid, None)
+
+    def _compact(self) -> None:
+        """Defrag active slots to a contiguous prefix; re-point per-slot
+        side state (request map, last tokens, modality rows)."""
+        for src, dst in self.kv.compact().items():
+            r = self.active.pop(src)
+            r.slot = dst
+            self.active[dst] = r
+            self.last_tok = self.last_tok.at[dst].set(self.last_tok[src])
+            # SWAP modality rows (not copy): the in-flight request keeps
+            # its features at dst, and the freed src slot inherits dst's
+            # old row — the per-slot feature set stays a permutation, so
+            # future occupants never see a duplicated/lost row.
+            for k, v in self._extra.items():
+                src_row = v[src]
+                self._extra[k] = v.at[src].set(v[dst]).at[dst].set(src_row)
+
 
 def _splice_cache(cache, single, slot: int):
-    """Write a b=1 cache into batch slot ``slot``. Note the engine decodes
-    all slots in lockstep, so per-slot positions are tracked via kv_valid_len
-    masking by the max 'pos'; for heterogeneous prompt lengths we left-pad.
-    Positions: this simple engine requires equal prompt lengths per admission
-    wave (tests use fixed-length prompts); a production engine would keep
-    per-slot position vectors."""
+    """Deprecated (PR-4): lockstep single-slot cache splice.
+
+    Writes a b=1 cache into batch slot ``slot`` of a scalar-``pos``
+    (lockstep) cache, tracking position as the max across slots — only
+    correct when every admission wave shares one prompt length.  The slot-
+    managed replacement is :meth:`repro.serving.kv_cache.SlotKVCache.splice`
+    (batched, per-slot positions).  Warns once per call site.
+    """
+    from repro.kernels.dispatch import _warn_deprecated_once
+
+    _warn_deprecated_once(
+        "serving.engine._splice_cache",
+        "serving.engine._splice_cache is deprecated; use "
+        "serving.kv_cache.SlotKVCache.splice (slot-managed cache with "
+        "per-slot positions)",
+        depth=2,
+    )
 
     def f(full, one):
         if full.ndim == 0:  # pos scalar: lockstep position

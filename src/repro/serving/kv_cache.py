@@ -1,0 +1,168 @@
+"""Slot-managed KV cache with per-slot position vectors (DESIGN.md §8.1).
+
+The pre-PR-4 engine decoded every batch slot in lockstep from one scalar
+``pos`` and therefore required equal prompt lengths per admission wave.
+:class:`SlotKVCache` owns the decode-state pytree with ``pos`` as a ``[B]``
+int32 vector — one write offset / valid-kv length per slot — plus the slot
+lifecycle around it:
+
+* **alloc/free** — slots are handed out lowest-first and returned to a
+  sorted free list;
+* **defrag** (:meth:`compact`) — active slots are kept a contiguous prefix
+  ``[0, n_active)`` so the engine can decode a power-of-two *bucket* of the
+  batch dimension (the scheduler's batch-shaping lever, §8.2) instead of
+  always paying the full slot count;
+* **batched multi-slot prefill splicing** (:meth:`splice`) — one
+  right-padded prefill forward over ``n`` requests lands in ``n`` arbitrary
+  slots in a single scatter, with per-slot ``pos`` set to the true prompt
+  lengths (pad garbage beyond a slot's length is never attended — masked by
+  ``kv_valid_len`` — and is overwritten as decode advances).
+
+Every cache leaf except ``pos`` is ``[L, B, ...]`` with batch on axis 1
+(the layout ``models.lm.init_cache`` builds); ``pos`` is ``[B]``.  All
+mutation is functional (``.at`` updates) — the class only swaps array
+references, so a snapshot taken by a caller stays valid.
+"""
+
+from __future__ import annotations
+
+import bisect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+class SlotKVCache:
+    """Decode state for ``batch_slots`` concurrent requests."""
+
+    def __init__(self, cfg: ModelConfig, batch_slots: int, max_len: int,
+                 dtype=None):
+        self.cfg = cfg
+        self.batch_slots = batch_slots
+        self.max_len = max_len
+        self.cache = lm.init_cache(cfg, batch_slots, max_len, dtype,
+                                   per_slot_pos=True)
+        self._free: list[int] = list(range(batch_slots))
+        self._active: set[int] = set()
+
+    # -- slot lifecycle ------------------------------------------------------
+
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def active_slots(self) -> tuple[int, ...]:
+        return tuple(sorted(self._active))
+
+    def alloc(self) -> int:
+        """Claim the lowest free slot (keeps the active set near-prefix)."""
+        if not self._free:
+            raise RuntimeError("no free KV-cache slots")
+        slot = self._free.pop(0)
+        self._active.add(slot)
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._active:
+            raise ValueError(f"slot {slot} is not active")
+        self._active.remove(slot)
+        bisect.insort(self._free, slot)
+
+    def kv_valid_len(self) -> np.ndarray:
+        """Host copy of the per-slot valid-kv lengths (the ``pos`` vector)."""
+        return np.asarray(self.cache["pos"])
+
+    # -- batched prefill splice ---------------------------------------------
+
+    def splice(self, sub_cache, slots: list[int], lengths: list[int]) -> None:
+        """Write an ``n``-row prefill cache into ``slots`` (one scatter per
+        leaf) and set each slot's ``pos`` to its true prompt length.
+
+        ``sub_cache`` comes from a (possibly right-padded, possibly
+        batch-padded) prefill forward: rows beyond ``len(slots)`` are batch
+        padding and are dropped; KV positions beyond a slot's length hold
+        pad garbage that stays masked (and is overwritten by decode).
+        """
+        n = len(slots)
+        assert n == len(lengths), (slots, lengths)
+        idx = jnp.asarray(slots, jnp.int32)
+        new = {}
+        for name, leaf in self.cache.items():
+            if name == "pos":
+                new[name] = leaf.at[idx].set(
+                    jnp.asarray(lengths, jnp.int32))
+            else:
+                new[name] = leaf.at[:, idx].set(
+                    sub_cache[name][:, :n].astype(leaf.dtype))
+        self.cache = new
+
+    # -- decode-prefix views -------------------------------------------------
+
+    def slice_prefix(self, b: int):
+        """The first ``b`` slots as a standalone cache pytree (zero-copy
+        under jit; the engine decodes this bucket)."""
+        return {
+            name: (leaf[:b] if name == "pos" else leaf[:, :b])
+            for name, leaf in self.cache.items()
+        }
+
+    def merge_prefix(self, new_cache, b: int) -> None:
+        """Write a decoded ``b``-slot prefix back into the full cache."""
+        merged = {}
+        for name, leaf in self.cache.items():
+            if name == "pos":
+                merged[name] = leaf.at[:b].set(new_cache[name])
+            else:
+                merged[name] = jax.lax.dynamic_update_slice_in_dim(
+                    leaf, new_cache[name].astype(leaf.dtype), 0, axis=1)
+        self.cache = merged
+
+    # -- defrag --------------------------------------------------------------
+
+    def move(self, src: int, dst: int) -> None:
+        """Copy slot row ``src`` into ``dst`` (the defrag primitive)."""
+        self.cache = {
+            name: (leaf.at[dst].set(leaf[src]) if name == "pos"
+                   else leaf.at[:, dst].set(leaf[:, src]))
+            for name, leaf in self.cache.items()
+        }
+
+    def compact(self) -> dict[int, int]:
+        """Defragment: move active slots down into free holes until the
+        active set is the contiguous prefix ``[0, n_active)``.
+
+        The move plan is computed first (max active into min hole, so every
+        src > every dst and the index sets are disjoint), then applied as
+        ONE batched gather/scatter per leaf — not a full-cache copy per
+        move; this sits on the per-step hot path.  Returns ``{src: dst}``
+        for every moved slot so the engine can re-point its request map
+        and per-slot side arrays.
+        """
+        moves: dict[int, int] = {}
+        while self._free and self._active:
+            dst = self._free[0]
+            src = max(self._active)
+            if dst > src:
+                break
+            self._free.pop(0)
+            self._active.remove(src)
+            self._active.add(dst)
+            bisect.insort(self._free, src)
+            moves[src] = dst
+        if moves:
+            srcs = jnp.asarray(list(moves), jnp.int32)
+            dsts = jnp.asarray(list(moves.values()), jnp.int32)
+            self.cache = {
+                name: (leaf.at[dsts].set(leaf[srcs]) if name == "pos"
+                       else leaf.at[:, dsts].set(leaf[:, srcs]))
+                for name, leaf in self.cache.items()
+            }
+        return moves

@@ -1,0 +1,184 @@
+"""Serving telemetry: latency histograms + GEMV dispatcher counters
+(DESIGN.md §8.3).
+
+The paper's end metric is **per-token decode latency** (§V/§VII); the
+metrics layer makes the engine emit it.  Three histograms:
+
+* ``ttft_ms`` — submit-to-first-token (queueing + prefill);
+* ``per_token_ms`` — decode-step wall time, one sample per step (every
+  active slot advances one token per step, so this IS the per-token decode
+  latency distribution);
+* ``step_ms`` — every engine iteration, including admission-only ones.
+
+plus throughput counters and a per-step snapshot of the GEMV dispatcher's
+decision counters (``repro.kernels.dispatch.dispatch_stats``: plan-cache
+program hits, per-backend kernel picks, gemv-vs-matmul path mix).  The
+snapshots are *deltas against the engine's start*, so one process can run
+several engines/policies and attribute decisions to each (serve_bench
+relies on this to show the scheduler's batch shaping moving the mix).
+
+Everything exports as one schema-versioned JSON document
+(:meth:`ServingMetrics.to_dict` / :meth:`to_json`).  Laptop-scale design:
+histograms keep raw samples and report exact percentiles.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+# --json/JSON-document version: bump when the record layout changes.
+SCHEMA_VERSION = 1
+
+# Per-step snapshots kept in memory; older entries are dropped (the
+# aggregate histograms/counters keep full fidelity).
+MAX_STEP_RECORDS = 4096
+
+
+class Histogram:
+    """Raw-sample histogram with exact percentiles (laptop scale)."""
+
+    def __init__(self, name: str = ""):
+        self.name = name
+        self.samples: list[float] = []
+
+    def record(self, value: float) -> None:
+        self.samples.append(float(value))
+
+    @property
+    def count(self) -> int:
+        return len(self.samples)
+
+    def percentile(self, p: float) -> float:
+        if not self.samples:
+            return float("nan")
+        return float(np.percentile(np.asarray(self.samples), p))
+
+    def summary(self) -> dict:
+        if not self.samples:
+            return {"count": 0}
+        a = np.asarray(self.samples)
+        return {
+            "count": int(a.size),
+            "mean": float(a.mean()),
+            "p50": float(np.percentile(a, 50)),
+            "p90": float(np.percentile(a, 90)),
+            "p99": float(np.percentile(a, 99)),
+            "max": float(a.max()),
+        }
+
+
+def _dispatch_snapshot() -> dict:
+    from repro.kernels.dispatch import dispatch_stats
+
+    return dispatch_stats()
+
+
+def _diff_counters(cur, base):
+    """Recursive int-diff of nested counter dicts (cur - base)."""
+    if isinstance(cur, dict):
+        base = base or {}
+        return {k: _diff_counters(v, base.get(k)) for k, v in cur.items()}
+    return cur - (base or 0)
+
+
+class ServingMetrics:
+    """Mutable per-engine telemetry; one instance per :class:`Engine`."""
+
+    def __init__(self, clock=time.monotonic):
+        self.clock = clock
+        self.start_time = clock()
+        self.ttft_ms = Histogram("ttft_ms")
+        self.per_token_ms = Histogram("per_token_ms")
+        self.step_ms = Histogram("step_ms")
+        self.batch_sizes = Histogram("decode_batch")
+        self.counters = {
+            "submitted": 0, "rejected": 0, "expired": 0, "finished": 0,
+            "tokens_out": 0, "prefill_tokens": 0, "prefill_waves": 0,
+            "decode_steps": 0, "engine_steps": 0,
+        }
+        self.steps: list[dict] = []
+        # Dispatch counters are process-global; everything this engine
+        # reports is a delta against its construction-time snapshot.
+        self._dispatch_base = _dispatch_snapshot()
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def request_submitted(self) -> None:
+        self.counters["submitted"] += 1
+
+    def request_rejected(self) -> None:
+        self.counters["rejected"] += 1
+
+    def requests_expired(self, n: int) -> None:
+        self.counters["expired"] += n
+
+    def first_token(self, req, now: float) -> None:
+        req.first_token_time = now
+        self.ttft_ms.record((now - req.submit_time) * 1e3)
+
+    def request_finished(self, req, now: float) -> None:
+        req.finish_time = now
+        self.counters["finished"] += 1
+
+    def tokens_generated(self, n: int) -> None:
+        self.counters["tokens_out"] += n
+
+    def prefill_wave(self, n_requests: int, n_tokens: int) -> None:
+        self.counters["prefill_waves"] += 1
+        self.counters["prefill_tokens"] += n_tokens
+
+    # -- per-step snapshot ---------------------------------------------------
+
+    def dispatch_delta(self) -> dict:
+        return _diff_counters(_dispatch_snapshot(), self._dispatch_base)
+
+    def record_step(self, now: float, *, step_s: float, decode_batch: int,
+                    n_active: int, queue_depth: int,
+                    decode_s: float = 0.0) -> None:
+        self.counters["engine_steps"] += 1
+        self.step_ms.record(step_s * 1e3)
+        if decode_batch:
+            self.counters["decode_steps"] += 1
+            self.per_token_ms.record(decode_s * 1e3)
+            self.batch_sizes.record(decode_batch)
+        self.steps.append({
+            "t": now - self.start_time,
+            "step_ms": step_s * 1e3,
+            "decode_batch": decode_batch,
+            "active": n_active,
+            "queue": queue_depth,
+            "dispatch": self.dispatch_delta(),
+        })
+        if len(self.steps) > MAX_STEP_RECORDS:
+            del self.steps[:len(self.steps) - MAX_STEP_RECORDS]
+
+    # -- export --------------------------------------------------------------
+
+    def to_dict(self, *, include_steps: bool = True) -> dict:
+        elapsed = max(self.clock() - self.start_time, 1e-9)
+        doc = {
+            "schema": SCHEMA_VERSION,
+            "elapsed_s": elapsed,
+            "ttft_ms": self.ttft_ms.summary(),
+            "per_token_ms": self.per_token_ms.summary(),
+            "step_ms": self.step_ms.summary(),
+            "decode_batch": self.batch_sizes.summary(),
+            "tokens_per_s": self.counters["tokens_out"] / elapsed,
+            "counters": dict(self.counters),
+            "dispatch": self.dispatch_delta(),
+        }
+        if include_steps:
+            doc["steps"] = list(self.steps)
+        return doc
+
+    def to_json(self, path: str | None = None, *,
+                include_steps: bool = True) -> str:
+        doc = self.to_dict(include_steps=include_steps)
+        text = json.dumps(doc, indent=1, sort_keys=True)
+        if path:
+            with open(path, "w") as f:
+                f.write(text)
+        return text

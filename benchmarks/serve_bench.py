@@ -14,6 +14,8 @@ performance; the dispatch-mix and scheduling behavior are real.
     PYTHONPATH=src python benchmarks/serve_bench.py                # full trace
     PYTHONPATH=src python benchmarks/serve_bench.py --smoke --json SERVE.json
     PYTHONPATH=src python benchmarks/serve_bench.py --policy gemv_aware
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python benchmarks/serve_bench.py --mesh 1x4 --smoke
 """
 
 from __future__ import annotations
@@ -27,9 +29,18 @@ from repro.serving.scheduler import POLICIES
 def print_run(run: dict) -> None:
     ttft, ptok = run["ttft_ms"], run["per_token_ms"]
     disp = run["dispatch"]
+    mesh = run.get("mesh")
+    mesh_tag = ""
+    shard_tag = ""
+    if mesh:
+        mesh_tag = " mesh=" + "x".join(str(v) for v in mesh.values())
+        axes = disp.get("sharded_axes", {})
+        if axes:
+            shard_tag = " shards[" + " ".join(
+                f"{a}:{n}" for a, n in sorted(axes.items())) + "]"
     print(
         f"serve/{run['policy']} slots={run['batch_slots']} "
-        f"thresh={run['gemv_batch_threshold']}: "
+        f"thresh={run['gemv_batch_threshold']}{mesh_tag}: "
         f"completed={run['completed']} "
         f"ttft p50={ttft.get('p50', float('nan')):.1f}ms "
         f"p99={ttft.get('p99', float('nan')):.1f}ms | "
@@ -39,7 +50,14 @@ def print_run(run: dict) -> None:
         f"dispatch gemv={disp['gemv_path']} "
         f"matmul_fallback={disp['matmul_fallback']} "
         f"program_hits={disp['plan_cache']['program_hits']}"
+        f"{shard_tag}"
     )
+
+
+def parse_mesh(arg: str) -> tuple[int, int]:
+    from repro.launch.mesh import parse_mesh_arg
+
+    return parse_mesh_arg(arg)
 
 
 def main(argv=None) -> int:
@@ -58,6 +76,14 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default=None,
                     help="pin a registered GemvBackend for decode dispatch")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="run the SHARDED engine on a (data, model) device "
+                         "mesh, e.g. 1x4 — needs D*M devices (set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count "
+                         "off-hardware); records per-shard dispatch stats")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="split prompts longer than this many tokens into "
+                         "one-chunk-per-step prefill splices")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace + slot count (CI leg)")
     ap.add_argument("--json", metavar="OUT", default=None,
@@ -74,7 +100,10 @@ def main(argv=None) -> int:
     doc = run_serve_trace(
         args.arch, policies=policies, smoke=args.smoke, seed=args.seed,
         batch_slots=args.slots, gemv_batch_threshold=args.threshold,
-        gemv_backend=args.backend, trace_config=tcfg, out=args.json,
+        gemv_backend=args.backend,
+        mesh_shape=parse_mesh(args.mesh) if args.mesh else None,
+        prefill_chunk=args.prefill_chunk,
+        trace_config=tcfg, out=args.json,
     )
     for run in doc["runs"]:
         print_run(run)

@@ -63,6 +63,11 @@ def _leaf_spec(
         prefs = [0, 1] if name == "embed" else [1, 0]
     elif name in ("wq", "wk", "wv"):        # [d, H, hd] -> heads (output)
         prefs = [1, 2, 0]
+    elif name in ("wqkv", "w_gateup"):      # prepacked fused [d, sum(M)]
+        # the decode prepack (lm.prepack_decode_params): the concatenated
+        # output dim is the fused program's M — row placement over it keeps
+        # every chip's shard self-contained (no cross-chip reduction)
+        prefs = [1, 0]
     elif name == "wo":                      # [H, hd, d] -> heads (input/row)
         prefs = [0, 1, 2]
     elif name in ("w_gate", "w_up"):        # [(E,) d, f] -> E, then f
@@ -192,6 +197,56 @@ def plan_cache(cache, mesh: Mesh, cfg: ModelConfig, batch: int):
     def f(path, leaf):
         name = _path_str(path)
         return cache_spec(mesh, cfg, batch, np.shape(leaf), name)
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+# --------------------------------------------------------------------------
+# Serving (slot-managed) cache
+# --------------------------------------------------------------------------
+
+
+def serve_cache_spec(
+    mesh: Mesh, cfg: ModelConfig, shape: tuple[int, ...], name: str
+) -> P:
+    """Slot-managed decode-state placement (DESIGN.md §9).
+
+    Differs from :func:`cache_spec` on purpose: the serving engine's slot
+    dimension is its DEFRAG axis — slots are spliced, compacted, and
+    bucket-sliced every step — so batch stays unsharded (a batch shard
+    would turn every defrag move into a cross-chip transfer), and the
+    per-slot ``pos`` vector is replicated (every chip needs every slot's
+    write offset for the vmapped KV update).  KV shards on HEADS along
+    'model' when they divide (row placement — each chip owns whole heads,
+    attention never reduces across chips); recurrent (ssm/hybrid) state
+    shards its channel dim the same way.  Sequence is never sharded here:
+    per-slot positions scatter writes at data-dependent offsets, which a
+    sequence shard would turn into per-step collectives.
+    """
+    model_n = mesh.shape.get("model", 1)
+    spec: list[Any] = [None] * len(shape)
+    if model_n <= 1:
+        return P(*spec)
+    if name in ("k", "v"):
+        # [L, B, S, H, hd]: heads or nothing
+        if _divides(shape[3], model_n):
+            spec[3] = "model"
+        return P(*spec)
+    if len(shape) >= 3 and name != "pos":
+        # recurrent state [L, B, channels...]: first divisible channel dim
+        for d in range(2, len(shape)):
+            if _divides(shape[d], model_n):
+                spec[d] = "model"
+                break
+        return P(*spec)
+    return P(*spec)  # pos (and any vector state): replicated
+
+
+def plan_serve_cache(cache, mesh: Mesh, cfg: ModelConfig):
+    """PartitionSpec tree for a slot-managed serving cache pytree."""
+    def f(path, leaf):
+        name = _path_str(path)
+        return serve_cache_spec(mesh, cfg, np.shape(leaf), name)
 
     return jax.tree_util.tree_map_with_path(f, cache)
 

@@ -26,6 +26,7 @@ from repro.kernels.backends.base import (  # noqa: F401
     GemvRequest,
     ProgramKey,
     ProgramPlan,
+    ShardedPlan,
     available_backends,
     backend_for_platform,
     entry_to_plan,

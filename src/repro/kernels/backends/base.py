@@ -100,9 +100,54 @@ class DispatchPolicy:
     # into independent per-request dispatches (the pre-program behavior),
     # True lets the backend plan the group jointly (fused-M / grouped).
     fuse_programs: bool = True
+    # Size of the mesh 'model' axis the executed ops will be partitioned
+    # over (GSPMD).  > 1 engages the ShardedPlan path (DESIGN.md §9): the
+    # dispatcher selects kernels from the PER-SHARD GEMV shape — M / N for
+    # row placement, K / N for the split-K fallback, per Algorithm 1's
+    # even-distribution test — because that is the problem each chip
+    # actually solves.  Execution still traces the full-shape op; GSPMD
+    # splits it along the axis the placement chose.
+    model_shards: int = 1
 
 
 DEFAULT_POLICY = DispatchPolicy()
+
+
+@dataclass(frozen=True)
+class ShardedPlan:
+    """Per-shard view of one GEMV under the mesh 'model' axis.
+
+    The paper's Algorithm 1 walks tile shapes until rows distribute evenly
+    over banks; lifted to the mesh (DESIGN.md §2.2/§9), the "banks" are the
+    chips along 'model' and the even-distribution test is exact
+    divisibility.  :meth:`place` applies the same preference order the
+    placement planner uses for weights: row placement first (shard the
+    output dim M — each chip owns whole rows, no cross-chip reduction),
+    split-K as the fallback (shard the contraction dim K — GSPMD inserts
+    the partial-sum all-reduce, the SoC-reduction analogue), replication
+    when neither divides.
+    """
+
+    axis: str        # "M" (row placement) | "K" (split-K) | "replicated"
+    n_shards: int
+
+    @classmethod
+    def place(cls, M: int, K: int, n_shards: int) -> "ShardedPlan":
+        if n_shards <= 1:
+            return cls(axis="replicated", n_shards=1)
+        if M % n_shards == 0:
+            return cls(axis="M", n_shards=n_shards)
+        if K % n_shards == 0:
+            return cls(axis="K", n_shards=n_shards)
+        return cls(axis="replicated", n_shards=n_shards)
+
+    def shard_shape(self, M: int, K: int) -> tuple[int, int]:
+        """The (M, K) each chip sees under this placement."""
+        if self.axis == "M":
+            return M // self.n_shards, K
+        if self.axis == "K":
+            return M, K // self.n_shards
+        return M, K
 
 
 @dataclass(frozen=True)

@@ -58,6 +58,7 @@ New code should go through ``get_backend(...)`` / the backend methods.
 
 from __future__ import annotations
 
+import dataclasses
 import sys
 import threading
 import warnings
@@ -75,6 +76,7 @@ from repro.kernels.backends import (
     GemvRequest,
     ProgramKey,
     ProgramPlan,
+    ShardedPlan,
     available_backends,
     get_backend,
     resolve_backend,
@@ -92,7 +94,7 @@ from repro.kernels.tpu_plan import TPUGemvPlan
 
 __all__ = [
     "DispatchPolicy", "DEFAULT_POLICY", "GemvKey", "GemvPlan",
-    "GemvRequest", "GemvProgram", "ProgramKey", "ProgramPlan",
+    "GemvRequest", "GemvProgram", "ProgramKey", "ProgramPlan", "ShardedPlan",
     "dispatch_gemv", "dispatch_dense", "as_packed", "from_transposed",
     "dispatch_program", "dispatch_fused", "dispatch_grouped",
     "dispatch_prepacked",
@@ -127,6 +129,12 @@ _DISPATCH_COUNTERS: dict = {
     "program_modes": {},    # "backend:mode"   -> decisions
     "gemv_path": 0,         # decisions with batch <= policy.batch_threshold
     "matmul_fallback": 0,   # decisions the batch gate pushed to the XLA dot
+    # ShardedPlan path (policy.model_shards > 1, DESIGN.md §9): how each
+    # decision placed the GEMV over the mesh 'model' axis, and which kernel
+    # the PER-SHARD shape selected — keyed by the shard shape itself, so
+    # stats prove selection reasoned about M/N (or K/N), not full shapes.
+    "sharded_axes": {},     # "M" | "K" | "E" | "replicated" -> decisions
+    "shard_picks": {},      # "backend:kernel@MsxKs/n" -> decisions
 }
 _AUTOTUNE_TABLE = AutotuneTable()
 
@@ -153,12 +161,16 @@ def dispatch_stats() -> dict:
             "program_modes": dict(_DISPATCH_COUNTERS["program_modes"]),
             "gemv_path": _DISPATCH_COUNTERS["gemv_path"],
             "matmul_fallback": _DISPATCH_COUNTERS["matmul_fallback"],
+            "sharded_axes": dict(_DISPATCH_COUNTERS["sharded_axes"]),
+            "shard_picks": dict(_DISPATCH_COUNTERS["shard_picks"]),
         }
 
 
 def _count_decision(backend_name: str, key_batch: int,
                     policy: DispatchPolicy, *, kernel: str | None = None,
-                    mode: str | None = None) -> None:
+                    mode: str | None = None,
+                    shard_axis: str | None = None,
+                    shard_pick: str | None = None) -> None:
     """Record one fresh dispatch decision (caller holds no locks)."""
     with _LOCK:
         if kernel is not None:
@@ -169,6 +181,13 @@ def _count_decision(backend_name: str, key_batch: int,
             modes = _DISPATCH_COUNTERS["program_modes"]
             m = f"{backend_name}:{mode}"
             modes[m] = modes.get(m, 0) + 1
+        if shard_axis is not None:
+            axes = _DISPATCH_COUNTERS["sharded_axes"]
+            axes[shard_axis] = axes.get(shard_axis, 0) + 1
+        if shard_pick is not None:
+            sp = _DISPATCH_COUNTERS["shard_picks"]
+            key = f"{backend_name}:{shard_pick}"
+            sp[key] = sp.get(key, 0) + 1
         if key_batch > policy.batch_threshold:
             _DISPATCH_COUNTERS["matmul_fallback"] += 1
         else:
@@ -186,6 +205,8 @@ def clear_plan_cache() -> None:
         _DISPATCH_COUNTERS["program_modes"] = {}
         _DISPATCH_COUNTERS["gemv_path"] = 0
         _DISPATCH_COUNTERS["matmul_fallback"] = 0
+        _DISPATCH_COUNTERS["sharded_axes"] = {}
+        _DISPATCH_COUNTERS["shard_picks"] = {}
 
 
 def clear_autotune_table() -> None:
@@ -252,6 +273,22 @@ def from_transposed(w_t: jnp.ndarray) -> PackedWeights:
 # ---------------------------------------------------------------------------
 
 
+def _shard_gemv_key(key: GemvKey,
+                    policy: DispatchPolicy) -> tuple[GemvKey, ShardedPlan]:
+    """Per-shard selection key under the mesh 'model' axis (DESIGN.md §9).
+
+    Applies Algorithm 1's even-distribution test to (M, K): row placement
+    divides M, the split-K fallback divides K, otherwise the weight is
+    replicated and the full shape stands.  Only the *selection inputs*
+    shrink — execution traces the full-shape op and GSPMD splits it.
+    """
+    sp = ShardedPlan.place(key.M, key.K, policy.model_shards)
+    Ms, Ks = sp.shard_shape(key.M, key.K)
+    if (Ms, Ks) == (key.M, key.K):
+        return key, sp
+    return dataclasses.replace(key, M=Ms, K=Ks), sp
+
+
 def _resolve(backend, key: GemvKey,
              policy: DispatchPolicy) -> tuple[str, GemvPlan | None]:
     """Memoized (kernel, plan) for one shape: cache -> table -> model.
@@ -261,6 +298,13 @@ def _resolve(backend, key: GemvKey,
     the same shape.  Table entries live in the backend's namespace and
     only stand in for the *cost model* — an unpinned auto policy; pins and
     ``use_pallas=False`` outrank any table entry.
+
+    With ``policy.model_shards > 1`` (the ShardedPlan path) the cost
+    model, table lookup, and autotune all run on the PER-SHARD shape —
+    the GEMV each chip solves after the placement planner sharded the
+    weight — and the chosen kernel is then re-planned at the full shape
+    (pinned selection) so the traced op stays executable before GSPMD
+    partitions it.
     """
     with _LOCK:
         cached = _PLAN_CACHE.get((key, policy))
@@ -275,24 +319,41 @@ def _resolve(backend, key: GemvKey,
                 _CACHE_STATS["hits"] += 1
                 return cached
             _CACHE_STATS["misses"] += 1
+        shard_axis = shard_pick = None
+        sel_key = key
+        if policy.model_shards > 1 and policy.kernel == "auto":
+            sel_key, sp = _shard_gemv_key(key, policy)
+            shard_axis = sp.axis
         tuned = policy.kernel == "auto" and policy.use_pallas
         if tuned and policy.autotune:
             kernel, plan = backend.autotune_gemv(
-                key, policy=policy, table=_AUTOTUNE_TABLE
+                sel_key, policy=policy, table=_AUTOTUNE_TABLE
             )
         elif tuned and (
-            entry := _AUTOTUNE_TABLE.get(backend.name, key.table_key())
+            entry := _AUTOTUNE_TABLE.get(backend.name, sel_key.table_key())
         ) is not None:
             kernel, plan = _entry_to_plan(entry)
         else:
             kernel, plan = backend.select_kernel(
+                sel_key.M, sel_key.K, sel_key.batch, bits=sel_key.bits,
+                block=sel_key.block,
+                x_bytes=jnp.dtype(sel_key.dtype).itemsize, policy=policy,
+            )
+        if sel_key is not key:
+            # The per-shard shape chose the kernel; re-plan it at the full
+            # shape (pinned) so grids/chunk degrees fit the traced op.
+            shard_pick = (f"{kernel}@{sel_key.M}x{sel_key.K}"
+                          f"/{policy.model_shards}")
+            kernel, plan = backend.select_kernel(
                 key.M, key.K, key.batch, bits=key.bits, block=key.block,
-                x_bytes=jnp.dtype(key.dtype).itemsize, policy=policy,
+                x_bytes=jnp.dtype(key.dtype).itemsize,
+                policy=dataclasses.replace(policy, kernel=kernel),
             )
         # every branch above returns directly executable (aligned) plans
         with _LOCK:
             _PLAN_CACHE[(key, policy)] = (kernel, plan)
-        _count_decision(backend.name, key.batch, policy, kernel=kernel)
+        _count_decision(backend.name, key.batch, policy, kernel=kernel,
+                        shard_axis=shard_axis, shard_pick=shard_pick)
     return kernel, plan
 
 
@@ -371,6 +432,31 @@ def dispatch_dense(
 # ---------------------------------------------------------------------------
 
 
+def _shard_program_key(key: ProgramKey,
+                       policy: DispatchPolicy) -> tuple[ProgramKey, str]:
+    """Per-shard program key under the mesh 'model' axis.
+
+    The even-distribution test walks the program's placement preferences
+    in the planner's order: expert-row placement for grouped programs
+    (experts divide the axis — each chip owns whole experts), row
+    placement for fused ones (every member's M divides — each chip owns
+    whole output rows of the concatenated weight), split-K as the shared
+    fallback.  Returns the (possibly shrunk) selection key and the axis
+    label recorded in ``dispatch_stats()["sharded_axes"]``.
+    """
+    n = policy.model_shards
+    if n <= 1:
+        return key, "replicated"
+    if key.kind == "grouped" and key.group % n == 0:
+        return dataclasses.replace(key, group=key.group // n), "E"
+    if all(m % n == 0 for m in key.Ms):
+        return dataclasses.replace(
+            key, Ms=tuple(m // n for m in key.Ms)), "M"
+    if key.K % n == 0:
+        return dataclasses.replace(key, K=key.K // n), "K"
+    return key, "replicated"
+
+
 def _resolve_program(backend, key: ProgramKey,
                      policy: DispatchPolicy) -> ProgramPlan:
     """Memoized ProgramPlan for one program shape: cache -> table -> plan.
@@ -383,6 +469,11 @@ def _resolve_program(backend, key: ProgramKey,
     dry-run's A/B arm), never inherit a fused winner tuned under another
     policy, and never persist a per-request "winner" that would disable
     fusing for every auto policy reading the table later.
+
+    With ``policy.model_shards > 1`` the mode and inner kernel are chosen
+    from the PER-SHARD program shape (:func:`_shard_program_key`); a fused
+    winner's inner plan is then re-built at the full concatenated shape so
+    the traced op stays executable before GSPMD partitions it.
     """
     with _LOCK:
         cached = _PROGRAM_CACHE.get((key, policy))
@@ -397,22 +488,42 @@ def _resolve_program(backend, key: ProgramKey,
                 _CACHE_STATS["program_hits"] += 1
                 return cached
             _CACHE_STATS["program_misses"] += 1
+        shard_axis = shard_pick = None
+        sel_key = key
+        if policy.model_shards > 1 and policy.kernel == "auto":
+            sel_key, shard_axis = _shard_program_key(key, policy)
         tuned = (policy.kernel == "auto" and policy.use_pallas
                  and policy.fuse_programs)
         if tuned and policy.autotune:
             pplan = backend.autotune_program(
-                key, policy=policy, table=_AUTOTUNE_TABLE
+                sel_key, policy=policy, table=_AUTOTUNE_TABLE
             )
         elif tuned and (
             entry := _AUTOTUNE_TABLE.get_program(backend.name,
-                                                 key.table_key())
+                                                 sel_key.table_key())
         ) is not None:
             pplan = _entry_to_program_plan(entry)
         else:
-            pplan = backend.plan_program(key, policy=policy)
+            pplan = backend.plan_program(sel_key, policy=policy)
+        if sel_key is not key:
+            shard_pick = (f"{pplan.mode}@{sel_key.table_key()}"
+                          f"/{policy.model_shards}")
+            if pplan.mode == "fused":
+                # per-shard shape chose the mode + inner kernel; re-plan
+                # the inner decision at the full concatenated shape
+                kernel, plan = backend.select_kernel(
+                    sum(key.Ms), key.K, key.batch, bits=key.bits,
+                    block=key.block,
+                    x_bytes=jnp.dtype(key.dtype).itemsize,
+                    policy=dataclasses.replace(policy, kernel=pplan.kernel),
+                )
+                pplan = ProgramPlan(mode="fused",
+                                    n_launches=pplan.n_launches,
+                                    kernel=kernel, plan=plan)
         with _LOCK:
             _PROGRAM_CACHE[(key, policy)] = pplan
-        _count_decision(backend.name, key.batch, policy, mode=pplan.mode)
+        _count_decision(backend.name, key.batch, policy, mode=pplan.mode,
+                        shard_axis=shard_axis, shard_pick=shard_pick)
     return pplan
 
 

@@ -377,17 +377,25 @@ def run_serve_traces(args) -> int:
     policies = tuple(
         p for p in args.serve_policies.split(",") if p
     )
+    mesh_shape = None
+    tag = "serve_trace"
+    if args.serve_mesh:
+        from repro.launch.mesh import parse_mesh_arg
+
+        mesh_shape = parse_mesh_arg(args.serve_mesh)
+        tag = "serve_trace_{}x{}".format(*mesh_shape)
     archs = [args.arch] if args.arch else ["olmo-1b"]
     if args.all:
         from repro.configs.registry import ARCHS
         archs = sorted(ARCHS)
     failures = 0
     for arch in archs:
-        path = os.path.join(serve_dir, f"{arch}__serve_trace.json")
+        path = os.path.join(serve_dir, f"{arch}__{tag}.json")
         try:
             doc = run_serve_trace(
                 arch, policies=policies, smoke=True,
-                gemv_backend=args.gemv_backend, out=path,
+                gemv_backend=args.gemv_backend, mesh_shape=mesh_shape,
+                out=path,
             )
         except Exception as e:
             failures += 1
@@ -432,6 +440,12 @@ def main(argv=None) -> int:
     ap.add_argument("--serve-policies", default="fcfs,sjf,gemv_aware",
                     help="comma-separated scheduler policies for "
                          "--serve-trace")
+    ap.add_argument("--serve-mesh", default=None, metavar="DxM",
+                    help="with --serve-trace: run the SHARDED engine on a "
+                         "(data, model) mesh (e.g. 1x4) — the dry-run's "
+                         "forced-host-platform device grid supplies the "
+                         "devices; artifacts record per-shard dispatch "
+                         "stats (DESIGN.md §9)")
     args = ap.parse_args(argv)
 
     if args.serve_trace:

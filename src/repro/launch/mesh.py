@@ -37,6 +37,21 @@ def single_device_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def parse_mesh_arg(arg: str) -> tuple[int, int]:
+    """Parse a ``DxM`` CLI mesh spec (data x model), e.g. ``"1x4"``.
+
+    Shared by ``serve_bench --mesh`` and ``dryrun --serve-mesh`` so both
+    fail with the same usage message instead of a raw unpack traceback.
+    """
+    try:
+        d, m = arg.lower().split("x")
+        return int(d), int(m)
+    except ValueError:
+        raise SystemExit(
+            f"mesh spec wants DxM (e.g. 1x4, data x model), got {arg!r}"
+        ) from None
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """Axes that carry the global batch ('pod' folds into data-parallel)."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -178,6 +178,7 @@ def apply_attention(
     """
     B, S, d = x.shape
     if gemv is not None and S == 1 and gemv.fuse_programs:
+        from repro.distributed.axes import constrain
         from repro.kernels.dispatch import dispatch_fused, dispatch_prepacked
 
         hd = cfg.hd
@@ -196,9 +197,17 @@ def apply_attention(
                  p["wv"].reshape(d, -1)],
                 policy=gemv,
             )
-        q = q2.reshape(B, S, -1, hd)
-        k = k2.reshape(B, S, -1, hd)
-        v = v2.reshape(B, S, -1, hd)
+        # Sharded serving (DESIGN.md §9): the fused program's output rows
+        # follow the weight's row placement — anchor heads on 'model' so
+        # GSPMD keeps the per-chip shard through rope and the KV write
+        # instead of round-tripping through a replicated layout (no-op when
+        # no mesh context is active or heads don't divide).
+        q = constrain(q2.reshape(B, S, -1, hd),
+                      ("batch", None, "model", None))
+        k = constrain(k2.reshape(B, S, -1, hd),
+                      ("batch", None, "model", None))
+        v = constrain(v2.reshape(B, S, -1, hd),
+                      ("batch", None, "model", None))
     else:
         q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
         k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
@@ -303,6 +312,8 @@ def apply_mlp(
 
     if (decode_gemv and gemv.fuse_programs
             and cfg.act in ("silu", "geglu")):
+        from repro.distributed.axes import constrain
+
         B, S, d = x.shape
         if "w_gateup" in p:
             # Prepacked fused weight (lm.prepack_decode_params): no
@@ -317,9 +328,16 @@ def apply_mlp(
             g2, u2 = dispatch_fused(
                 x.reshape(B * S, d), [p["w_gate"], p["w_up"]], policy=gemv
             )
-        gate, up = g2.reshape(B, S, -1), u2.reshape(B, S, -1)
+        # Sharded serving (DESIGN.md §9): keep the gate/up activations on
+        # the FFN-width shard their weights' row placement produced; the
+        # down projection then contracts over the sharded width and GSPMD
+        # inserts the partial-sum all-reduce (split-K analogue).  No-op
+        # without an active mesh context.
+        gate = constrain(g2.reshape(B, S, -1), ("batch", None, "model"))
+        up = constrain(u2.reshape(B, S, -1), ("batch", None, "model"))
         act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
-        return mm(act(gate) * up, p["w_down"])
+        return constrain(mm(act(gate) * up, p["w_down"]),
+                         ("batch", None, None))
 
     up = mm(x, p["w_up"])
     if cfg.act == "silu":

@@ -224,7 +224,8 @@ def _fuse_block_params(p: Params, cfg: ModelConfig) -> Params:
     return p
 
 
-def prepack_decode_params(params: Params, cfg: ModelConfig) -> Params:
+def prepack_decode_params(params: Params, cfg: ModelConfig,
+                          mesh=None) -> Params:
     """Prepack fused QKV and MLP gate+up weights for the decode hot path.
 
     ``dispatch_fused`` concatenates its members at call time — under ``jit``
@@ -236,18 +237,30 @@ def prepack_decode_params(params: Params, cfg: ModelConfig) -> Params:
     matrices through :func:`repro.kernels.dispatch.dispatch_prepacked`
     when present.  Returns a NEW params tree (originals untouched) that is
     a drop-in for ``forward``.
+
+    With ``mesh``, the returned tree is placed with the PIMnast mesh
+    planner (``distributed.sharding.plan_params`` — the fused ``wqkv`` /
+    ``w_gateup`` leaves get row placement over their concatenated output
+    dim), so the spec-carrying params feed straight into a sharded
+    ``forward`` without an eager replication round-trip.
     """
     if cfg.family == "ssm":
-        return params
-    params = dict(params)
-    if "layers" in params:
-        params["layers"] = _fuse_block_params(params["layers"], cfg)
-    if "groups" in params:
-        g = dict(params["groups"])
-        g["plain"] = _fuse_block_params(g["plain"], cfg)
-        g["cross_layer"] = _fuse_block_params(g["cross_layer"], cfg)
-        params["groups"] = g
-    return params
+        packed = params
+    else:
+        packed = dict(params)
+        if "layers" in packed:
+            packed["layers"] = _fuse_block_params(packed["layers"], cfg)
+        if "groups" in packed:
+            g = dict(packed["groups"])
+            g["plain"] = _fuse_block_params(g["plain"], cfg)
+            g["cross_layer"] = _fuse_block_params(g["cross_layer"], cfg)
+            packed["groups"] = g
+    if mesh is not None:
+        from repro.distributed import sharding as shd
+
+        spec = shd.plan_params(packed, mesh, cfg)
+        packed = jax.device_put(packed, shd.to_named(spec, mesh))
+    return packed
 
 
 # --------------------------------------------------------------------------

@@ -33,7 +33,10 @@ import jax
 import numpy as np
 
 # --json document version: bump when the record layout changes.
-SCHEMA_VERSION = 1
+# v2: per-run "mesh" record (sharded serving) — the dispatch counters then
+# carry the ShardedPlan sections (sharded_axes / shard_picks, DESIGN.md §9)
+# — and per-request eos_ids in the trace config.
+SCHEMA_VERSION = 2
 
 
 @dataclass(frozen=True)
@@ -42,6 +45,7 @@ class TraceConfig:
     arrival_rate: float = 1.5       # mean arrivals per engine step (Poisson)
     prompt_len_range: tuple[int, int] = (4, 24)   # inclusive, mixed tenants
     max_new_range: tuple[int, int] = (4, 12)
+    eos_ids: tuple[int, ...] = ()   # tokenizer-aware stop set (empty: none)
     seed: int = 0
 
     @classmethod
@@ -52,8 +56,10 @@ class TraceConfig:
 
 def build_trace(tcfg: TraceConfig, vocab: int,
                 rng: np.random.Generator) -> list[dict]:
-    """[{arrival_step, prompt, max_new_tokens}] — arrivals are a Poisson
-    process: cumulative exponential gaps from the caller's seeded rng."""
+    """[{arrival_step, prompt, max_new_tokens, eos_ids}] — arrivals are a
+    Poisson process: cumulative exponential gaps from the caller's seeded
+    rng; every request carries the trace's stop set (empty = run to
+    max_new_tokens, the synthetic-ids default)."""
     lo, hi = tcfg.prompt_len_range
     nlo, nhi = tcfg.max_new_range
     t = 0.0
@@ -65,6 +71,7 @@ def build_trace(tcfg: TraceConfig, vocab: int,
             "arrival_step": int(t),
             "prompt": rng.integers(0, vocab, plen).astype(np.int32),
             "max_new_tokens": int(rng.integers(nlo, nhi + 1)),
+            "eos_ids": tuple(tcfg.eos_ids),
         })
     return out
 
@@ -72,10 +79,12 @@ def build_trace(tcfg: TraceConfig, vocab: int,
 def run_policy(cfg, params, policy: str, trace: list[dict], *,
                batch_slots: int, max_len: int, gemv_batch_threshold: int,
                gemv_backend: str | None = None, max_queue: int = 0,
+               mesh=None, prefill_chunk: int | None = None,
                max_iters: int = 5000) -> dict:
     """Serve one trace under one scheduler policy; returns the metrics doc
     (per-step snapshots dropped — aggregates only) tagged with the run
-    configuration."""
+    configuration.  ``mesh`` runs the sharded engine (DESIGN.md §9): the
+    run's dispatch counters then include the per-shard sections."""
     from repro.kernels import dispatch
     from repro.serving.engine import Engine, Request
     from repro.serving.scheduler import QueueFull
@@ -85,10 +94,12 @@ def run_policy(cfg, params, policy: str, trace: list[dict], *,
         cfg, params, batch_slots=batch_slots, max_len=max_len,
         gemv_batch_threshold=gemv_batch_threshold,
         gemv_backend=gemv_backend, scheduler=policy, max_queue=max_queue,
+        mesh=mesh, prefill_chunk=prefill_chunk,
     )
     pending = [
         Request(rid=i, prompt=t["prompt"],
-                max_new_tokens=t["max_new_tokens"])
+                max_new_tokens=t["max_new_tokens"],
+                eos_ids=(set(t["eos_ids"]) if t.get("eos_ids") else None))
         for i, t in enumerate(trace)
     ]
     arrivals = [t["arrival_step"] for t in trace]
@@ -116,6 +127,8 @@ def run_policy(cfg, params, policy: str, trace: list[dict], *,
         gemv_batch_threshold=gemv_batch_threshold,
         completed=len(done),
         total_generated=sum(len(r.generated) for r in done),
+        mesh=(None if mesh is None
+              else {k: int(v) for k, v in mesh.shape.items()}),
     )
     return doc
 
@@ -129,6 +142,8 @@ def run_serve_trace(
     max_len: int = 96,
     gemv_batch_threshold: int = 4,
     gemv_backend: str | None = None,
+    mesh_shape: tuple[int, int] | None = None,
+    prefill_chunk: int | None = None,
     trace_config: TraceConfig | None = None,
     out: str | None = None,
 ) -> dict:
@@ -139,12 +154,23 @@ def run_serve_trace(
     policy then provably crosses the dispatcher's batch gate while
     ``gemv_aware`` stays under it — the dispatch-mix contrast the
     acceptance criteria lock.
+
+    ``mesh_shape=(d, m)`` builds a ``(data, model)`` device mesh and runs
+    the SHARDED engine (DESIGN.md §9) — the process needs ``d * m``
+    devices (forced-host-platform in CI: ``XLA_FLAGS=--xla_force_host_
+    platform_device_count=N``); every run then records the mesh and the
+    per-shard dispatch stats.
     """
     from repro.configs.registry import get_config
     from repro.models import lm
 
     cfg = get_config(arch).reduced()
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    mesh = None
+    if mesh_shape is not None:
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh(tuple(mesh_shape), ("data", "model"))
     if smoke:
         batch_slots = min(batch_slots, 4)
         gemv_batch_threshold = min(gemv_batch_threshold, 2)
@@ -158,18 +184,22 @@ def run_serve_trace(
         run_policy(cfg, params, policy, trace, batch_slots=batch_slots,
                    max_len=max_len,
                    gemv_batch_threshold=gemv_batch_threshold,
-                   gemv_backend=gemv_backend)
+                   gemv_backend=gemv_backend, mesh=mesh,
+                   prefill_chunk=prefill_chunk)
         for policy in policies
     ]
     doc = {
         "schema": SCHEMA_VERSION,
         "arch": arch,
         "reduced": True,
+        "mesh": (None if mesh is None
+                 else {k: int(v) for k, v in mesh.shape.items()}),
         "trace": {
             "n_requests": tcfg.n_requests,
             "arrival_rate": tcfg.arrival_rate,
             "prompt_len_range": list(tcfg.prompt_len_range),
             "max_new_range": list(tcfg.max_new_range),
+            "eos_ids": list(tcfg.eos_ids),
             "seed": tcfg.seed,
         },
         "runs": runs,

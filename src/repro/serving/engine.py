@@ -11,7 +11,8 @@
   shortest-prompt-first / a ``gemv_aware`` policy that caps concurrent
   decode slots at ``gemv_batch_threshold`` so decode stays on the
   GEMV-program fast path — the paper's orchestration knob lifted to the
-  request level), waiting-queue backpressure, per-request deadlines;
+  request level), waiting-queue backpressure, per-request deadlines, and
+  (``preempt_margin``) slot eviction for deadline-imminent queued work;
 * :class:`~repro.serving.metrics.ServingMetrics` — TTFT / per-token-latency
   / throughput histograms plus per-step GEMV-dispatcher counter snapshots,
   exportable as a schema-versioned JSON document;
@@ -28,10 +29,22 @@ request.  The engine decodes a defragmented power-of-two *bucket* of active
 slots, so the scheduler's admission cap is what decides whether those
 dispatches stay GEMV-shaped or fall back to the XLA matmul path — the mix
 is visible in ``dispatch_stats()`` and in every metrics snapshot.
+
+Sharded mode (DESIGN.md §9): constructed with a ``mesh``, the engine runs
+the same serving loop over a device mesh end-to-end — decode params placed
+with the PIMnast mesh planner (``distributed.sharding.plan_params``), the
+slot cache sharded with ``plan_serve_cache`` (per-slot ``pos`` replicated,
+KV on heads along 'model'), prefill-splice / decode / defrag jitted with
+explicit ``in_shardings``/``out_shardings``, and the GEMV dispatcher's
+``DispatchPolicy.model_shards`` set to the 'model'-axis size so every
+kernel decision reasons about the PER-SHARD GEMV (M/N row placement or
+K/N split-K — Algorithm 1's even-distribution test at the mesh level).
+Greedy decode is token-identical to the single-host engine.
 """
 
 from __future__ import annotations
 
+import contextlib
 import time
 from dataclasses import dataclass, field
 
@@ -58,7 +71,9 @@ class Request:
     rid: int
     prompt: np.ndarray              # [S] int32
     max_new_tokens: int = 16
-    eos_id: int = -1                # -1: never
+    eos_id: int = -1                # -1: never (shim; prefer eos_ids)
+    eos_ids: set[int] | None = None  # tokenizer-aware stop set; overrides
+                                     # eos_id when set (may be empty)
     sampling: SamplingParams | None = None   # None: greedy
     deadline: float | None = None   # absolute engine-clock time; queued
                                     # requests past it are expired
@@ -68,8 +83,17 @@ class Request:
     slot: int = -1
     submit_time: float = 0.0
     arrival_seq: int = 0
+    admit_seq: int = -1             # admission order (preemption victim pick)
+    evictions: int = 0              # times this request lost its slot
     first_token_time: float | None = None
     finish_time: float | None = None
+
+    def stop_set(self) -> frozenset[int]:
+        """The effective stop-token set (``eos_ids`` over the ``eos_id``
+        shim; ``eos_id == -1`` means never stop on a token)."""
+        if self.eos_ids is not None:
+            return frozenset(self.eos_ids)
+        return frozenset((self.eos_id,)) if self.eos_id >= 0 else frozenset()
 
 
 def build_serve_fns(cfg: ModelConfig, max_len: int,
@@ -117,6 +141,11 @@ class Engine:
     free), and decode runs over the smallest power-of-two bucket covering
     them — so jit caches stay bounded AND the scheduler's admission cap
     translates directly into the batch size the GEMV dispatcher sees.
+
+    ``mesh`` switches the engine into sharded mode (module docstring /
+    DESIGN.md §9); ``prefill_chunk`` splits prompts longer than that many
+    tokens into one-chunk-per-step splices so a long prefill no longer
+    stalls the decode batch for a full step.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
@@ -128,19 +157,31 @@ class Engine:
                  max_queue: int = 0,
                  prepack_weights: bool = True,
                  metrics: ServingMetrics | None = None,
+                 mesh=None,
+                 prefill_chunk: int | None = None,
                  clock=time.monotonic):
         self.cfg = cfg
         self.slots = batch_slots
         self.max_len = max_len
         self.clock = clock
+        self.mesh = mesh
+        self.prefill_chunk = prefill_chunk
+        model_shards = 1
+        if mesh is not None:
+            from repro.launch.mesh import model_axis_size
+
+            model_shards = model_axis_size(mesh)
         # Decode GEMV routing: one DispatchPolicy for the engine's lifetime.
         # Above the batch threshold the dispatcher itself falls back to the
         # XLA path (decode becomes matmul-shaped), so the policy is safe to
-        # install unconditionally when use_pim_kernels is on.
+        # install unconditionally when use_pim_kernels is on.  In sharded
+        # mode ``model_shards`` makes every selection reason about the
+        # per-shard GEMV (DESIGN.md §9).
         self.gemv_policy = (
             DispatchPolicy(batch_threshold=gemv_batch_threshold,
                            backend=gemv_backend,
-                           fuse_programs=gemv_fuse_programs)
+                           fuse_programs=gemv_fuse_programs,
+                           model_shards=model_shards)
             if use_pim_kernels else None
         )
         # One-time fused-weight prepack (§V-A2): dispatch_prepacked then
@@ -151,6 +192,17 @@ class Engine:
                 and gemv_fuse_programs)
             else params
         )
+        self.param_shardings = None
+        if mesh is not None:
+            # Place (prepacked) decode params with the PIMnast mesh planner:
+            # row placement over 'model' with the split-K fallback, FSDP on
+            # the data axes (DESIGN.md §2.2; fused wqkv / w_gateup leaves
+            # shard their concatenated output dim).
+            from repro.distributed import sharding as shd
+
+            pspec = shd.plan_params(self.params, mesh, cfg)
+            self.param_shardings = shd.to_named(pspec, mesh)
+            self.params = jax.device_put(self.params, self.param_shardings)
         if isinstance(scheduler, Scheduler):
             self.scheduler = scheduler
         elif isinstance(scheduler, SchedulerConfig):
@@ -161,20 +213,57 @@ class Engine:
                 gemv_batch_threshold=gemv_batch_threshold,
             ))
         self.metrics = metrics or ServingMetrics(clock=clock)
-        self.kv = SlotKVCache(cfg, batch_slots, max_len)
+        self.kv = SlotKVCache(cfg, batch_slots, max_len, mesh=mesh)
         self.active: dict[int, Request] = {}   # slot -> request
+        # slot -> [request, tokens spliced so far] (chunked prefill in
+        # flight: the slot is alloc'd but not yet decoding)
+        self._prefilling: dict[int, list] = {}
         self.expired: list[Request] = []
         self.last_tok = jnp.zeros((batch_slots, 1), jnp.int32)
         self._extra = self._make_extra(batch_slots)
         self._rngs: dict[int, np.random.Generator] = {}
-        self._jit_prefill = jax.jit(self._prefill_fn)
-        self._jit_decode = jax.jit(self._decode_fn)
+        self._admit_seq = 0
+        if mesh is None:
+            self._jit_prefill = jax.jit(self._prefill_fn)
+            self._jit_decode = jax.jit(self._decode_fn)
+        else:
+            # Explicit shardings on the step functions: params and cache
+            # arrive pre-placed (no transfer), everything host-built
+            # (tokens, lengths, last tokens, modality rows) replicates, and
+            # the new cache leaves are pinned to the cache placement — the
+            # decode/prefill output can never come back resharded.
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            rep = NamedSharding(mesh, P())
+            rep_extra = {k: rep for k in self._extra}
+            c_sh = self.kv.shardings
+            self._jit_prefill = jax.jit(
+                self._prefill_fn,
+                in_shardings=(self.param_shardings, rep, rep, c_sh,
+                              rep_extra),
+                out_shardings=(rep, c_sh),
+            )
+            self._jit_decode = jax.jit(
+                self._decode_fn,
+                in_shardings=(self.param_shardings, rep, c_sh, rep_extra),
+                out_shardings=(rep, c_sh),
+            )
+
+    def _mesh_ctx(self):
+        """Activation-sharding anchors active while tracing under a mesh."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.distributed.axes import activation_mesh
+
+        return activation_mesh(self.mesh)
 
     # -- jitted step functions ----------------------------------------------
 
     def _prefill_fn(self, params, tokens, lengths, cache, extra):
         """Batched heterogeneous prefill: right-padded [n, Lpad] prompts,
-        per-slot last-valid-token logits gathered by ``lengths``."""
+        per-slot last-valid-token logits gathered by ``lengths``.  Also the
+        chunked-prefill continuation body (the cache carries the per-slot
+        write offset, so a chunk is just a shorter right-padded prompt)."""
         logits, cache, _ = lm.forward(
             params, self.cfg, tokens, cache=cache,
             frames=extra.get("frames"), vision=extra.get("vision"),
@@ -261,8 +350,9 @@ class Engine:
         self.metrics.request_submitted()
 
     def step(self) -> list[Request]:
-        """One engine iteration: expire + admit + one decode step.
-        Returns requests completed this step."""
+        """One engine iteration: expire + (maybe preempt) + admit + chunked
+        prefill advance + one decode step.  Returns requests completed this
+        step."""
         t0 = self.clock()
         expired = self.scheduler.expire(t0)
         for r in expired:
@@ -271,14 +361,33 @@ class Engine:
         if expired:
             self.metrics.requests_expired(len(expired))
 
+        self._maybe_preempt(t0)
         admitted = self.scheduler.select(self.kv.n_free, self.kv.n_active,
                                          t0)
         finished: list[Request] = []
         if admitted:
-            finished.extend(self._prefill(admitted))
-            # an instant finish (eos / max_new_tokens=1 at prefill) can
-            # punch a hole in the active prefix; decode needs it contiguous
-            self._compact()
+            for r in admitted:
+                r.admit_seq = self._admit_seq
+                self._admit_seq += 1
+            if self.prefill_chunk:
+                chunked = [r for r in admitted
+                           if len(self._pending_tokens(r))
+                           > self.prefill_chunk]
+            else:
+                chunked = []
+            chunked_ids = {id(r) for r in chunked}
+            plain = [r for r in admitted if id(r) not in chunked_ids]
+            if plain:
+                finished.extend(self._prefill(plain))
+            for r in chunked:
+                # alloc now (the admission decision spent this slot); the
+                # first chunk splices in the advance pass below
+                self._prefilling[self.kv.alloc()] = [r, 0]
+        if self._prefilling:
+            finished.extend(self._advance_chunked())
+        # an instant finish (eos / max_new_tokens=1 at prefill) can punch a
+        # hole in the active prefix; decode needs it contiguous
+        self._compact()
         decode_batch, decode_s = 0, 0.0
         if self.active:
             done, decode_batch, decode_s = self._decode()
@@ -296,11 +405,49 @@ class Engine:
         done: list[Request] = []
         for _ in range(max_iters):
             done.extend(self.step())
-            if not self.active and not self.scheduler.queue:
+            if (not self.active and not self._prefilling
+                    and not self.scheduler.queue):
                 break
         return done
 
     # -- internals -----------------------------------------------------------
+
+    @staticmethod
+    def _pending_tokens(r: Request) -> np.ndarray:
+        """The tokens a (re-)prefill must splice: the prompt, plus whatever
+        was already generated when the slot was evicted — re-prefilling the
+        full stream makes eviction invisible to greedy token identity."""
+        if r.generated:
+            return np.concatenate([np.asarray(r.prompt, np.int32),
+                                   np.asarray(r.generated, np.int32)])
+        return np.asarray(r.prompt, np.int32)
+
+    def _maybe_preempt(self, now: float) -> None:
+        """Slot eviction for deadline scheduling (DESIGN.md §8.2): when the
+        ``gemv_aware`` scheduler reports a queued request whose deadline
+        would expire before a slot naturally frees, evict the YOUNGEST
+        occupant (least work wasted) — a mid-chunked-prefill slot first
+        (zero decode work done), else the youngest decoding slot.  The
+        victim is requeued and re-prefills — prompt plus generated-so-far
+        — on readmission.
+        """
+        if self.kv.n_free > 0 or (not self.active and not self._prefilling):
+            return
+        if not self.scheduler.wants_preemption(now):
+            return
+        if self._prefilling:
+            slot = max(self._prefilling,
+                       key=lambda s: self._prefilling[s][0].admit_seq)
+            r = self._prefilling.pop(slot)[0]
+        else:
+            slot = max(self.active,
+                       key=lambda s: self.active[s].admit_seq)
+            r = self.active.pop(slot)
+        self.kv.free(slot)
+        r.slot = -1
+        r.evictions += 1
+        self.scheduler.requeue(r)
+        self.metrics.request_evicted()
 
     def _prefill(self, admitted: list[Request]) -> list[Request]:
         # Recurrent state (rwkv / parallel mamba) must never see pad
@@ -318,7 +465,8 @@ class Engine:
 
     def _prefill_wave(self, wave: list[Request]) -> list[Request]:
         slots = [self.kv.alloc() for _ in wave]
-        lengths = [len(r.prompt) for r in wave]
+        toks = [self._pending_tokens(r) for r in wave]
+        lengths = [len(t) for t in toks]
         Lmax = max(lengths)
         if self.cfg.family == "ssm" or self.cfg.parallel_ssm:
             Lpad = Lmax  # exact: no pads through the recurrence
@@ -327,37 +475,92 @@ class Engine:
         nb = min(_next_pow2(len(wave)), self.slots)
         tokens = np.zeros((nb, Lpad), np.int32)
         lens = np.ones((nb,), np.int32)
-        for i, r in enumerate(wave):
-            tokens[i, :lengths[i]] = r.prompt
+        for i, t in enumerate(toks):
+            tokens[i, :lengths[i]] = t
             lens[i] = lengths[i]
         # batch-pad rows reuse the first slot's modality features
         row_idx = slots + [slots[0]] * (nb - len(wave))
         extra = {k: v[jnp.asarray(row_idx)] for k, v in self._extra.items()}
         sub = lm.init_cache(self.cfg, nb, self.max_len, per_slot_pos=True)
-        last, sub = self._jit_prefill(
-            self.params, jnp.asarray(tokens), jnp.asarray(lens), sub, extra
-        )
+        with self._mesh_ctx():
+            last, sub = self._jit_prefill(
+                self.params, jnp.asarray(tokens), jnp.asarray(lens), sub,
+                extra,
+            )
         self.kv.splice(sub, slots, lengths)
         last_np = np.asarray(last)
         now = self.clock()
         finished = []
         for i, (r, slot) in enumerate(zip(wave, slots)):
             tok = self._sample(r, last_np[i])
-            r.generated.append(tok)
-            r.slot = slot
-            self.active[slot] = r
-            self.last_tok = self.last_tok.at[slot, 0].set(tok)
-            self.metrics.first_token(r, now)
-            self.metrics.tokens_generated(1)
-            if self._should_finish(r, tok):
-                self._finish(r, slot, now)
+            if self._activate(r, slot, tok, now):
                 finished.append(r)
         self.metrics.prefill_wave(len(wave), sum(lengths))
         return finished
 
+    def _advance_chunked(self) -> list[Request]:
+        """Advance every in-flight chunked prefill by ONE chunk (so a long
+        prompt costs one bounded splice per engine step instead of stalling
+        the whole step); the final chunk samples the first token and moves
+        the request into the decode set."""
+        finished = []
+        for slot in sorted(self._prefilling):
+            req, consumed = self._prefilling[slot]
+            toks = self._pending_tokens(req)
+            chunk = toks[consumed:consumed + self.prefill_chunk]
+            c = len(chunk)
+            if self.cfg.family == "ssm" or self.cfg.parallel_ssm:
+                cpad = c  # exact: no pads through the recurrence
+            else:
+                # pad rounding must not write past max_len: the per-slot KV
+                # update starts at ``consumed``, and an over-long pad would
+                # make dynamic_update_slice CLAMP the start index backwards,
+                # silently overwriting valid KV from earlier chunks
+                cpad = max(min(_next_pow2(c), self.prefill_chunk,
+                               self.max_len - consumed), c)
+            tokens = np.zeros((1, cpad), np.int32)
+            tokens[0, :c] = chunk
+            # first chunk starts from a fresh b=1 cache; later chunks
+            # continue from the slot's own row (pos = tokens spliced so far)
+            sub = (lm.init_cache(self.cfg, 1, self.max_len,
+                                 per_slot_pos=True)
+                   if consumed == 0 else self.kv.slot_view(slot))
+            extra1 = {k: v[slot:slot + 1] for k, v in self._extra.items()}
+            with self._mesh_ctx():
+                last, sub = self._jit_prefill(
+                    self.params, jnp.asarray(tokens),
+                    jnp.asarray([c], np.int32), sub, extra1,
+                )
+            self.kv.splice(sub, [slot], [consumed + c])
+            self._prefilling[slot][1] = consumed + c
+            self.metrics.prefill_chunk(c)
+            if consumed + c < len(toks):
+                continue
+            del self._prefilling[slot]
+            req2 = req  # fully spliced: sample the first token, activate
+            tok = self._sample(req2, np.asarray(last)[0])
+            if self._activate(req2, slot, tok, self.clock()):
+                finished.append(req2)
+        return finished
+
+    def _activate(self, r: Request, slot: int, tok: int,
+                  now: float) -> bool:
+        """Shared prefill tail: record the first sampled token and move the
+        request into the decode set; returns True on an instant finish."""
+        r.generated.append(tok)
+        r.slot = slot
+        self.active[slot] = r
+        self.last_tok = self.last_tok.at[slot, 0].set(tok)
+        self.metrics.first_token(r, now)
+        self.metrics.tokens_generated(1)
+        if self._should_finish(r, tok):
+            self._finish(r, slot, now)
+            return True
+        return False
+
     def _decode(self) -> tuple[list[Request], int, float]:
         t0 = self.clock()
-        n = self.kv.n_active  # compact() keeps active slots a prefix
+        n = self.kv.n_active  # compact() keeps alloc'd slots a prefix
         b = min(_next_pow2(n), self.slots)
         if self.gemv_policy is not None:
             # Don't let power-of-two rounding push the batch past the
@@ -368,12 +571,21 @@ class Engine:
             thresh = self.gemv_policy.batch_threshold
             if n <= thresh < b:
                 b = thresh
+        # Chunked-prefill rows sit inside the alloc'd prefix the bucket
+        # covers; decode must not advance their mid-prompt state, so their
+        # rows are snapshotted and restored after the merge (their logits
+        # are never sampled — only ``self.active`` rows are).
+        snaps = {s: (self.kv.slot_view(s), self._prefilling[s][1])
+                 for s in self._prefilling if s < b}
         cache_b = self.kv.slice_prefix(b)
         extra_b = {k: v[:b] for k, v in self._extra.items()}
-        logits, new_cache = self._jit_decode(
-            self.params, self.last_tok[:b], cache_b, extra_b
-        )
+        with self._mesh_ctx():
+            logits, new_cache = self._jit_decode(
+                self.params, self.last_tok[:b], cache_b, extra_b
+            )
         self.kv.merge_prefix(new_cache, b)
+        for s, (snap, consumed) in snaps.items():
+            self.kv.splice(snap, [s], [consumed])
         logits_np = np.asarray(logits)
         decode_s = self.clock() - t0
         now = self.clock()
@@ -400,7 +612,7 @@ class Engine:
 
     def _should_finish(self, r: Request, tok: int) -> bool:
         return (
-            tok == r.eos_id
+            tok in r.stop_set()
             or len(r.generated) >= r.max_new_tokens
             # cache budget: the next decode step would write past max_len
             or len(r.prompt) + len(r.generated) >= self.max_len
@@ -415,11 +627,15 @@ class Engine:
 
     def _compact(self) -> None:
         """Defrag active slots to a contiguous prefix; re-point per-slot
-        side state (request map, last tokens, modality rows)."""
+        side state (request map, chunked-prefill map, last tokens,
+        modality rows)."""
         for src, dst in self.kv.compact().items():
-            r = self.active.pop(src)
-            r.slot = dst
-            self.active[dst] = r
+            if src in self.active:
+                r = self.active.pop(src)
+                r.slot = dst
+                self.active[dst] = r
+            else:
+                self._prefilling[dst] = self._prefilling.pop(src)
             self.last_tok = self.last_tok.at[dst].set(self.last_tok[src])
             # SWAP modality rows (not copy): the in-flight request keeps
             # its features at dst, and the freed src slot inherits dst's

@@ -22,6 +22,15 @@ Every cache leaf except ``pos`` is ``[L, B, ...]`` with batch on axis 1
 (the layout ``models.lm.init_cache`` builds); ``pos`` is ``[B]``.  All
 mutation is functional (``.at`` updates) — the class only swaps array
 references, so a snapshot taken by a caller stays valid.
+
+Sharded mode (DESIGN.md §9): constructed with a ``mesh``, the cache plans
+placements with :func:`repro.distributed.sharding.plan_serve_cache` —
+per-slot ``pos`` replicated, KV sharded on heads along the 'model' axis —
+and runs every mutation (splice, prefix merge, defrag scatter) as a
+JITTED function with explicit ``in_shardings``/``out_shardings``.  The
+slot dimension is never sharded, so a defrag move is a shard-local
+gather/scatter on every chip: defrag can never trigger resharding, by
+construction, not by compiler luck.
 """
 
 from __future__ import annotations
@@ -36,11 +45,48 @@ from repro.configs.base import ModelConfig
 from repro.models import lm
 
 
+# -- pure mutation bodies (jitted with explicit shardings in mesh mode) -----
+
+
+def _splice_fn(cache, sub, idx, lengths):
+    """Scatter an n-row sub-cache into slot rows ``idx``; ``pos[idx]`` is
+    set to ``lengths`` (true spliced content length per slot)."""
+    new = {}
+    for name, leaf in cache.items():
+        if name == "pos":
+            new[name] = leaf.at[idx].set(lengths)
+        else:
+            new[name] = leaf.at[:, idx].set(sub[name].astype(leaf.dtype))
+    return new
+
+
+def _merge_fn(cache, new_prefix):
+    """Write a decoded b-slot prefix back into the full cache."""
+    b = new_prefix["pos"].shape[0]
+    merged = {}
+    for name, leaf in cache.items():
+        if name == "pos":
+            merged[name] = leaf.at[:b].set(new_prefix[name])
+        else:
+            merged[name] = jax.lax.dynamic_update_slice_in_dim(
+                leaf, new_prefix[name].astype(leaf.dtype), 0, axis=1)
+    return merged
+
+
+def _defrag_fn(cache, srcs, dsts):
+    """One batched gather/scatter per leaf: rows ``srcs`` -> ``dsts``."""
+    return {
+        name: (leaf.at[dsts].set(leaf[srcs]) if name == "pos"
+               else leaf.at[:, dsts].set(leaf[:, srcs]))
+        for name, leaf in cache.items()
+    }
+
+
 class SlotKVCache:
     """Decode state for ``batch_slots`` concurrent requests."""
 
     def __init__(self, cfg: ModelConfig, batch_slots: int, max_len: int,
-                 dtype=None):
+                 dtype=None, mesh=None):
         self.cfg = cfg
         self.batch_slots = batch_slots
         self.max_len = max_len
@@ -48,6 +94,30 @@ class SlotKVCache:
                                    per_slot_pos=True)
         self._free: list[int] = list(range(batch_slots))
         self._active: set[int] = set()
+        self.mesh = mesh
+        self.shardings = None
+        self._splice_jit = _splice_fn
+        self._merge_jit = _merge_fn
+        self._defrag_jit = _defrag_fn
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.distributed import sharding as shd
+
+            spec = shd.plan_serve_cache(self.cache, mesh, cfg)
+            self.shardings = shd.to_named(spec, mesh)
+            self.cache = jax.device_put(self.cache, self.shardings)
+            rep = NamedSharding(mesh, P())
+            sh = self.shardings
+            # Explicit shardings on every mutation: in == out, so a defrag
+            # or splice is always shard-local (no resharding, no gathers).
+            self._splice_jit = jax.jit(
+                _splice_fn, in_shardings=(sh, sh, rep, rep),
+                out_shardings=sh)
+            self._merge_jit = jax.jit(
+                _merge_fn, in_shardings=(sh, sh), out_shardings=sh)
+            self._defrag_jit = jax.jit(
+                _defrag_fn, in_shardings=(sh, rep, rep), out_shardings=sh)
 
     # -- slot lifecycle ------------------------------------------------------
 
@@ -94,15 +164,10 @@ class SlotKVCache:
         n = len(slots)
         assert n == len(lengths), (slots, lengths)
         idx = jnp.asarray(slots, jnp.int32)
-        new = {}
-        for name, leaf in self.cache.items():
-            if name == "pos":
-                new[name] = leaf.at[idx].set(
-                    jnp.asarray(lengths, jnp.int32))
-            else:
-                new[name] = leaf.at[:, idx].set(
-                    sub_cache[name][:, :n].astype(leaf.dtype))
-        self.cache = new
+        sub = {name: leaf[:n] if name == "pos" else leaf[:, :n]
+               for name, leaf in sub_cache.items()}
+        self.cache = self._splice_jit(
+            self.cache, sub, idx, jnp.asarray(lengths, jnp.int32))
 
     # -- decode-prefix views -------------------------------------------------
 
@@ -114,26 +179,27 @@ class SlotKVCache:
             for name, leaf in self.cache.items()
         }
 
+    def slot_view(self, slot: int):
+        """One slot row as a standalone b=1 cache pytree (the chunked-
+        prefill continuation input / decode-bucket snapshot)."""
+        return {
+            name: (leaf[slot:slot + 1] if name == "pos"
+                   else leaf[:, slot:slot + 1])
+            for name, leaf in self.cache.items()
+        }
+
     def merge_prefix(self, new_cache, b: int) -> None:
         """Write a decoded ``b``-slot prefix back into the full cache."""
-        merged = {}
-        for name, leaf in self.cache.items():
-            if name == "pos":
-                merged[name] = leaf.at[:b].set(new_cache[name])
-            else:
-                merged[name] = jax.lax.dynamic_update_slice_in_dim(
-                    leaf, new_cache[name].astype(leaf.dtype), 0, axis=1)
-        self.cache = merged
+        del b  # inferred from the prefix's own pos vector
+        self.cache = self._merge_jit(self.cache, new_cache)
 
     # -- defrag --------------------------------------------------------------
 
     def move(self, src: int, dst: int) -> None:
         """Copy slot row ``src`` into ``dst`` (the defrag primitive)."""
-        self.cache = {
-            name: (leaf.at[dst].set(leaf[src]) if name == "pos"
-                   else leaf.at[:, dst].set(leaf[:, src]))
-            for name, leaf in self.cache.items()
-        }
+        self.cache = self._defrag_jit(
+            self.cache, jnp.asarray([src], jnp.int32),
+            jnp.asarray([dst], jnp.int32))
 
     def compact(self) -> dict[int, int]:
         """Defragment: move active slots down into free holes until the
@@ -158,11 +224,8 @@ class SlotKVCache:
             bisect.insort(self._free, src)
             moves[src] = dst
         if moves:
-            srcs = jnp.asarray(list(moves), jnp.int32)
-            dsts = jnp.asarray(list(moves.values()), jnp.int32)
-            self.cache = {
-                name: (leaf.at[dsts].set(leaf[srcs]) if name == "pos"
-                       else leaf.at[:, dsts].set(leaf[:, srcs]))
-                for name, leaf in self.cache.items()
-            }
+            self.cache = self._defrag_jit(
+                self.cache,
+                jnp.asarray(list(moves), jnp.int32),
+                jnp.asarray(list(moves.values()), jnp.int32))
         return moves

@@ -96,7 +96,9 @@ class ServingMetrics:
         self.batch_sizes = Histogram("decode_batch")
         self.counters = {
             "submitted": 0, "rejected": 0, "expired": 0, "finished": 0,
+            "evicted": 0,
             "tokens_out": 0, "prefill_tokens": 0, "prefill_waves": 0,
+            "prefill_chunks": 0,
             "decode_steps": 0, "engine_steps": 0,
         }
         self.steps: list[dict] = []
@@ -115,7 +117,15 @@ class ServingMetrics:
     def requests_expired(self, n: int) -> None:
         self.counters["expired"] += n
 
+    def request_evicted(self) -> None:
+        """A running slot was preempted for a deadline-imminent request."""
+        self.counters["evicted"] += 1
+
     def first_token(self, req, now: float) -> None:
+        """Record TTFT once per request: a preempted request re-prefills on
+        readmission, but its first token already streamed out."""
+        if req.first_token_time is not None:
+            return
         req.first_token_time = now
         self.ttft_ms.record((now - req.submit_time) * 1e3)
 
@@ -128,6 +138,11 @@ class ServingMetrics:
 
     def prefill_wave(self, n_requests: int, n_tokens: int) -> None:
         self.counters["prefill_waves"] += 1
+        self.counters["prefill_tokens"] += n_tokens
+
+    def prefill_chunk(self, n_tokens: int) -> None:
+        """One chunk of a chunked prefill (one bounded splice per step)."""
+        self.counters["prefill_chunks"] += 1
         self.counters["prefill_tokens"] += n_tokens
 
     # -- per-step snapshot ---------------------------------------------------

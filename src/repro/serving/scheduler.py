@@ -30,6 +30,17 @@ step).  A request with an absolute ``deadline`` that passes while still
 *queued* is expired by :meth:`Scheduler.expire` and never admitted;
 already-running requests are left to finish (killing mid-decode would
 waste the prefill work already spent).
+
+Preemption (slot eviction)
+--------------------------
+With ``preempt_margin`` set (``gemv_aware`` only), a queued request whose
+deadline would pass within the margin while every slot is occupied is
+*deadline-imminent*: :meth:`wants_preemption` tells the engine to evict
+the youngest running slot (least decode work wasted), and :meth:`select`
+orders imminent requests first so the freed slot goes to the request the
+eviction was for.  Evicted requests are requeued (:meth:`requeue`) and
+re-prefill — prompt plus generated-so-far — on readmission, so greedy
+token streams are unchanged by eviction.
 """
 
 from __future__ import annotations
@@ -48,6 +59,10 @@ class SchedulerConfig:
     policy: str = "fcfs"              # fcfs | sjf | gemv_aware
     max_queue: int = 0                # 0 = unbounded
     gemv_batch_threshold: int = 8     # gemv_aware: max concurrent decode slots
+    # gemv_aware only: evict a running slot when a queued deadline would
+    # pass within this many clock units and no slot is free (None: running
+    # requests always finish — the pre-preemption behavior)
+    preempt_margin: float | None = None
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -80,14 +95,46 @@ class Scheduler:
         self._seq += 1
         self.queue.append(req)
 
+    def requeue(self, req) -> None:
+        """Put an evicted (preempted) request back in the waiting queue.
+
+        Bypasses ``max_queue`` backpressure — the request was already
+        admitted once and its slot was taken back; dropping it here would
+        turn preemption into silent request loss.  ``submit_time`` and
+        ``arrival_seq`` are preserved (TTFT was already recorded; ordering
+        ties still resolve by original arrival).
+        """
+        self.queue.append(req)
+
     def expire(self, now: float) -> list:
-        """Remove (and return) queued requests whose deadline has passed."""
+        """Remove (and return) queued requests whose deadline has passed.
+
+        Requests that already streamed tokens (an evicted request waiting
+        for readmission) are never expired — the documented invariant is
+        that admitted work is left to finish, and dropping one here would
+        silently lose its generated-so-far output mid-stream.
+        """
         expired = [r for r in self.queue
-                   if r.deadline is not None and now >= r.deadline]
+                   if r.deadline is not None and now >= r.deadline
+                   and not getattr(r, "generated", None)]
         if expired:
             dead = set(id(r) for r in expired)
             self.queue = [r for r in self.queue if id(r) not in dead]
         return expired
+
+    def _imminent(self, req, now: float) -> bool:
+        m = self.config.preempt_margin
+        return (m is not None and req.deadline is not None
+                and now + m >= req.deadline)
+
+    def wants_preemption(self, now: float) -> bool:
+        """True when a queued request is deadline-imminent and this policy
+        may evict for it (``gemv_aware`` with ``preempt_margin`` set).
+        The engine checks this only when no slot is free."""
+        cfg = self.config
+        if cfg.policy != "gemv_aware" or cfg.preempt_margin is None:
+            return False
+        return any(self._imminent(r, now) for r in self.queue)
 
     def select(self, free_slots: int, n_active: int,
                now: float = 0.0) -> list:
@@ -100,9 +147,22 @@ class Scheduler:
             return []
         if cfg.policy == "fcfs":
             order = list(self.queue)
-        else:  # sjf and gemv_aware: shortest prompt first, stable
-            order = sorted(self.queue,
-                           key=lambda r: (len(r.prompt), r.arrival_seq))
+        else:  # sjf and gemv_aware: shortest prompt first, stable;
+            # under gemv_aware preemption (and ONLY there — sjf ordering
+            # must not change just because preempt_margin is set),
+            # deadline-imminent requests jump the order: the slot an
+            # eviction just freed must go to them, or the eviction wasted
+            # a running request's slot for nothing
+            preempting = (cfg.policy == "gemv_aware"
+                          and cfg.preempt_margin is not None)
+
+            def key(r):
+                imm = preempting and self._imminent(r, now)
+                return (0 if imm else 1,
+                        r.deadline if imm else 0.0,
+                        len(r.prompt), r.arrival_seq)
+
+            order = sorted(self.queue, key=key)
         picked = order[:cap]
         taken = set(id(r) for r in picked)
         self.queue = [r for r in self.queue if id(r) not in taken]

@@ -472,6 +472,248 @@ def test_scheduler_policy_changes_dispatch_mix(cfg, params):
 
 
 # --------------------------------------------------------------------------
+# Tokenizer-aware stop sets (eos_ids over the single-eos_id shim)
+# --------------------------------------------------------------------------
+
+
+def test_engine_eos_ids_stop_set(cfg, params):
+    """A multi-token stop SET truncates at the first member hit, exactly
+    like the single-id shim would for that token."""
+    prompt = _prompts(cfg, [7], seed=11)[0]
+    ref = _serial_greedy(cfg, params, prompt, 8)
+    stop = {ref[0], cfg.vocab + 5}  # one live stop token + one never-hit
+    eng = Engine(cfg, params, batch_slots=2, max_len=MAX_LEN)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8,
+                       eos_ids=stop))
+    eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=8,
+                       eos_id=ref[0]))  # shim: same stop, old spelling
+    done = {r.rid: r for r in eng.run_until_drained()}
+    first = min(i for i, t in enumerate(ref) if t in stop)
+    assert done[0].generated == ref[:first + 1]
+    assert done[0].generated == done[1].generated
+    # empty set = never stop on a token (overrides a set eos_id)
+    eng = Engine(cfg, params, batch_slots=1, max_len=MAX_LEN)
+    eng.submit(Request(rid=2, prompt=prompt, max_new_tokens=6,
+                       eos_id=ref[0], eos_ids=set()))
+    done = {r.rid: r for r in eng.run_until_drained()}
+    assert done[2].generated == ref[:6]
+
+
+def test_request_stop_set_shim():
+    r = Request(rid=0, prompt=np.zeros(2, np.int32))
+    assert r.stop_set() == frozenset()          # eos_id -1: never
+    r.eos_id = 7
+    assert r.stop_set() == frozenset({7})
+    r.eos_ids = {1, 2}
+    assert r.stop_set() == frozenset({1, 2})    # set overrides the shim
+
+
+# --------------------------------------------------------------------------
+# Preemption / slot eviction (deadline-imminent queued requests)
+# --------------------------------------------------------------------------
+
+
+def test_engine_preempts_youngest_for_imminent_deadline(cfg, params):
+    """With every slot busy and a queued deadline about to pass, the
+    gemv_aware scheduler (preempt_margin set) evicts the YOUNGEST running
+    slot; the evicted request re-prefills prompt+generated on readmission
+    and its final greedy stream is unchanged."""
+    clk = FakeClock()
+    eng = Engine(cfg, params, batch_slots=2, max_len=MAX_LEN, clock=clk,
+                 scheduler=SchedulerConfig(policy="gemv_aware",
+                                           gemv_batch_threshold=4,
+                                           preempt_margin=5.0))
+    # gemv_aware admits shortest-prompt-first, so the SHORTER prompt is
+    # the older admission; the longer one is the youngest (the victim)
+    prompts = _prompts(cfg, [5, 6, 4], seed=12)
+    old = Request(rid=0, prompt=prompts[0], max_new_tokens=10)
+    young = Request(rid=1, prompt=prompts[1], max_new_tokens=10)
+    eng.submit(old)
+    eng.submit(young)
+    eng.step()
+    eng.step()  # both mid-decode; slots full
+    assert young.admit_seq > old.admit_seq
+    urgent = Request(rid=2, prompt=prompts[2], max_new_tokens=3,
+                     deadline=clk() + 3.0)  # imminent: margin 5 > 3
+    eng.submit(urgent)
+    done = {r.rid: r for r in eng.run_until_drained()}
+    assert eng.metrics.counters["evicted"] == 1
+    assert young.evictions == 1 and old.evictions == 0  # youngest evicted
+    assert urgent.done and not urgent.expired
+    for i, p in enumerate(prompts):
+        n = done[i].max_new_tokens
+        assert done[i].generated == _serial_greedy(cfg, params, p, n), i
+
+
+def test_no_preemption_without_margin(cfg, params):
+    """Default behavior unchanged: running requests always finish."""
+    clk = FakeClock()
+    eng = Engine(cfg, params, batch_slots=1, max_len=MAX_LEN, clock=clk,
+                 scheduler=SchedulerConfig(policy="gemv_aware",
+                                           gemv_batch_threshold=4))
+    p = _prompts(cfg, [4, 4], seed=13)
+    eng.submit(Request(rid=0, prompt=p[0], max_new_tokens=6))
+    eng.step()
+    late = Request(rid=1, prompt=p[1], max_new_tokens=2, deadline=5.0)
+    eng.submit(late)
+    clk.advance(10.0)  # deadline passes while rid 0 still holds the slot
+    eng.run_until_drained()
+    assert eng.metrics.counters["evicted"] == 0
+    assert late.expired  # it expired in the queue instead
+
+
+def test_scheduler_never_expires_started_requests():
+    """An evicted request waiting for readmission (it already streamed
+    tokens) must not be expired out of the queue mid-stream."""
+    s = Scheduler(SchedulerConfig())
+    fresh = _req(0, 4)
+    fresh.deadline = 5.0
+    evicted = _req(1, 4)
+    evicted.deadline = 5.0
+    evicted.generated = [42]  # already produced output before eviction
+    s.submit(fresh)
+    s.submit(evicted)
+    assert [r.rid for r in s.expire(now=10.0)] == [0]
+    assert [r.rid for r in s.queue] == [1]  # still admissible
+
+
+def test_sjf_ordering_unchanged_by_preempt_margin():
+    """preempt_margin is a gemv_aware knob: sjf keeps pure shortest-first
+    ordering even when deadlines are in the imminence window."""
+    s = Scheduler(SchedulerConfig(policy="sjf", preempt_margin=100.0))
+    short = _req(0, 2)
+    urgent = _req(1, 9)
+    urgent.deadline = 5.0
+    s.submit(short)
+    s.submit(urgent)
+    assert not s.wants_preemption(now=4.0)          # sjf never preempts
+    assert [r.rid for r in s.select(1, 0, now=4.0)] == [0]
+
+
+def test_engine_preempts_prefilling_slot(cfg, params):
+    """A slot mid-chunked-prefill is the cheapest victim (zero decode work
+    done): preemption must reach it, and the victim re-prefills cleanly."""
+    clk = FakeClock()
+    eng = Engine(cfg, params, batch_slots=1, max_len=MAX_LEN, clock=clk,
+                 prefill_chunk=4,
+                 scheduler=SchedulerConfig(policy="gemv_aware",
+                                           gemv_batch_threshold=4,
+                                           preempt_margin=5.0))
+    prompts = _prompts(cfg, [20, 4], seed=17)
+    long_req = Request(rid=0, prompt=prompts[0], max_new_tokens=3)
+    eng.submit(long_req)
+    eng.step()  # first chunk spliced; the only slot is prefilling
+    assert eng._prefilling
+    urgent = Request(rid=1, prompt=prompts[1], max_new_tokens=2,
+                     deadline=clk() + 3.0)
+    eng.submit(urgent)
+    done = {r.rid: r for r in eng.run_until_drained()}
+    assert eng.metrics.counters["evicted"] == 1
+    assert long_req.evictions == 1
+    assert urgent.done and not urgent.expired
+    for i, p in enumerate(prompts):
+        n = done[i].max_new_tokens
+        assert done[i].generated == _serial_greedy(cfg, params, p, n), i
+
+
+def test_scheduler_imminent_first_ordering():
+    s = Scheduler(SchedulerConfig(policy="gemv_aware",
+                                  gemv_batch_threshold=8,
+                                  preempt_margin=2.0))
+    short = _req(0, 2)
+    urgent = _req(1, 9)
+    urgent.deadline = 5.0
+    s.submit(short)
+    s.submit(urgent)
+    assert not s.wants_preemption(now=0.0)   # 0 + 2 < 5: not yet imminent
+    assert s.wants_preemption(now=4.0)       # 4 + 2 >= 5: in range
+    picked = s.select(1, 0, now=4.0)
+    assert [r.rid for r in picked] == [1]    # imminent beats shorter prompt
+
+
+# --------------------------------------------------------------------------
+# Chunked prefill (one bounded splice per step; decode keeps running)
+# --------------------------------------------------------------------------
+
+
+def test_engine_chunked_prefill_token_identity(cfg, params):
+    """Prompts longer than prefill_chunk splice chunk-by-chunk across steps
+    and still decode token-identically to the unchunked engine."""
+    prompts = _prompts(cfg, [30, 5, 25, 3], seed=14)
+    outs = []
+    for chunk in (None, 8):
+        eng = Engine(cfg, params, batch_slots=4, max_len=MAX_LEN,
+                     prefill_chunk=chunk)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=5))
+        outs.append({r.rid: r.generated for r in eng.run_until_drained()})
+    assert outs[0] == outs[1]
+    for i, p in enumerate(prompts):
+        assert outs[1][i] == _serial_greedy(cfg, params, p, 5), i
+
+
+def test_engine_chunked_prefill_does_not_stall_decode(cfg, params):
+    """While a long prompt prefills chunk-by-chunk, already-active slots
+    keep decoding — the long prefill no longer stalls the batch."""
+    prompts = _prompts(cfg, [4, 32], seed=15)
+    eng = Engine(cfg, params, batch_slots=2, max_len=MAX_LEN,
+                 prefill_chunk=4)
+    r0 = Request(rid=0, prompt=prompts[0], max_new_tokens=12)
+    eng.submit(r0)
+    eng.step()  # rid 0 active
+    eng.submit(Request(rid=1, prompt=prompts[1], max_new_tokens=2))
+    eng.step()  # rid 1 admitted: first chunk spliced, still prefilling
+    assert eng._prefilling, "long prompt should prefill across steps"
+    before = len(r0.generated)
+    finished = []
+    while eng._prefilling:
+        finished.extend(eng.step())
+    assert len(r0.generated) > before, \
+        "decode made no progress while the long prompt was prefilling"
+    assert eng.metrics.counters["prefill_chunks"] >= 32 // 4
+    finished.extend(eng.run_until_drained())
+    done = {r.rid: r for r in finished}
+    assert done[1].generated == _serial_greedy(cfg, params, prompts[1], 2)
+    assert done[0].generated == _serial_greedy(cfg, params, prompts[0], 12)
+
+
+def test_engine_chunked_prefill_near_max_len(cfg, params):
+    """Boundary regression: pow2 pad rounding on the LAST chunk must not
+    write past max_len — dynamic_update_slice would clamp the start and
+    silently overwrite valid KV from earlier chunks.  Token argmax can be
+    insensitive to the corruption on reduced models, so the spliced KV is
+    compared directly against the unchunked engine's."""
+    max_len = 24
+    prompt = _prompts(cfg, [23], seed=18)[0]
+    caches, outs = [], []
+    for chunk in (None, 9):  # chunked: last chunk consumed=18, c=5 —
+        # a naive pow2 pad of 8 would cross max_len - consumed = 6
+        eng = Engine(cfg, params, batch_slots=2, max_len=max_len,
+                     prefill_chunk=chunk)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=1))
+        outs.append({r.rid: r.generated
+                     for r in eng.run_until_drained()})
+        caches.append(np.asarray(eng.kv.cache["k"])[:, 0, :len(prompt)])
+    assert outs[0] == outs[1]
+    np.testing.assert_array_equal(caches[0], caches[1])
+
+
+@pytest.mark.slow
+def test_engine_chunked_prefill_rwkv():
+    """Chunked prefill through the recurrence (exact chunk sizes, no pads)."""
+    cfg = ARCHS["rwkv6-3b"].reduced()
+    params = lm.init_lm(KEY, cfg)
+    prompts = _prompts(cfg, [19, 4], seed=16)
+    eng = Engine(cfg, params, batch_slots=2, max_len=MAX_LEN,
+                 prefill_chunk=6)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=3))
+    done = {r.rid: r for r in eng.run_until_drained()}
+    for i, p in enumerate(prompts):
+        assert done[i].generated == _serial_greedy(cfg, params, p, 3), i
+
+
+# --------------------------------------------------------------------------
 # SSM family: per-request prefill path (no pads through the recurrence)
 # --------------------------------------------------------------------------
 
@@ -538,7 +780,8 @@ def test_serve_bench_document(tmp_path, cfg, params):
     import json
 
     assert json.load(open(out)) == doc
-    assert doc["schema"] == 1
+    assert doc["schema"] == 2
+    assert doc["mesh"] is None  # single-host run: no mesh record
     runs = {r["policy"]: r for r in doc["runs"]}
     assert runs["fcfs"]["completed"] == 6
     for r in doc["runs"]:

@@ -18,8 +18,10 @@ each row compares the jointly planned program against N independent
 dispatches — launch counts and modeled latency — the amortization the
 ``GemvProgram`` API exists for.  ``--backend`` swaps the memory system
 under comparison (tpu / cpu / gpu cost models); ``--json OUT`` emits a
-``{"schema": .., "rows": .., "program_rows": ..}`` document for the bench
-trajectory.
+``{"schema": .., "rows": .., "program_rows": .., "moe_rows": ..}``
+document for the bench trajectory.  The ``moe`` section compares the
+capacity-padded einsum/grouped expert paths against the ragged program
+(model-only — no expert weights are allocated) for the MoE archs.
 
     PYTHONPATH=src python benchmarks/kernel_bench.py            # all parts
     PYTHONPATH=src python benchmarks/kernel_bench.py --dispatch # just the
@@ -44,7 +46,9 @@ from repro.kernels.dispatch import DispatchPolicy
 # --json document version: bump when the record layout changes.
 # 1 (implicit): bare list of dispatch rows.
 # 2: {"schema", "rows", "program_rows"} with the program comparison.
-SCHEMA_VERSION = 2
+# 3: + "moe_rows" — capacity-padded einsum/grouped vs ragged expert
+#    dispatch per MoE arch (model-only; DESIGN.md §10).
+SCHEMA_VERSION = 3
 
 SHAPES = [
     # (name, M, K, B)  — decode-path GEMVs from the assigned archs
@@ -221,6 +225,81 @@ def program_rows(backend_name: str = "tpu") -> list[dict]:
     return rows
 
 
+MOE_ARCHS = ("deepseek-moe-16b", "grok-1-314b")
+MOE_DECODE_BATCH = 8  # decode tokens per step (one per active slot)
+
+
+def moe_rows(backend_name: str = "tpu") -> list[dict]:
+    """Capacity-padded vs ragged expert dispatch, model-only.
+
+    Weights are never allocated (grok's expert stack alone is ~6.4 GB in
+    f32): every figure comes from ``estimate_program_cost_us``.  Three
+    execution shapes per MoE arch at a decode step of ``MOE_DECODE_BATCH``
+    tokens:
+
+    * ``einsum`` — the legacy capacity path decomposed per expert: E
+      independent dispatches over [C, K] padded buffers;
+    * ``grouped`` — the same padded buffers as ONE batched contraction
+      (launch amortization, padding kept);
+    * ``ragged`` — the native ragged program: activation traffic is
+      exactly the routed tokens, zero capacity-padding FLOPs.
+
+    ``mode`` is the backend's *planned* mode for the ragged key — the CI
+    leg asserts it stays on the ragged path at decode shapes.
+    """
+    from repro.configs.registry import ARCHS
+    from repro.kernels.backends.base import expert_batch_bound
+    from repro.models.layers import _capacity
+
+    backend = get_backend(backend_name)
+    interp = backend_name != "cpu"
+    policy = DispatchPolicy(backend=backend_name, interpret=interp)
+    B = MOE_DECODE_BATCH
+    rows = []
+    for name in MOE_ARCHS:
+        cfg = ARCHS[name]
+        e = cfg.moe
+        C = _capacity(1, cfg)  # per-token decode chunks, as the layer runs
+        routed = B * e.top_k
+        grouped_key = ProgramKey(
+            kind="grouped", Ms=(e.d_expert,), K=cfg.d_model, batch=C,
+            group=e.n_experts, bits=16, block=32, dtype="float32",
+            backend=backend_name)
+        ragged_key = ProgramKey(
+            kind="ragged", Ms=(e.d_expert,), K=cfg.d_model,
+            batch=expert_batch_bound(B, e.top_k, e.n_experts),
+            group=e.n_experts, bits=16, block=32, dtype="float32",
+            backend=backend_name, tokens=routed)
+        pplan = backend.plan_program(ragged_key, policy=policy)
+        rows.append({
+            "arch": name, "experts": e.n_experts, "top_k": e.top_k,
+            "M": e.d_expert, "K": cfg.d_model, "B": B,
+            "capacity": C, "routed_tokens": routed,
+            "padded_slots": max(B * e.n_experts * C - routed, 0),
+            "backend": backend_name, "mode": pplan.mode,
+            "model_us/einsum": backend.estimate_program_cost_us(
+                grouped_key, mode="per_request"),
+            "model_us/grouped": backend.estimate_program_cost_us(
+                grouped_key, mode="grouped"),
+            "model_us/ragged": backend.estimate_program_cost_us(
+                ragged_key, mode="ragged"),
+        })
+    return rows
+
+
+def print_moe_table(rows: list[dict]) -> None:
+    for r in rows:
+        print(
+            f"moe/{r['arch']} [{r['M']}x{r['K']} E={r['experts']} "
+            f"k={r['top_k']} B={r['B']} cap={r['capacity']}] "
+            f"backend={r['backend']} mode={r['mode']} "
+            f"einsum={r['model_us/einsum']:.1f}us "
+            f"grouped={r['model_us/grouped']:.1f}us "
+            f"ragged={r['model_us/ragged']:.1f}us "
+            f"(padded_slots={r['padded_slots']})"
+        )
+
+
 def print_program_table(rows: list[dict]) -> None:
     for r in rows:
         ms = "+".join(str(m) for m in r["Ms"])
@@ -275,12 +354,15 @@ def main(argv=None) -> int:
     print_dispatch_table(rows)
     prog_rows = program_rows(backend_name=args.backend)
     print_program_table(prog_rows)
+    m_rows = moe_rows(backend_name=args.backend)
+    print_moe_table(m_rows)
     if args.json:
         doc = {"schema": SCHEMA_VERSION, "rows": rows,
-               "program_rows": prog_rows}
+               "program_rows": prog_rows, "moe_rows": m_rows}
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
-        print(f"wrote {len(rows)} + {len(prog_rows)} records -> {args.json}")
+        print(f"wrote {len(rows)} + {len(prog_rows)} + {len(m_rows)} "
+              f"records -> {args.json}")
     return 0
 
 

@@ -22,6 +22,7 @@ autotuning, and execution to it.  Registered implementations live in
 from __future__ import annotations
 
 import json
+import math
 import os
 import threading
 import time
@@ -74,6 +75,28 @@ class CostModel:
 # ---------------------------------------------------------------------------
 
 
+def _next_pow2(n: int) -> int:
+    """Smallest power of two >= max(n, 1) — histogram bucket edges."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def expert_batch_bound(n_tokens: int, top_k: int, n_experts: int, *,
+                       skew: float = 2.0) -> int:
+    """Predicted per-expert token bound for a ragged MoE dispatch.
+
+    ``n_tokens * top_k / n_experts`` is the even-split per-expert load
+    (PIMnast's balanced-bank ideal); ``skew`` scales it for router
+    imbalance.  Clamped to ``[1, n_tokens]`` — no expert can receive more
+    rows than there are tokens.  This is a *statistic*, not a correctness
+    bound: the ragged executors handle any count distribution, the value
+    only prices the program (``ProgramKey.batch``) and gates admission
+    (the expert-aware scheduler shares this formula, so what the
+    scheduler admits is exactly what the dispatcher prices).
+    """
+    even = n_tokens * top_k / max(n_experts, 1)
+    return max(1, min(int(n_tokens), math.ceil(even * skew)))
+
+
 @dataclass(frozen=True)
 class DispatchPolicy:
     """How :func:`repro.kernels.dispatch.dispatch_gemv` picks and runs a kernel.
@@ -100,6 +123,13 @@ class DispatchPolicy:
     # into independent per-request dispatches (the pre-program behavior),
     # True lets the backend plan the group jointly (fused-M / grouped).
     fuse_programs: bool = True
+    # Expert execution shape for MoE decode (models/layers.py::apply_moe):
+    # "ragged" routes tokens through the capacity-free ragged program
+    # (sorted [T, K] buffer + per-expert counts — zero padding FLOPs),
+    # "grouped" keeps the capacity-padded [E, C, K] grouped program, and
+    # "einsum" bypasses program dispatch entirely (the train/prefill
+    # contraction).  Decode-only: prefill/train always use einsum.
+    expert_shape: str = "ragged"
     # Size of the mesh 'model' axis the executed ops will be partitioned
     # over (GSPMD).  > 1 engages the ShardedPlan path (DESIGN.md §9): the
     # dispatcher selects kernels from the PER-SHARD GEMV shape — M / N for
@@ -128,7 +158,7 @@ class ShardedPlan:
     when neither divides.
     """
 
-    axis: str        # "M" (row placement) | "K" (split-K) | "replicated"
+    axis: str        # "M" | "K" | "E" (expert groups) | "replicated"
     n_shards: int
 
     @classmethod
@@ -141,8 +171,21 @@ class ShardedPlan:
             return cls(axis="K", n_shards=n_shards)
         return cls(axis="replicated", n_shards=n_shards)
 
+    @classmethod
+    def place_experts(cls, E: int, M: int, K: int,
+                      n_shards: int) -> "ShardedPlan":
+        """Algorithm-1 even test on the expert dim of grouped/ragged
+        programs: ``E % N == 0`` shards whole experts (each chip owns
+        complete expert matrices — no cross-chip reduction, the row-
+        placement analogue one level up); otherwise fall through to the
+        per-expert (M, K) placement of :meth:`place`."""
+        if n_shards > 1 and E % n_shards == 0:
+            return cls(axis="E", n_shards=n_shards)
+        return cls.place(M, K, n_shards)
+
     def shard_shape(self, M: int, K: int) -> tuple[int, int]:
-        """The (M, K) each chip sees under this placement."""
+        """The (M, K) each chip sees under this placement ("E" shards the
+        expert count, not the per-expert matrix)."""
         if self.axis == "M":
             return M // self.n_shards, K
         if self.axis == "K":
@@ -205,17 +248,29 @@ class GemvProgram:
     * ``grouped`` — expert group: ``x [E, C, K]`` per-expert token buffers,
       ``weights.w_t [E, K, M]`` stacked experts
       (:meth:`PackedWeights.stack`); output ``[E, C, M]``.
+    * ``ragged`` — capacity-free expert group: ``x [T, K]`` is ONE flat
+      token buffer sorted by expert, ``counts [E]`` the per-expert row
+      counts (runtime data — the split is not a shape); output ``[T, M]``.
+      No padding rows exist: ``T`` is exactly the routed-token count, the
+      per-expert balance analogue of PIMnast's per-bank balance.
 
     ``requests`` always carries the per-request decomposition so any backend
     can fall back to independent dispatches (``ProgramPlan.mode ==
-    "per_request"``).
+    "per_request"``) — except ``ragged``, whose decomposition is runtime
+    data (``requests`` is empty; every backend runs it via the universal
+    XLA ragged executor or a native kernel).
     """
 
-    kind: str                            # "fused" | "grouped"
+    kind: str                            # "fused" | "grouped" | "ragged"
     x: jnp.ndarray
     weights: PackedWeights
     m_splits: tuple[int, ...]
     requests: tuple[GemvRequest, ...]
+    # ragged only: per-expert token counts [E] (jnp data, traced under
+    # jit) and the host-static predicted per-expert bound used as the
+    # costing batch (see expert_batch_bound).
+    counts: jnp.ndarray | None = None
+    bound: int = 0
 
     @classmethod
     def fused(cls, x: jnp.ndarray,
@@ -253,6 +308,29 @@ class GemvProgram:
         return cls(kind="grouped", x=xs, weights=stacked, m_splits=(M,),
                    requests=reqs)
 
+    @classmethod
+    def ragged(cls, x: jnp.ndarray, counts: jnp.ndarray,
+               stacked: PackedWeights, *, bound: int = 0) -> "GemvProgram":
+        if stacked.w_t.ndim != 3:
+            raise ValueError(
+                f"ragged programs need stacked [E, K, M] weights, got "
+                f"{stacked.w_t.shape}"
+            )
+        if x.ndim != 2:
+            raise ValueError(
+                f"ragged inputs must be a flat sorted [T, K] buffer, got "
+                f"{x.shape}"
+            )
+        if counts.shape != (stacked.group,):
+            raise ValueError(
+                f"ragged counts must be [E]={stacked.group}, got "
+                f"{counts.shape}"
+            )
+        _, M = stacked.shape
+        bound = bound or int(x.shape[0])
+        return cls(kind="ragged", x=x, weights=stacked, m_splits=(M,),
+                   requests=(), counts=counts, bound=bound)
+
     @property
     def n_requests(self) -> int:
         return len(self.requests)
@@ -266,6 +344,21 @@ class GemvProgram:
     def key(self, backend_name: str) -> "ProgramKey":
         pw = self.weights
         K, _ = pw.shape
+        if self.kind == "ragged":
+            # batch is the predicted per-expert bound (a costing statistic
+            # — counts are runtime data); the histogram bucket rounds the
+            # bound and the even-split load to powers of two so the plan
+            # cache and autotune table stay small across traces.
+            T = int(self.x.shape[0])
+            E = pw.group
+            hist = (f"le{_next_pow2(self.bound)}"
+                    f"m{_next_pow2(-(-T // max(E, 1)))}")
+            return ProgramKey(
+                kind="ragged", Ms=self.m_splits, K=K, batch=self.bound,
+                group=E, bits=pw.bits, block=pw.block,
+                dtype=str(self.x.dtype), backend=backend_name,
+                tokens=T, hist=hist,
+            )
         if self.kind == "grouped":
             batch = int(self.x.shape[1])          # tokens per expert
         else:
@@ -283,9 +376,14 @@ class ProgramKey:
     """Plan-cache / autotune-table key for one program shape.
 
     ``Ms`` is the per-request output-width tuple for fused programs and the
-    single per-expert ``(M,)`` for grouped ones; ``group`` is the request
-    count (fused) or expert count (grouped); ``batch`` is B (fused) or the
-    per-expert token count C (grouped).
+    single per-expert ``(M,)`` for grouped/ragged ones; ``group`` is the
+    request count (fused) or expert count (grouped/ragged); ``batch`` is B
+    (fused), the per-expert token count C (grouped), or the predicted
+    per-expert bound (ragged — a costing statistic, see
+    :func:`expert_batch_bound`).  Ragged keys additionally carry the flat
+    buffer length ``tokens`` and the pow2-bucketed count-histogram tag
+    ``hist`` (``le<bound>m<mean>``) so cost models and autotune entries
+    distinguish balanced from skewed distributions at the same T.
     """
 
     kind: str
@@ -297,6 +395,8 @@ class ProgramKey:
     block: int
     dtype: str
     backend: str
+    tokens: int = 0      # ragged: flat routed-token buffer length T
+    hist: str = ""       # ragged: pow2 count-histogram bucket
 
     @property
     def n_requests(self) -> int:
@@ -308,10 +408,13 @@ class ProgramKey:
 
     def table_key(self) -> str:
         ms = "+".join(str(m) for m in self.Ms)
-        return (
+        base = (
             f"{self.kind}[{ms}]x{self.K}xb{self.batch}_e{self.group}"
             f"_w{self.bits}g{self.block}_{self.dtype}"
         )
+        if self.kind == "ragged":
+            return f"{base}_t{self.tokens}.{self.hist}"
+        return base
 
 
 @dataclass(frozen=True)
@@ -320,10 +423,13 @@ class ProgramPlan:
 
     ``mode``: ``fused`` (one joint kernel on the concatenated [K, sum M]
     weight — ``kernel``/``plan`` name the inner decision), ``grouped`` (one
-    batched contraction over the expert stack), or ``per_request`` (N
+    batched contraction over the expert stack), ``ragged`` (the universal
+    XLA ragged executor over the sorted flat buffer), a backend-native
+    ragged/grouped mode (``grouped_triton`` / ``ragged_triton`` — ``kernel``
+    and ``plan`` carry the Pallas tile decision), or ``per_request`` (N
     independent dispatches — the default decomposition every backend
-    supports).  ``n_launches`` is the kernel-launch count the mode costs,
-    the quantity the program API exists to amortize.
+    supports for fused/grouped).  ``n_launches`` is the kernel-launch count
+    the mode costs, the quantity the program API exists to amortize.
     """
 
     mode: str
@@ -335,15 +441,15 @@ class ProgramPlan:
 def program_plan_to_entry(pplan: ProgramPlan, elapsed_us: float) -> dict:
     entry = {"mode": pplan.mode, "n_launches": pplan.n_launches,
              "us": elapsed_us}
-    if pplan.mode == "fused":
+    if pplan.kernel:
         entry.update(plan_to_entry(pplan.kernel, pplan.plan, elapsed_us))
     return entry
 
 
 def entry_to_program_plan(entry: dict) -> ProgramPlan:
-    if entry["mode"] == "fused":
+    if entry.get("kernel"):
         kernel, plan = entry_to_plan(entry)
-        return ProgramPlan(mode="fused", n_launches=entry["n_launches"],
+        return ProgramPlan(mode=entry["mode"], n_launches=entry["n_launches"],
                            kernel=kernel, plan=plan)
     return ProgramPlan(mode=entry["mode"], n_launches=entry["n_launches"])
 
@@ -359,6 +465,21 @@ def _synthesize_program(key: ProgramKey) -> GemvProgram:
             return quantize_weight(w, bits=key.bits, block=key.block)
         return pack_weight(jnp.asarray(w).astype(key.dtype))
 
+    if key.kind == "ragged":
+        T = key.tokens or key.batch * key.group
+        x = jnp.asarray(
+            rng.standard_normal((T, key.K)).astype(np.float32)
+        ).astype(key.dtype)
+        stacked = PackedWeights.stack([one(key.Ms[0])
+                                       for _ in range(key.group)])
+        # balanced counts + remainder on expert 0: a representative (not
+        # adversarial) distribution — the counts are data, so the timed
+        # executable is the one the caller's distribution runs too.
+        base_c, rem = divmod(T, key.group)
+        counts = jnp.asarray(
+            [base_c + (rem if e == 0 else 0) for e in range(key.group)],
+            jnp.int32)
+        return GemvProgram.ragged(x, counts, stacked, bound=key.batch)
     if key.kind == "grouped":
         xs = jnp.asarray(rng.standard_normal(
             (key.group, key.batch, key.K)).astype(np.float32)
@@ -769,6 +890,20 @@ class GemvBackend:
         """
         cm = self.cost_model
         w_bytes = key.total_M * key.K * key.bits / 8
+        if key.kind == "ragged":
+            # Capacity-free: activation traffic is exactly the routed
+            # tokens (the grouped path pays batch * group padded slots).
+            # The slowest expert serializes its grid cells, so the
+            # per-program term scales with the predicted load imbalance:
+            # the per-expert bound (key.batch) over the even split T/E.
+            T = max(key.tokens, 1)
+            io = w_bytes + T * key.K * x_bytes + T * key.Ms[0] * x_bytes
+            t = io / (cm.bandwidth_bps * cm.gemv_efficiency) * 1e6
+            launches = 1 if mode != "per_request" else key.group
+            imbalance = min(max(key.batch * key.group / T, 1.0),
+                            float(key.group))
+            return (t + cm.launch_us * launches
+                    + cm.program_us * key.group * imbalance)
         out_bytes = key.batch * key.total_M * x_bytes
         if key.kind == "grouped":
             # every expert has its own token buffer: IV traffic is
@@ -794,6 +929,14 @@ class GemvBackend:
         would to a single GEMV of that shape); ``grouped`` is one batched
         contraction over the expert stack.
         """
+        if key.kind == "ragged":
+            # Ragged programs have no per-request decomposition (the
+            # expert split is runtime data, not a shape), so this plans
+            # one launch regardless of fuse_programs; the universal XLA
+            # ragged executor makes the mode available on every backend.
+            # Policy gating happens upstream: the MoE layer only builds
+            # ragged programs when program fusion is on.
+            return ProgramPlan(mode="ragged", n_launches=1)
         if not policy.fuse_programs:
             return ProgramPlan(mode="per_request", n_launches=key.n_requests)
         if key.kind == "grouped":
@@ -817,15 +960,19 @@ class GemvBackend:
         """Run one program under a plan.
 
         Returns ``[B, sum(Ms)]`` for fused-kind programs (split per request
-        with :meth:`GemvProgram.split`) and ``[E, C, M]`` for grouped ones
-        — identical output shape for every mode, so a mode change (table
-        entry, policy flip) can never change a caller's contract.
+        with :meth:`GemvProgram.split`), ``[E, C, M]`` for grouped ones,
+        and ``[T, M]`` for ragged ones — identical output shape for every
+        mode, so a mode change (table entry, policy flip) can never change
+        a caller's contract.
         """
         if pplan.mode == "fused":
             return self.execute(pplan.kernel, program.x, program.weights,
                                 pplan.plan, interpret)
         if pplan.mode == "grouped":
             return self._execute_grouped(program.x, program.weights)
+        if pplan.mode == "ragged":
+            return self._execute_ragged(program)
+        assert program.kind != "ragged", pplan  # no per-request form exists
         # Per-request decomposition, selected and executed entirely on THIS
         # backend (no registry re-resolution) — the autotune loop times it
         # as a candidate against the joint mode.  The public dispatch path
@@ -845,14 +992,11 @@ class GemvBackend:
             return jnp.stack(outs)
         return jnp.concatenate(outs, axis=-1)
 
-    def _execute_grouped(self, xs: jnp.ndarray,
-                         pw: PackedWeights) -> jnp.ndarray:
-        """Batched expert contraction: out[E, C, M] = xs[E, C, K] @ w[E, K, M].
-
-        XLA reference with f32 accumulation; quantized stacks dequantize
-        per expert (block scales broadcast over the stacked dim).  Backends
-        with a native grouped kernel override this.
-        """
+    @staticmethod
+    def _dequant_stack(pw: PackedWeights) -> jnp.ndarray:
+        """Stacked [E, K, M] weights as floats: identity for 16-bit packs,
+        per-expert block-scale dequant for int8 / packed int4 (the scales
+        broadcast over the stacked dim)."""
         from repro.kernels import ref
 
         w = pw.w_t
@@ -863,10 +1007,50 @@ class GemvBackend:
             w = w.astype(jnp.float32).reshape(E, K // pw.block, pw.block, M)
             w = (w * pw.scales.astype(jnp.float32)[:, :, None, :]
                  ).reshape(E, K, M)
+        return w
+
+    def _execute_grouped(self, xs: jnp.ndarray,
+                         pw: PackedWeights) -> jnp.ndarray:
+        """Batched expert contraction: out[E, C, M] = xs[E, C, K] @ w[E, K, M].
+
+        XLA reference with f32 accumulation; quantized stacks dequantize
+        per expert.  Backends with a native grouped kernel override this.
+        """
+        w = self._dequant_stack(pw)
         return jnp.einsum(
             "eck,ekm->ecm", xs.astype(jnp.float32), w.astype(jnp.float32),
             preferred_element_type=jnp.float32,
         ).astype(xs.dtype)
+
+    def _execute_ragged(self, program: GemvProgram) -> jnp.ndarray:
+        """Universal ragged executor: out[T, M], row t against the expert
+        whose count range contains t.
+
+        ``jax.lax.ragged_dot`` where this jax has it (0.4.31+; it
+        partitions cleanly under GSPMD with expert-sharded stacks);
+        otherwise a searchsorted gather + batched contraction — same math,
+        still zero capacity padding.  f32 accumulation either way; rows at
+        or beyond ``sum(counts)`` come back zero (matching the Pallas
+        ragged kernel's tail contract).
+        """
+        x = program.x
+        counts = program.counts.astype(jnp.int32)
+        w = self._dequant_stack(program.weights)
+        xf = x.astype(jnp.float32)
+        wf = w.astype(jnp.float32)
+        ends = jnp.cumsum(counts)
+        T = x.shape[0]
+        if hasattr(jax.lax, "ragged_dot"):
+            out = jax.lax.ragged_dot(
+                xf, wf, group_sizes=counts,
+                preferred_element_type=jnp.float32)
+        else:  # pragma: no cover - exercised on the old-jax CI leg
+            eids = jnp.searchsorted(ends, jnp.arange(T), side="right")
+            eids = jnp.minimum(eids, w.shape[0] - 1)
+            out = jnp.einsum("tk,tkm->tm", xf, wf[eids],
+                             preferred_element_type=jnp.float32)
+        valid = (jnp.arange(T) < ends[-1])[:, None]
+        return jnp.where(valid, out, 0.0).astype(x.dtype)
 
     def autotune_program(
         self, key: ProgramKey, *, policy: DispatchPolicy,
@@ -887,9 +1071,17 @@ class GemvBackend:
         )
         program = _synthesize_program(key)
         candidates = [self.plan_program(key, policy=policy)]
-        per_req = ProgramPlan(mode="per_request", n_launches=key.n_requests)
-        if candidates[0].mode != "per_request":
-            candidates.append(per_req)
+        if key.kind == "ragged":
+            # No per-request decomposition exists for ragged programs; the
+            # alternative to a native kernel is the universal XLA executor.
+            base_ragged = ProgramPlan(mode="ragged", n_launches=1)
+            if candidates[0] != base_ragged:
+                candidates.append(base_ragged)
+        else:
+            per_req = ProgramPlan(mode="per_request",
+                                  n_launches=key.n_requests)
+            if candidates[0].mode != "per_request":
+                candidates.append(per_req)
         best: tuple[float, ProgramPlan] | None = None
         for cand in candidates:
             try:

@@ -103,8 +103,10 @@ class CpuBackend(GemvBackend):
     kernels = ("ref", "splitk", "quant", "quant4")
     # GEMV programs: fused multi-head runs as one XLA dot on the
     # concatenated weight (one dispatch, one IV stream); grouped/expert
-    # programs run through ``cpu_grouped_gemv`` (batched einsum).
-    program_modes = ("fused", "grouped")
+    # programs run through ``cpu_grouped_gemv`` (batched einsum); ragged
+    # programs use the universal XLA ragged executor from the base class
+    # (jax.lax.ragged_dot, gather-einsum on older jax).
+    program_modes = ("fused", "grouped", "ragged")
     # Measured on the reference container (single-socket DDR): ~1/16 of the
     # TPU analogue's HBM bandwidth, near-zero dispatch cost, and the core
     # count as the fill target for the chunked reduce.

@@ -30,7 +30,16 @@ from repro.kernels.backends.base import (
     GemvBackend,
     GemvKey,
     GemvPlan,
+    GemvProgram,
+    ProgramKey,
+    ProgramPlan,
     register_backend,
+)
+from repro.kernels.grouped_gemv import (
+    counts_to_offsets,
+    grouped_gemv,
+    plan_grouped_gemv,
+    ragged_gemv,
 )
 from repro.kernels.ops import PackedWeights
 from repro.kernels.triton_gemv import triton_gemv
@@ -79,9 +88,14 @@ class GpuBackend(GemvBackend):
     # GEMV programs: fused multi-head selects an inner kernel for the
     # concatenated weight through ``select_kernel`` — i.e. behind the same
     # Triton capability gate as any single GEMV (a fused lm-head-sized M
-    # can fill the SMs where the members alone could not); grouped/expert
-    # programs run the batched XLA contraction (cuBLAS-class batched GEMM).
-    program_modes = ("fused", "grouped")
+    # can fill the SMs where the members alone could not).  Grouped and
+    # ragged expert programs get the NATIVE Pallas kernels
+    # (``grouped_gemv`` / ``ragged_gemv`` — modes ``grouped_triton`` /
+    # ``ragged_triton``) behind the same capability gate; when the gate
+    # rejects, execution degrades to the portable executors and the
+    # degradation is counted + warned once (dispatch.record_program_
+    # fallback) instead of silently changing the execution shape.
+    program_modes = ("fused", "grouped", "ragged")
     cost_model = CostModel(
         bandwidth_gbps=1555.0,     # A100-40GB HBM2e
         gemv_efficiency=0.7,       # library GEMV (cuBLAS-class)
@@ -172,6 +186,59 @@ class GpuBackend(GemvBackend):
         if not self._can_lower_triton(policy):
             return [("ref", None)]
         return self.candidate_plans(key.M, key.K, key.batch, key.bits)
+
+    # -- GEMV programs: native grouped/ragged Pallas kernels ----------------
+
+    def plan_program(
+        self, key: ProgramKey, *, policy: DispatchPolicy = DEFAULT_POLICY,
+    ) -> ProgramPlan:
+        """Grouped/ragged programs prefer the native Pallas kernels.
+
+        Same gates as a single Triton GEMV: 16-bit weights, ``use_pallas``,
+        the batch threshold on the per-expert token count, a tileable
+        per-expert (M, K), and the lowering capability check.  A shape
+        that passes everything but the capability check is a *degradation*
+        — recorded and warned via ``record_program_fallback`` — where a
+        shape that was never nativizable (quantized stack, untileable
+        extents) simply takes the portable executor.
+        """
+        if key.kind in ("grouped", "ragged") and policy.fuse_programs:
+            native_ok = (
+                key.bits == 16
+                and policy.use_pallas
+                and key.batch <= policy.batch_threshold
+            )
+            plan = None
+            if native_ok:
+                cand = plan_grouped_gemv(key.Ms[0], key.K)
+                # Triton tiles want power-of-two extents; plan_grouped_gemv
+                # degrades to full-dim blocks on shapes without one, which
+                # the interpreter runs but real lowering may not.
+                if (cand.m_blk & (cand.m_blk - 1) == 0
+                        and cand.k_blk & (cand.k_blk - 1) == 0):
+                    plan = cand
+            if plan is not None:
+                if self._can_lower_triton(policy):
+                    return ProgramPlan(
+                        mode=f"{key.kind}_triton", n_launches=1,
+                        kernel="triton", plan=plan)
+                from repro.kernels.dispatch import record_program_fallback
+
+                record_program_fallback(self.name, key.kind)
+        return super().plan_program(key, policy=policy)
+
+    def execute_program(
+        self, program: GemvProgram, pplan: ProgramPlan,
+        policy: DispatchPolicy, interpret: bool,
+    ) -> jnp.ndarray:
+        if pplan.mode == "grouped_triton":
+            return grouped_gemv(program.x, program.weights.w_t,
+                                plan=pplan.plan, interpret=interpret)
+        if pplan.mode == "ragged_triton":
+            return ragged_gemv(program.x, counts_to_offsets(program.counts),
+                               program.weights.w_t, plan=pplan.plan,
+                               interpret=interpret)
+        return super().execute_program(program, pplan, policy, interpret)
 
     # -- execution ----------------------------------------------------------
 

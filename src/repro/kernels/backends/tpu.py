@@ -56,8 +56,10 @@ class TpuBackend(GemvBackend):
     # is broadcast once per K-block for the whole head group, and the grid
     # gains sum(Ms)/m_blk M-blocks (better occupancy than any member alone,
     # the paper's bank-fill argument applied to fused heads).  Grouped
-    # expert programs run as one batched XLA contraction over the stack.
-    program_modes = ("fused", "grouped")
+    # expert programs run as one batched XLA contraction over the stack;
+    # ragged programs use the base class's universal XLA ragged executor
+    # (a Mosaic-native ragged kernel is future work).
+    program_modes = ("fused", "grouped", "ragged")
     # Constants formerly module globals HBM_BW / XLA_GEMV_EFF /
     # PALLAS_LAUNCH_US / PROGRAM_US / MIN_PARALLEL_BLOCKS in dispatch.py.
     cost_model = CostModel(

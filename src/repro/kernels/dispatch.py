@@ -97,7 +97,8 @@ __all__ = [
     "GemvRequest", "GemvProgram", "ProgramKey", "ProgramPlan", "ShardedPlan",
     "dispatch_gemv", "dispatch_dense", "as_packed", "from_transposed",
     "dispatch_program", "dispatch_fused", "dispatch_grouped",
-    "dispatch_prepacked",
+    "dispatch_ragged", "dispatch_prepacked",
+    "record_program_fallback", "record_expert_load",
     "plan_cache_stats", "clear_plan_cache", "dispatch_stats",
     "load_autotune_table", "save_autotune_table", "clear_autotune_table",
     "available_backends", "get_backend", "resolve_backend", "time_gemv_us",
@@ -135,7 +136,24 @@ _DISPATCH_COUNTERS: dict = {
     # stats prove selection reasoned about M/N (or K/N), not full shapes.
     "sharded_axes": {},     # "M" | "K" | "E" | "replicated" -> decisions
     "shard_picks": {},      # "backend:kernel@MsxKs/n" -> decisions
+    # Capability-gate rejections on native program paths: a backend that
+    # cannot lower its grouped/ragged kernel degrades to the universal
+    # executor, but no longer SILENTLY — each degradation is counted here
+    # (and warned once per backend:kind, see record_program_fallback).
+    "program_fallbacks": {},  # "backend:kind" -> degradations
+    # Per-expert load telemetry from the MoE layer (record_expert_load),
+    # counted at trace time like every decision counter.  All monotonic
+    # ints so serving metrics can delta them: max_tokens accumulates the
+    # PLANNED per-expert bound per decision (divide by decisions for the
+    # mean planned bound), padded_slots the capacity-padding slots the
+    # legacy grouped path allocated beyond the routed tokens (the ragged
+    # path records 0 — the zero-padding-FLOPs claim, counter-verified).
+    "expert_load": {"decisions": 0, "routed_tokens": 0, "experts": 0,
+                    "max_tokens": 0, "padded_slots": 0},
 }
+# Backend:kind pairs whose capability-gate degradation already warned
+# (warn once per process, not once per shape — the counter keeps counting).
+_FALLBACK_WARNED: set[str] = set()
 _AUTOTUNE_TABLE = AutotuneTable()
 
 
@@ -163,7 +181,53 @@ def dispatch_stats() -> dict:
             "matmul_fallback": _DISPATCH_COUNTERS["matmul_fallback"],
             "sharded_axes": dict(_DISPATCH_COUNTERS["sharded_axes"]),
             "shard_picks": dict(_DISPATCH_COUNTERS["shard_picks"]),
+            "program_fallbacks": dict(
+                _DISPATCH_COUNTERS["program_fallbacks"]),
+            "expert_load": dict(_DISPATCH_COUNTERS["expert_load"]),
         }
+
+
+def record_program_fallback(backend_name: str, kind: str) -> None:
+    """Count a capability-gate degradation on a native program path.
+
+    Called by a backend whose native grouped/ragged kernel cannot lower on
+    this platform/policy: execution still degrades to the universal
+    executor (correctness never depended on the native path), but the
+    degradation is recorded in ``dispatch_stats()["program_fallbacks"]``
+    and warned ONCE per (backend, kind) — no more silent decomposition.
+    """
+    tag = f"{backend_name}:{kind}"
+    with _LOCK:
+        pf = _DISPATCH_COUNTERS["program_fallbacks"]
+        pf[tag] = pf.get(tag, 0) + 1
+        first = tag not in _FALLBACK_WARNED
+        if first:
+            _FALLBACK_WARNED.add(tag)
+    if first:
+        warnings.warn(
+            f"backend {backend_name!r} cannot lower its native {kind} "
+            f"program kernel here; degrading to the portable executor "
+            f"(counted in dispatch_stats()['program_fallbacks'])",
+            RuntimeWarning, stacklevel=3,
+        )
+
+
+def record_expert_load(*, routed_tokens: int, experts: int,
+                       max_tokens: int, padded_slots: int) -> None:
+    """Accumulate one MoE dispatch decision's per-expert load statistics.
+
+    Called by ``models/layers.py::apply_moe`` at trace time with static
+    values (``max_tokens`` is the *planned* per-expert bound — counts are
+    traced data); all monotonic ints, so serving metrics can report
+    per-step deltas (see ``expert_load`` in ``_DISPATCH_COUNTERS``).
+    """
+    with _LOCK:
+        el = _DISPATCH_COUNTERS["expert_load"]
+        el["decisions"] += 1
+        el["routed_tokens"] += int(routed_tokens)
+        el["experts"] += int(experts)
+        el["max_tokens"] += int(max_tokens)
+        el["padded_slots"] += int(padded_slots)
 
 
 def _count_decision(backend_name: str, key_batch: int,
@@ -207,6 +271,11 @@ def clear_plan_cache() -> None:
         _DISPATCH_COUNTERS["matmul_fallback"] = 0
         _DISPATCH_COUNTERS["sharded_axes"] = {}
         _DISPATCH_COUNTERS["shard_picks"] = {}
+        _DISPATCH_COUNTERS["program_fallbacks"] = {}
+        _DISPATCH_COUNTERS["expert_load"] = {
+            "decisions": 0, "routed_tokens": 0, "experts": 0,
+            "max_tokens": 0, "padded_slots": 0}
+        _FALLBACK_WARNED.clear()
 
 
 def clear_autotune_table() -> None:
@@ -447,8 +516,16 @@ def _shard_program_key(key: ProgramKey,
     n = policy.model_shards
     if n <= 1:
         return key, "replicated"
-    if key.kind == "grouped" and key.group % n == 0:
-        return dataclasses.replace(key, group=key.group // n), "E"
+    if key.kind in ("grouped", "ragged"):
+        splan = ShardedPlan.place_experts(key.group, key.Ms[0], key.K, n)
+        if splan.axis == "E":
+            if key.kind == "ragged":
+                # each chip owns E/n whole experts and, on average, the
+                # even share of the flat routed-token buffer
+                return dataclasses.replace(
+                    key, group=key.group // n,
+                    tokens=max(key.tokens // n, 1)), "E"
+            return dataclasses.replace(key, group=key.group // n), "E"
     if all(m % n == 0 for m in key.Ms):
         return dataclasses.replace(
             key, Ms=tuple(m // n for m in key.Ms)), "M"
@@ -520,6 +597,12 @@ def _resolve_program(backend, key: ProgramKey,
                 pplan = ProgramPlan(mode="fused",
                                     n_launches=pplan.n_launches,
                                     kernel=kernel, plan=plan)
+            elif (pplan.kernel and pplan.plan is not None
+                  and (sel_key.Ms != key.Ms or sel_key.K != key.K)):
+                # a native grouped/ragged tile plan built at the shrunk
+                # per-shard (M, K) would fail the full-shape kernel grid
+                # asserts; re-plan the same mode at the full shape
+                pplan = backend.plan_program(key, policy=policy)
         with _LOCK:
             _PROGRAM_CACHE[(key, policy)] = pplan
         _count_decision(backend.name, key.batch, policy, mode=pplan.mode,
@@ -538,7 +621,9 @@ def dispatch_program(
     kernel-launch costs are paid once per *program*, not once per matrix.
 
     Returns ``[B, sum(Ms)]`` for fused programs (``program.split(out)``
-    slices per request) and ``[E, C, M]`` for grouped ones.
+    slices per request), ``[E, C, M]`` for grouped ones, and ``[T, M]``
+    for ragged ones (which have no per-request decomposition — the expert
+    split is runtime data, so they always execute as one program).
     """
     policy = policy or DEFAULT_POLICY
     backend = resolve_backend(policy)
@@ -547,7 +632,7 @@ def dispatch_program(
         else backend.default_interpret()
     )
     pplan = _resolve_program(backend, program.key(backend.name), policy)
-    if pplan.mode == "per_request":
+    if pplan.mode == "per_request" and program.kind != "ragged":
         # The decomposition IS N single-request dispatches — same plan
         # cache, autotune table, and selection inputs as dispatch_gemv, so
         # the unfused arm reproduces per-matrix dispatch exactly.
@@ -642,6 +727,25 @@ def dispatch_grouped(
     if not isinstance(weights, PackedWeights):
         weights = PackedWeights(w_t=jnp.asarray(weights))
     program = GemvProgram.grouped(xs, weights)
+    return dispatch_program(program, policy=policy)
+
+
+def dispatch_ragged(
+    x: jnp.ndarray, counts: jnp.ndarray, weights, *, bound: int = 0,
+    policy: DispatchPolicy | None = None,
+) -> jnp.ndarray:
+    """Ragged expert convenience: out[T, M] — zero capacity padding.
+
+    ``x`` is the flat ``[T, K]`` token buffer sorted by expert, ``counts``
+    the per-expert row counts (runtime data; must sum to at most T — rows
+    beyond the sum come back zero).  ``weights`` is a stacked
+    :class:`PackedWeights` or raw ``[E, K, M]`` array.  ``bound`` is the
+    host-static predicted per-expert token bound used as the program's
+    costing batch (see ``expert_batch_bound``; defaults to T).
+    """
+    if not isinstance(weights, PackedWeights):
+        weights = PackedWeights(w_t=jnp.asarray(weights))
+    program = GemvProgram.ragged(x, counts, weights, bound=bound)
     return dispatch_program(program, policy=policy)
 
 

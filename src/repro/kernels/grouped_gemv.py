@@ -1,0 +1,206 @@
+"""Native grouped / ragged Pallas GEMV kernels for MoE expert stacks.
+
+PIMnast's Algorithm 1 balances GEMV work across banks instead of padding
+to uniform capacity; the MoE analogue is the expert dimension.  The legacy
+expert path pads every expert's token buffer to a common capacity ``C``
+and runs one batched contraction — wasted FLOPs and wasted bandwidth on
+the padding rows.  The kernels here are the megablocks-style replacement:
+
+* :func:`grouped_gemv` — per-expert tile loop over the stacked
+  ``[E, K, M]`` weight with a *uniform* per-expert row count (the dense
+  grouped program shape, one launch instead of E);
+* :func:`ragged_gemv` — the ragged shape: one flat ``[T, K]`` token
+  buffer sorted by expert, per-expert row *offsets* as data.  No capacity
+  padding exists anywhere — ``T`` is exactly the number of routed tokens.
+
+Both follow the ``triton_gemv`` idiom (fori_loop K-walk with an f32
+loop-carried accumulator, ``MIN_DOT_DIM`` row padding for the dot); the
+grids iterate experts in the leading axis so each expert's ``[K, m_blk]``
+weight tile is streamed exactly once — optimal weight traffic, which is
+the bandwidth-dominant term for decode GEMV.
+
+The ragged kernel computes a full-``T`` dot per expert cell and stores
+through a row mask ``offsets[e] <= row < offsets[e+1]``.  The redundant
+rows cost only resident-operand FLOPs (x is already loaded for the tile);
+the masks partition ``[0, T)`` because offsets are a cumulative sum, so
+every output row is written by exactly one expert cell and the revisited
+output block is race-free even with parallel expert CTAs.
+
+CPU validation path: ``interpret=True`` (the Pallas interpreter), wired
+through ``DispatchPolicy.interpret`` exactly like ``triton_gemv``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.tpu_plan import TPUGemvPlan as GemvPlan
+from repro.kernels.triton_gemv import MIN_DOT_DIM
+
+
+def _pow2_divisor(n: int, cap: int, floor: int) -> int:
+    """Largest power-of-two divisor of ``n``, clamped to [floor, cap].
+
+    Local copy (``backends/gpu.py`` imports this module, so importing its
+    twin from there would be circular).  Returns ``n`` itself when no
+    power-of-two >= floor divides it — the grid then has one block on
+    that axis.
+    """
+    best = 0
+    p = floor
+    while p <= min(n, cap):
+        if n % p == 0:
+            best = p
+        p *= 2
+    return best if best else n
+
+
+def plan_grouped_gemv(M: int, K: int) -> GemvPlan:
+    """Tile plan for the grouped/ragged kernels (per-expert ``[K, M]``).
+
+    Expert matrices are smaller than fused dense stacks (reduced configs
+    go down to M=128, K=64), so the floors sit at ``MIN_DOT_DIM`` rather
+    than triton_gemv's 64/256 — a degenerate 1-block grid on tiny shapes
+    still exercises the kernel.
+    """
+    m_blk = _pow2_divisor(M, cap=512, floor=MIN_DOT_DIM)
+    k_blk = _pow2_divisor(K, cap=1024, floor=MIN_DOT_DIM)
+    return GemvPlan(m_blk=m_blk, k_blk=k_blk, n_m=M // m_blk,
+                    n_k=K // k_blk, vmem_bytes=0, split_k=1)
+
+
+def counts_to_offsets(counts: jnp.ndarray) -> jnp.ndarray:
+    """Per-expert token counts ``[E]`` -> row offsets ``[E + 1]`` (int32).
+
+    ``offsets[e]:offsets[e+1]`` is expert ``e``'s row range in the sorted
+    ragged buffer; ``offsets[E] == T`` when counts sum to the buffer rows.
+    """
+    z = jnp.zeros((1,), jnp.int32)
+    return jnp.concatenate([z, jnp.cumsum(counts.astype(jnp.int32))])
+
+
+def _grouped_kernel(xs_ref, w_ref, out_ref, *, n_k: int, k_blk: int):
+    """One (expert, m-block) cell: ``[C, K] @ [K, m_blk]`` K-walk."""
+    C = xs_ref.shape[1]
+    Cp = max(MIN_DOT_DIM, -(-C // MIN_DOT_DIM) * MIN_DOT_DIM)
+    acc0 = jnp.zeros((Cp, out_ref.shape[2]), jnp.float32)
+
+    def body(ki, acc):
+        xk = pl.load(xs_ref, (pl.dslice(0, 1), slice(None),
+                              pl.dslice(ki * k_blk, k_blk)))[0]
+        wk = pl.load(w_ref, (pl.dslice(0, 1), pl.dslice(ki * k_blk, k_blk),
+                             slice(None)))[0]
+        xp = jnp.zeros((Cp, k_blk), xk.dtype).at[:C].set(xk)
+        return acc + jnp.dot(xp, wk, preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, n_k, body, acc0)
+    pl.store(out_ref, (pl.dslice(0, 1), slice(None), slice(None)),
+             acc[None, :C].astype(out_ref.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def grouped_gemv(xs: jnp.ndarray, w_t: jnp.ndarray, *, plan: GemvPlan,
+                 interpret: bool = False) -> jnp.ndarray:
+    """Uniform grouped GEMV: ``[E, C, K] @ [E, K, M] -> [E, C, M]``.
+
+    One launch over a ``(E, n_m)`` grid; each expert's weight tile is
+    read once.  ``plan`` must come from :func:`plan_grouped_gemv` for
+    this ``(M, K)``.
+    """
+    E, C, K = xs.shape
+    assert w_t.shape[0] == E and w_t.shape[1] == K, (xs.shape, w_t.shape)
+    M = w_t.shape[2]
+    assert plan.m_blk * plan.n_m == M and plan.k_blk * plan.n_k == K, (
+        plan, (M, K))
+    kernel = functools.partial(_grouped_kernel,
+                               n_k=plan.n_k, k_blk=plan.k_blk)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, plan.n_m),
+        in_specs=[
+            pl.BlockSpec((1, C, K), lambda e, mi: (e, 0, 0)),
+            pl.BlockSpec((1, K, plan.m_blk), lambda e, mi: (e, 0, mi)),
+        ],
+        out_specs=pl.BlockSpec((1, C, plan.m_blk), lambda e, mi: (e, 0, mi)),
+        out_shape=jax.ShapeDtypeStruct((E, C, M), xs.dtype),
+        interpret=interpret,
+        name="pimnast_grouped_gemv",
+    )(xs, w_t)
+
+
+def _ragged_kernel(offs_ref, x_ref, w_ref, out_ref, *, n_k: int,
+                   k_blk: int):
+    """One (expert, m-block) cell of the ragged GEMV.
+
+    Computes the full-``T`` dot against this expert's weight tile and
+    masks the store to the expert's row range.  The extra rows are
+    resident-operand FLOPs only — x is block-resident either way, and the
+    expert's weight tile is streamed exactly once, which is what matters
+    for a bandwidth-bound GEMV.
+    """
+    e = pl.program_id(0)
+    start = pl.load(offs_ref, (pl.dslice(e, 1)))[0]
+    end = pl.load(offs_ref, (pl.dslice(e + 1, 1)))[0]
+    T = x_ref.shape[0]
+    m_blk = out_ref.shape[1]
+    Tp = max(MIN_DOT_DIM, -(-T // MIN_DOT_DIM) * MIN_DOT_DIM)
+    acc0 = jnp.zeros((Tp, m_blk), jnp.float32)
+
+    def body(ki, acc):
+        xk = pl.load(x_ref, (slice(None), pl.dslice(ki * k_blk, k_blk)))
+        wk = pl.load(w_ref, (pl.dslice(0, 1), pl.dslice(ki * k_blk, k_blk),
+                             slice(None)))[0]
+        xp = jnp.zeros((Tp, k_blk), xk.dtype).at[:T].set(xk)
+        return acc + jnp.dot(xp, wk, preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, n_k, body, acc0)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (T, m_blk), 0)
+    mine = (rows >= start) & (rows < end)
+    # Offsets are a cumsum, so the per-expert masks partition
+    # [0, offsets[E]): each of those rows is written by exactly one expert
+    # cell — race-free under parallel expert CTAs.  The output buffer is
+    # NOT zero-initialized, so the last expert cell additionally claims
+    # the tail rows [offsets[E], T) and writes zeros there (callers that
+    # over-allocate T get zero padding out, not garbage).
+    last = pl.program_id(0) == pl.num_programs(0) - 1
+    store_mask = mine | (last & (rows >= start))
+    val = jnp.where(mine, acc[:T], 0.0).astype(out_ref.dtype)
+    pl.store(out_ref, (slice(None), slice(None)), val, mask=store_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def ragged_gemv(x: jnp.ndarray, offsets: jnp.ndarray, w_t: jnp.ndarray, *,
+                plan: GemvPlan, interpret: bool = False) -> jnp.ndarray:
+    """Ragged GEMV: ``[T, K]`` sorted-by-expert @ ``[E, K, M] -> [T, M]``.
+
+    ``offsets`` is :func:`counts_to_offsets` of the per-expert counts —
+    runtime data, not shape: the same compiled kernel serves every count
+    distribution at a given ``T``.  Rows at or beyond ``offsets[E]`` are
+    left zero (callers that over-allocate ``T`` get zero padding out).
+    """
+    T, K = x.shape
+    E = w_t.shape[0]
+    assert w_t.shape[1] == K and offsets.shape == (E + 1,), (
+        x.shape, offsets.shape, w_t.shape)
+    M = w_t.shape[2]
+    assert plan.m_blk * plan.n_m == M and plan.k_blk * plan.n_k == K, (
+        plan, (M, K))
+    kernel = functools.partial(_ragged_kernel,
+                               n_k=plan.n_k, k_blk=plan.k_blk)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, plan.n_m),
+        in_specs=[
+            pl.BlockSpec((E + 1,), lambda e, mi: (0,)),
+            pl.BlockSpec((T, K), lambda e, mi: (0, 0)),
+            pl.BlockSpec((1, K, plan.m_blk), lambda e, mi: (e, 0, mi)),
+        ],
+        out_specs=pl.BlockSpec((T, plan.m_blk), lambda e, mi: (0, mi)),
+        out_shape=jax.ShapeDtypeStruct((T, M), x.dtype),
+        interpret=interpret,
+        name="pimnast_ragged_gemv",
+    )(offsets.astype(jnp.int32), x, w_t)

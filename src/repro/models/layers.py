@@ -415,17 +415,78 @@ def _combine_chunk(out, plan, T):
     return jnp.zeros((T, d), out.dtype).at[st].add(contrib)
 
 
+def _route_tokens(top_i, top_p, n_experts, top_k):
+    """Capacity-free ragged routing plan for one flat token chunk.
+
+    ``top_i``/``top_p`` are [T, k]; returns ``(st, se, sw, counts)`` —
+    the source-token index, expert id, and router weight of every routed
+    (token, expert) pair in expert-sorted order, plus the per-expert
+    counts [E].  Every pair gets a slot (no capacity, no ``keep`` mask):
+    ``counts`` always sums to T * k, and gathering ``x[st]`` yields the
+    sorted ragged buffer the ragged GEMV program consumes.
+    """
+    T = top_i.shape[0]
+    flat_e = top_i.reshape(-1)                               # [T*k]
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    flat_w = top_p.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.bincount(flat_e, length=n_experts)          # [E]
+    return st, se, sw, counts
+
+
+def _moe_ragged_decode(p, x, cfg, gemv, top_i, top_p):
+    """Decode-step expert FFNs through the ragged GEMV program shape.
+
+    Tokens flatten to ONE expert-sorted [T*k, d] buffer (T = B*S routed
+    tokens, k = top_k) — no [E, C, ...] capacity buffers exist, so the
+    padding FLOPs of the grouped path are structurally zero (the
+    ``expert_load`` counter records ``padded_slots=0``, the acceptance
+    criterion's counter-verification).  All three projections share one
+    routing plan and counts vector; per-expert balance here is the PIMnast
+    per-bank balance analogue — work follows the actual router load.
+    """
+    from repro.kernels.backends.base import expert_batch_bound
+    from repro.kernels.dispatch import dispatch_ragged, record_expert_load
+
+    e = cfg.moe
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+    st, se, sw, counts = _route_tokens(
+        top_i.reshape(B * S, e.top_k), top_p.reshape(B * S, e.top_k),
+        e.n_experts, e.top_k)
+    xr = xt[st]                                  # [T*k, d], expert-sorted
+    bound = expert_batch_bound(B * S, e.top_k, e.n_experts)
+    record_expert_load(routed_tokens=B * S * e.top_k, experts=e.n_experts,
+                       max_tokens=bound, padded_slots=0)
+
+    def proj(t, w):
+        return dispatch_ragged(t, counts, w, bound=bound, policy=gemv)
+
+    if cfg.act in ("silu", "geglu"):
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+        h = act(proj(xr, p["w_gate"])) * proj(xr, p["w_up"])
+    else:
+        h = jax.nn.gelu(proj(xr, p["w_up"]))
+    out = proj(h, p["w_down"])                   # [T*k, d]
+    y = jnp.zeros((B * S, d), out.dtype).at[st].add(
+        out * sw[:, None].astype(out.dtype))
+    return y.reshape(B, S, d)
+
+
 def apply_moe(
     p: Params, x: jnp.ndarray, cfg: ModelConfig, gemv=None
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """x: [B, S, d] -> (y, aux_loss).
 
     With a ``gemv`` DispatchPolicy and a single-token input (decode step),
-    the expert FFNs run as **grouped GEMV programs** through the unified
-    dispatcher (stacked [E, K, M] weights, per-expert token buffers) — the
-    MoE configs become real dispatch workloads instead of dense-einsum
-    bypasses, and the whole expert group pays one launch per projection.
-    Training/prefill shapes keep the einsum path below.
+    the expert FFNs run as GEMV programs through the unified dispatcher,
+    with ``gemv.expert_shape`` selecting the execution shape: ``"ragged"``
+    (default) builds the capacity-free expert-sorted flat buffer and
+    dispatches the ragged program (zero padding FLOPs —
+    :func:`_moe_ragged_decode`); ``"grouped"`` keeps the capacity-padded
+    [E, C, d] grouped program; ``"einsum"`` bypasses program dispatch.
+    Training/prefill shapes always use the einsum path below.
 
     CHUNKED sort-based dispatch (§Perf iteration 3 in EXPERIMENTS.md):
     routing, capacity, and the scatter/gather run per SEQUENCE (vmap over
@@ -462,6 +523,17 @@ def apply_moe(
     ) / e.top_k
     aux = e.n_experts * jnp.sum(me * ce) * e.router_aux_weight
 
+    expert_shape = (getattr(gemv, "expert_shape", "grouped")
+                    if gemv is not None else "einsum")
+    use_programs = (gemv is not None and S == 1 and gemv.fuse_programs
+                    and expert_shape != "einsum")
+    if use_programs and expert_shape == "ragged":
+        y = _moe_ragged_decode(p, x, cfg, gemv, top_i, top_p)
+        y = constrain(y, ("batch", None, None))
+        if e.n_shared:
+            y = y + apply_mlp(p["shared"], x, cfg, gemv=gemv)
+        return y, aux
+
     # ---- per-sequence dispatch ----
     C = _capacity(S, cfg)
     buf, plan = jax.vmap(
@@ -473,15 +545,22 @@ def apply_moe(
     buf = constrain(buf, ("batch", "model", None, None))
 
     # ---- expert FFNs (batched over [B, E]) ----
-    grouped_gemv = gemv is not None and S == 1 and gemv.fuse_programs
+    grouped_gemv = use_programs
     if grouped_gemv:
         # Decode: grouped GEMV programs over the expert stack.  The [B, E,
         # C, d] buffers flatten to per-expert token batches [E, B*C, d];
         # each projection is ONE program (one batched contraction / launch)
         # instead of an E-way einsum the dispatcher never sees.
-        from repro.kernels.dispatch import dispatch_grouped
+        from repro.kernels.dispatch import dispatch_grouped, record_expert_load
 
         C_cap = buf.shape[2]
+        # Legacy-path load telemetry: the capacity buffers allocate
+        # B * E * C slots for B * S * top_k routed tokens — the padding
+        # waste the ragged shape exists to eliminate.
+        record_expert_load(
+            routed_tokens=B * S * e.top_k, experts=e.n_experts,
+            max_tokens=C_cap,
+            padded_slots=max(B * e.n_experts * C_cap - B * S * e.top_k, 0))
 
         def expert_proj(t, w):  # t: [B, E, C, f_in], w: [E, f_in, f_out]
             ts = t.transpose(1, 0, 2, 3).reshape(e.n_experts, B * C_cap, -1)

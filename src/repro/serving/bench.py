@@ -36,7 +36,10 @@ import numpy as np
 # v2: per-run "mesh" record (sharded serving) — the dispatch counters then
 # carry the ShardedPlan sections (sharded_axes / shard_picks, DESIGN.md §9)
 # — and per-request eos_ids in the trace config.
-SCHEMA_VERSION = 2
+# v3: ragged MoE serving — per-run metrics docs carry the expert_load /
+# program_fallbacks dispatch counters and the derived expert_balance
+# summary (metrics schema v2, DESIGN.md §10).
+SCHEMA_VERSION = 3
 
 
 @dataclass(frozen=True)

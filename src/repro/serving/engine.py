@@ -153,6 +153,7 @@ class Engine:
                  gemv_batch_threshold: int = 8,
                  gemv_backend: str | None = None,
                  gemv_fuse_programs: bool = True,
+                 gemv_expert_shape: str = "ragged",
                  scheduler: Scheduler | SchedulerConfig | str = "fcfs",
                  max_queue: int = 0,
                  prepack_weights: bool = True,
@@ -177,10 +178,14 @@ class Engine:
         # install unconditionally when use_pim_kernels is on.  In sharded
         # mode ``model_shards`` makes every selection reason about the
         # per-shard GEMV (DESIGN.md §9).
+        # ``gemv_expert_shape`` picks the MoE decode execution shape
+        # (ragged / grouped / einsum — models/layers.py::apply_moe); the
+        # default ragged path is the capacity-free one.
         self.gemv_policy = (
             DispatchPolicy(batch_threshold=gemv_batch_threshold,
                            backend=gemv_backend,
                            fuse_programs=gemv_fuse_programs,
+                           expert_shape=gemv_expert_shape,
                            model_shards=model_shards)
             if use_pim_kernels else None
         )
@@ -208,9 +213,16 @@ class Engine:
         elif isinstance(scheduler, SchedulerConfig):
             self.scheduler = Scheduler(scheduler)
         else:
+            # MoE models make gemv_aware expert-aware: the scheduler's
+            # per-expert gate shares expert_batch_bound with apply_moe's
+            # ragged dispatch, so admitted batches price exactly as
+            # dispatched (serving/scheduler.py module docstring).
             self.scheduler = Scheduler(SchedulerConfig(
                 policy=scheduler, max_queue=max_queue,
                 gemv_batch_threshold=gemv_batch_threshold,
+                moe_experts=(cfg.moe.n_experts if cfg.moe is not None
+                             else 0),
+                moe_top_k=(cfg.moe.top_k if cfg.moe is not None else 1),
             ))
         self.metrics = metrics or ServingMetrics(clock=clock)
         self.kv = SlotKVCache(cfg, batch_slots, max_len, mesh=mesh)
@@ -362,6 +374,12 @@ class Engine:
             self.metrics.requests_expired(len(expired))
 
         self._maybe_preempt(t0)
+        if self.scheduler.config.moe_experts > 1:
+            # Expert-aware batch shaping: refresh the scheduler's router-
+            # skew estimate from this engine's dispatch deltas before it
+            # decides how many slots to fill (serving/scheduler.py).
+            self.scheduler.observe_expert_load(
+                self.metrics.dispatch_delta().get("expert_load", {}))
         admitted = self.scheduler.select(self.kv.n_free, self.kv.n_active,
                                          t0)
         finished: list[Request] = []

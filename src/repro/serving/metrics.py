@@ -30,7 +30,10 @@ import time
 import numpy as np
 
 # --json/JSON-document version: bump when the record layout changes.
-SCHEMA_VERSION = 1
+# v2: the dispatch counters carry the ``expert_load`` and
+# ``program_fallbacks`` sections (ragged MoE serving) and the document
+# gains the derived ``expert_balance`` summary when MoE dispatches ran.
+SCHEMA_VERSION = 2
 
 # Per-step snapshots kept in memory; older entries are dropped (the
 # aggregate histograms/counters keep full fidelity).
@@ -172,8 +175,37 @@ class ServingMetrics:
 
     # -- export --------------------------------------------------------------
 
+    @staticmethod
+    def expert_balance(dispatch: dict) -> dict | None:
+        """Derived per-expert load-balance summary from the ``expert_load``
+        dispatch counters (None when no MoE dispatch decisions ran).
+
+        ``imbalance`` is the planned per-expert bound over the even split
+        — 1.0 is PIMnast-perfect balance; ``padding_waste`` is the
+        fraction of expert-buffer slots the legacy capacity path padded
+        (the ragged path holds it at 0.0, counter-verified).
+        """
+        el = dispatch.get("expert_load") or {}
+        decisions = int(el.get("decisions", 0) or 0)
+        if decisions <= 0:
+            return None
+        routed = int(el.get("routed_tokens", 0) or 0)
+        experts = int(el.get("experts", 0) or 0)
+        max_tokens = int(el.get("max_tokens", 0) or 0)
+        padded = int(el.get("padded_slots", 0) or 0)
+        mean_per_expert = routed / max(experts, 1)
+        max_per_expert = max_tokens / decisions
+        return {
+            "decisions": decisions,
+            "mean_tokens_per_expert": mean_per_expert,
+            "max_tokens_per_expert": max_per_expert,
+            "imbalance": max_per_expert / max(mean_per_expert, 1e-9),
+            "padding_waste": padded / max(padded + routed, 1),
+        }
+
     def to_dict(self, *, include_steps: bool = True) -> dict:
         elapsed = max(self.clock() - self.start_time, 1e-9)
+        dispatch = self.dispatch_delta()
         doc = {
             "schema": SCHEMA_VERSION,
             "elapsed_s": elapsed,
@@ -183,8 +215,11 @@ class ServingMetrics:
             "decode_batch": self.batch_sizes.summary(),
             "tokens_per_s": self.counters["tokens_out"] / elapsed,
             "counters": dict(self.counters),
-            "dispatch": self.dispatch_delta(),
+            "dispatch": dispatch,
         }
+        balance = self.expert_balance(dispatch)
+        if balance is not None:
+            doc["expert_balance"] = balance
         if include_steps:
             doc["steps"] = list(self.steps)
         return doc

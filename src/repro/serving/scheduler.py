@@ -22,6 +22,19 @@ Policies
   ``gemv_path`` / ``matmul_fallback`` counters (serve_bench compares the
   mix across policies).
 
+  On MoE models (``moe_experts > 1``) the policy is additionally
+  **expert-aware**: admission also keeps the *predicted per-expert* decode
+  batch — ``expert_batch_bound(n_active + admitted, top_k, E, skew)``,
+  the same formula the MoE layer uses to price its ragged programs —
+  under ``expert_batch_threshold``.  The skew factor starts at the
+  ``expert_skew`` prior and is refined from the router statistics the
+  engine feeds back each step (:meth:`Scheduler.observe_expert_load`,
+  sourced from ``dispatch_stats()["expert_load"]``).  Because no expert
+  can see more tokens than the whole batch, the expert gate only ever
+  *tightens* admission — the dense-program guarantee above is preserved —
+  and it binds when ``expert_batch_threshold`` is set below the dense
+  threshold (skewed routers on small expert counts).
+
 Backpressure and deadlines
 --------------------------
 ``max_queue`` bounds the waiting queue: a ``submit`` beyond it raises
@@ -47,6 +60,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro.kernels.backends.base import expert_batch_bound
+
 POLICIES = ("fcfs", "sjf", "gemv_aware")
 
 
@@ -63,6 +78,15 @@ class SchedulerConfig:
     # pass within this many clock units and no slot is free (None: running
     # requests always finish — the pre-preemption behavior)
     preempt_margin: float | None = None
+    # Expert-aware batch shaping (gemv_aware on MoE models, module
+    # docstring): with moe_experts > 1, admission also keeps the predicted
+    # per-expert decode batch under expert_batch_threshold (None: the
+    # dense gemv_batch_threshold).  expert_skew is the router-imbalance
+    # prior; observe_expert_load refines it from dispatch feedback.
+    moe_experts: int = 0
+    moe_top_k: int = 1
+    expert_batch_threshold: int | None = None
+    expert_skew: float = 2.0
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -79,6 +103,10 @@ class Scheduler:
     config: SchedulerConfig = field(default_factory=SchedulerConfig)
     queue: list = field(default_factory=list)
     _seq: int = 0                     # arrival tiebreak for stable ordering
+    # Router-imbalance estimate from dispatch feedback (None: use the
+    # config's expert_skew prior).  Floor 1.0 — a router can't be more
+    # balanced than the even split.
+    _observed_skew: float | None = None
 
     def __len__(self) -> int:
         return len(self.queue)
@@ -136,13 +164,42 @@ class Scheduler:
             return False
         return any(self._imminent(r, now) for r in self.queue)
 
+    def observe_expert_load(self, expert_load: dict) -> None:
+        """Feed back router statistics from ``dispatch_stats()``'s
+        ``expert_load`` section (the engine calls this each step with its
+        metrics delta).  ``max_tokens / decisions`` over the even split
+        ``routed / (decisions * E)`` estimates the realized skew — the
+        planned per-expert bound relative to perfect balance."""
+        cfg = self.config
+        routed = int(expert_load.get("routed_tokens", 0) or 0)
+        if cfg.moe_experts <= 1 or routed <= 0:
+            return
+        max_tokens = int(expert_load.get("max_tokens", 0) or 0)
+        self._observed_skew = max(
+            1.0, max_tokens * cfg.moe_experts / routed)
+
+    def _admission_cap(self, free_slots: int, n_active: int) -> int:
+        """gemv_aware batch shaping: the dense batch gate, then (MoE) the
+        per-expert gate — which only ever tightens, see module docstring."""
+        cfg = self.config
+        cap = min(free_slots, max(0, cfg.gemv_batch_threshold - n_active))
+        if cfg.moe_experts > 1:
+            t_e = cfg.expert_batch_threshold or cfg.gemv_batch_threshold
+            skew = (self._observed_skew if self._observed_skew is not None
+                    else cfg.expert_skew)
+            while cap > 0 and expert_batch_bound(
+                    n_active + cap, cfg.moe_top_k, cfg.moe_experts,
+                    skew=skew) > t_e:
+                cap -= 1
+        return cap
+
     def select(self, free_slots: int, n_active: int,
                now: float = 0.0) -> list:
         """Pop the requests to admit this step, in admission order."""
         cfg = self.config
         cap = free_slots
         if cfg.policy == "gemv_aware":
-            cap = min(cap, max(0, cfg.gemv_batch_threshold - n_active))
+            cap = self._admission_cap(free_slots, n_active)
         if cap <= 0 or not self.queue:
             return []
         if cfg.policy == "fcfs":

@@ -64,9 +64,30 @@ def test_program_rows_amortize_launches(backend):
             assert r["kernel"] in get_backend(backend).kernels
 
 
+@pytest.mark.parametrize("backend", ["tpu", "cpu", "gpu"])
+def test_moe_rows_ragged_planned(backend):
+    """Model-only MoE rows: the ragged program is the planned mode at the
+    decode shapes and the padded-slot count is what the legacy path would
+    burn.  The three modeled costs are informational (weight traffic
+    dominates at decode; the skew-prior imbalance term can price a ragged
+    launch slightly above the padded batch on high-expert-count archs) —
+    the locked claim is the *planned mode*, not a modeled win."""
+    rows = kernel_bench.moe_rows(backend_name=backend)
+    assert len(rows) == len(kernel_bench.MOE_ARCHS)
+    for r in rows:
+        assert r["backend"] == backend
+        # cpu/tpu plan the universal executor; gpu nativizes (interpret
+        # opt-in on this host) to the Pallas ragged_triton mode
+        assert r["mode"].startswith("ragged"), r
+        assert r["padded_slots"] > 0
+        assert r["routed_tokens"] == r["B"] * r["top_k"]
+        for m in ("einsum", "grouped", "ragged"):
+            assert r[f"model_us/{m}"] > 0
+
+
 def test_json_cli_output_parses(tmp_path):
-    """Smoke test for the --json flag: run the CLI, parse the schema-2
-    document (dispatch rows + program rows)."""
+    """Smoke test for the --json flag: run the CLI, parse the schema-3
+    document (dispatch rows + program rows + moe rows)."""
     out_path = str(tmp_path / "bench.json")
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
@@ -93,6 +114,14 @@ def test_json_cli_output_parses(tmp_path):
                       "launches_program", "launches_independent"):
             assert field in rec, rec
         assert rec["launches_program"] < rec["launches_independent"]
+    moe = doc["moe_rows"]
+    assert len(moe) == len(kernel_bench.MOE_ARCHS)
+    for rec in moe:
+        for field in ("arch", "experts", "top_k", "capacity",
+                      "padded_slots", "mode"):
+            assert field in rec, rec
+        assert rec["mode"] == "ragged"
     # stdout carries the human-readable tables alongside
     assert "dispatch/" in proc.stdout
     assert "program/" in proc.stdout
+    assert "moe/" in proc.stdout

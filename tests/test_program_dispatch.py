@@ -355,10 +355,13 @@ def test_decode_forward_with_programs_matches_einsum(arch):
     np.testing.assert_allclose(np.asarray(apart), np.asarray(base),
                                rtol=1e-4, atol=1e-4)
     if cfg.moe is not None:
-        # the MoE decode path engaged grouped program dispatch (3 expert
-        # projections per layer -> at least one grouped miss in the cache)
+        # the MoE decode path engaged ragged program dispatch (3 expert
+        # projections per layer -> at least one ragged miss in the cache,
+        # and the counters show the ragged mode executed)
         stats = dispatch.plan_cache_stats()
         assert stats["program_misses"] >= 1
+        modes = dispatch.dispatch_stats()["program_modes"]
+        assert any(k.endswith(":ragged") for k in modes), modes
 
 
 def test_engine_generations_identical_with_and_without_fusion():

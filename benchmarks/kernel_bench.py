@@ -48,7 +48,10 @@ from repro.kernels.dispatch import DispatchPolicy
 # 2: {"schema", "rows", "program_rows"} with the program comparison.
 # 3: + "moe_rows" — capacity-padded einsum/grouped vs ragged expert
 #    dispatch per MoE arch (model-only; DESIGN.md §10).
-SCHEMA_VERSION = 3
+# 4: measured dispatch rows gain predicted_us/<kern> +
+#    pred_over_measured/<kern> (every bench run doubles as a model-error
+#    probe) and cost_model_source (seed vs calibrated; DESIGN.md §11).
+SCHEMA_VERSION = 4
 
 SHAPES = [
     # (name, M, K, B)  — decode-path GEMVs from the assigned archs
@@ -149,6 +152,7 @@ def dispatch_rows(measure: bool = True,
                 "ref" if plan is None else kern, M, K, B, plan=plan
             )
         row["model_us/picked"] = row[f"model_us/{picked}"]
+        row["cost_model_source"] = backend.cost_model_source
         # interpret mode re-executes the kernel body with jnp per grid
         # program: cap measured shapes (lm_head weights exceed 1 GB in f32)
         if measure and M * K * 4 <= 256 * 2**20:
@@ -159,10 +163,20 @@ def dispatch_rows(measure: bool = True,
             for kern in ("auto",) + fixed:
                 pol = DispatchPolicy(backend=backend_name, kernel=kern,
                                      interpret=interp or None)
-                row[f"measured_us/{kern}"] = dispatch.time_gemv_us(
+                measured = dispatch.time_gemv_us(
                     lambda: dispatch.dispatch_gemv(xj, pw, policy=pol),
                     reps=2,
                 )
+                row[f"measured_us/{kern}"] = measured
+                # every measured row doubles as a model-error probe: the
+                # prediction is the modeled latency of the kernel this pin
+                # actually runs (x_bytes=4 — the measured arrays are f32).
+                run_kern, run_plan = backend.select_kernel(
+                    M, K, B, x_bytes=4, policy=pol)
+                predicted = backend.estimate_cost_us(
+                    run_kern, M, K, B, x_bytes=4, plan=run_plan)
+                row[f"predicted_us/{kern}"] = predicted
+                row[f"pred_over_measured/{kern}"] = predicted / measured
         rows.append(row)
     return rows
 
@@ -331,7 +345,33 @@ def print_dispatch_table(rows: list[dict]) -> None:
                 if f"measured_us/{k}" in r
             )
             line += f" | measured: {meas}"
+        if "pred_over_measured/auto" in r:
+            line += (f" | pred/meas(auto)="
+                     f"{r['pred_over_measured/auto']:.2f} "
+                     f"[{r['cost_model_source']}]")
         print(line)
+
+
+def run_calibrate(args) -> int:
+    """The --calibrate mode: sweep -> fit -> artifact -> activate
+    (repro.calibration; DESIGN.md §11).  One command, exit 0 on success."""
+    from repro.calibration import calibrate_backend
+
+    doc = calibrate_backend(
+        args.backend, smoke=args.smoke, trials=args.trials,
+        out_dir=args.out_dir, table_path=args.table,
+    )
+    print(f"calibrate/{doc['backend']}: {doc['n_records']} records, "
+          f"mape={doc['mape']:.3f} (seed {doc['seed_mape']:.3f})"
+          + (" [degenerate]" if doc["degenerate"] else ""))
+    for kern, err in sorted(doc["per_kernel_mape"].items()):
+        print(f"calibrate/{doc['backend']}/{kern}: mape={err:.3f}")
+    for term, val in sorted(doc["fitted"].items()):
+        print(f"calibrate/{doc['backend']}/fit {term}={val:.6g}")
+    print(f"wrote calibration artifact -> {doc['path']}")
+    if args.table:
+        print(f"merged calibration section -> {args.table}")
+    return 0
 
 
 def main(argv=None) -> int:
@@ -345,7 +385,27 @@ def main(argv=None) -> int:
                     help="skip measured wall clock (model only)")
     ap.add_argument("--json", metavar="OUT", default=None,
                     help="write the dispatcher rows as JSON records")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="measure + fit this backend's CostModel constants "
+                         "and write artifacts/calibration/<backend>.json "
+                         "(repro.calibration; DESIGN.md §11)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --calibrate: the small CI sweep tier")
+    ap.add_argument("--trials", type=int, default=0,
+                    help="with --calibrate: timed trials per record "
+                         "(0 = tier default)")
+    ap.add_argument("--out-dir", default=None,
+                    help="with --calibrate: artifact directory "
+                         "(default artifacts/calibration)")
+    ap.add_argument("--table", default=None,
+                    help="with --calibrate: also merge the fitted "
+                         "constants into this v3 autotune table")
     args = ap.parse_args(argv)
+    if args.calibrate:
+        if args.out_dir is None:
+            from repro.calibration.artifact import DEFAULT_OUT_DIR
+            args.out_dir = DEFAULT_OUT_DIR
+        return run_calibrate(args)
     if not args.dispatch:
         for r in kernel_rows():
             print(f"{r[0]},{r[1]:.3f},{r[2]:.6f}")

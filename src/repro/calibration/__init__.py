@@ -1,0 +1,52 @@
+"""Measured cost-model calibration (DESIGN.md §11).
+
+Measures the real dispatch paths (``measure``), fits each backend's
+:class:`~repro.kernels.backends.CostModel` constants to the measurements
+(``fit``), and persists/activates the result (``artifact``) — the
+subsystem that replaces hand-seeded performance-model constants with
+regression-checked measured ones, per the ROADMAP's "measured
+performance-model calibration harness" item.
+
+One-command entry point::
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py \
+        --calibrate --smoke --backend cpu
+
+or programmatically::
+
+    from repro.calibration import calibrate_backend
+    doc = calibrate_backend("cpu", smoke=True)
+    assert doc["mape"] <= 0.25
+"""
+
+from repro.calibration.artifact import (
+    ARTIFACT_SCHEMA,
+    apply_artifact,
+    artifact_doc,
+    calibrate_backend,
+    load_artifact,
+    table_entry,
+    write_artifact,
+)
+from repro.calibration.fit import (
+    FIT_TERMS,
+    FitResult,
+    fit_cost_model,
+    mape,
+    predict_us,
+)
+from repro.calibration.measure import (
+    MeasurementRecord,
+    measure_program,
+    measure_single,
+    run_sweep,
+    sweep_shapes,
+)
+
+__all__ = [
+    "ARTIFACT_SCHEMA", "FIT_TERMS", "FitResult", "MeasurementRecord",
+    "apply_artifact", "artifact_doc", "calibrate_backend", "fit_cost_model",
+    "load_artifact", "mape", "measure_program", "measure_single",
+    "predict_us", "run_sweep", "sweep_shapes", "table_entry",
+    "write_artifact",
+]

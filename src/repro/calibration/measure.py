@@ -1,0 +1,270 @@
+"""Instrumented GEMV sweeps: the measurement half of cost-model calibration.
+
+The paper's placement decisions are only as good as the performance model
+behind them (PIMnast's roofline/factor analysis, §III); every
+:class:`~repro.kernels.backends.CostModel` ships hand-seeded constants until
+a sweep measures the real thing.  This module times the REAL dispatch paths
+— ``dispatch_gemv`` with the kernel pinned per candidate, and
+``execute_program`` for the three program kinds — on synthetic inputs, and
+emits one :class:`MeasurementRecord` per (backend, kernel, shape) for
+``calibration.fit`` to regress constants from (DESIGN.md §11; the
+csl-experiments GEMM-model recipe: decompose runtime into setup + bandwidth
++ per-element terms, fit each from sweeps).
+
+Measurement protocol (per record):
+
+1. the dispatch path is **jitted** with the arrays as arguments — serving
+   decodes under ``jit``, so the compiled executable is the thing the cost
+   model prices (eager timings carry 100s of µs of per-op Python/dispatch
+   overhead that would be fitted into the constants as phantom bandwidth);
+2. **warmup** — one untimed run, ``block_until_ready`` (compilation and
+   first-touch allocation never contaminate a trial);
+3. **trials** — ``trials`` timed runs, each ``block_until_ready`` (jax
+   dispatch is async; without the sync the clock measures enqueue time);
+4. raw per-trial times are kept on the record — outlier rejection
+   (median/MAD) happens at fit time (:meth:`MeasurementRecord.robust_us`),
+   so an injected scheduler hiccup is visible in the artifact AND excluded
+   from the regression.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import dispatch, ops
+from repro.kernels.backends import (
+    DispatchPolicy,
+    GemvKey,
+    ProgramKey,
+    get_backend,
+)
+from repro.kernels.backends.base import _synthesize_program
+
+# Interpret-mode Pallas re-executes the kernel body per grid program with
+# jnp calls — cap measured weights so a sweep stays minutes, not hours
+# (same bound kernel_bench uses for its measured rows).
+MAX_WEIGHT_BYTES = 256 * 2**20
+
+# Smoke sweep (CI leg, CPU): every shape is >= the dispatcher's
+# min_pallas_bytes gate (1 MiB weights) so the auto pick exercises real
+# selection, small enough that the whole sweep is seconds.  The spread
+# intentionally varies M, K, batch, and aspect ratio — a sweep where only
+# one dimension moves cannot separate bandwidth from per-element overhead.
+SMOKE_SINGLE_SHAPES: tuple[tuple[str, int, int, int, int], ...] = (
+    # (label, M, K, batch, bits)
+    ("sq_1k", 1024, 1024, 1, 16),
+    ("tallk_512x4k", 512, 4096, 1, 16),
+    ("widem_4kx512", 4096, 512, 1, 16),
+    ("sq_2k", 2048, 2048, 1, 16),
+    ("batched_1kx4k", 1024, 4096, 4, 16),
+    ("int8_1k", 1024, 1024, 1, 8),
+)
+SMOKE_PROGRAM_SHAPES: tuple[tuple, ...] = (
+    # (label, kind, Ms, K, batch, group, tokens)
+    ("fused_2x512", "fused", (512, 512), 1024, 1, 2, 0),
+    ("grouped_e4", "grouped", (512,), 1024, 2, 4, 0),
+    ("ragged_e4", "ragged", (512,), 1024, 0, 4, 8),
+)
+
+# Full sweep: the smoke spread plus the registry decode shapes the
+# dispatcher actually serves (kernel_bench's comparison set), byte-capped.
+FULL_EXTRA_BATCHES = (2, 8)
+
+
+@dataclass(frozen=True)
+class MeasurementRecord:
+    """One timed (backend, kernel, shape) cell of a sweep.
+
+    ``kernel`` is the executed kernel for single-GEMV records and the
+    executed program *mode* for program records; ``key``/``plan`` are the
+    in-process pricing handles (the exact decision that ran, so the fitter
+    prices precisely what was measured — they don't serialize, see
+    :meth:`to_json`).
+    """
+
+    backend: str
+    kind: str                      # "single" | "fused" | "grouped" | "ragged"
+    label: str
+    kernel: str                    # kernel name (single) or mode (program)
+    M: int                         # total output width
+    K: int
+    batch: int
+    bits: int
+    x_bytes: int
+    trials_us: tuple[float, ...]
+    key: object = field(default=None, compare=False)
+    plan: object = field(default=None, compare=False)
+
+    @property
+    def robust_us(self) -> float:
+        """Median with median/MAD outlier rejection.
+
+        Trials more than 3 scaled-MADs from the median are dropped (a GC
+        pause or scheduler hiccup must not drag a constant), then the
+        median of the survivors is the record's one number.
+        """
+        a = sorted(self.trials_us)
+        med = _median(a)
+        mad = _median(sorted(abs(t - med) for t in a))
+        if mad <= 0:
+            return med
+        keep = [t for t in a if abs(t - med) <= 3 * 1.4826 * mad]
+        return _median(keep) if keep else med
+
+    def to_json(self) -> dict:
+        return {
+            "backend": self.backend, "kind": self.kind, "label": self.label,
+            "kernel": self.kernel, "M": self.M, "K": self.K,
+            "batch": self.batch, "bits": self.bits, "x_bytes": self.x_bytes,
+            "trials_us": list(self.trials_us),
+            "robust_us": self.robust_us,
+        }
+
+
+def _median(a: list[float]) -> float:
+    n = len(a)
+    if n == 0:
+        return float("nan")
+    return a[n // 2] if n % 2 else 0.5 * (a[n // 2 - 1] + a[n // 2])
+
+
+def _time_trials(thunk, trials: int) -> tuple[float, ...]:
+    thunk().block_until_ready()  # warmup: compile + first-touch
+    out = []
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        thunk().block_until_ready()
+        out.append((time.perf_counter() - t0) * 1e6)
+    return tuple(out)
+
+
+def measure_single(backend_name: str, label: str, M: int, K: int,
+                   batch: int, bits: int, *, trials: int,
+                   rng: np.random.Generator) -> list[MeasurementRecord]:
+    """Time the auto pick and every applicable fixed kernel for one shape.
+
+    One record per DISTINCT executed (kernel, plan): a pinned kernel the
+    backend downgrades (e.g. an ungated ``triton`` pin) would duplicate the
+    ``ref`` record, so results dedupe on the kernel that actually ran.
+    """
+    backend = get_backend(backend_name)
+    interp = backend_name != "cpu"
+    w = rng.standard_normal((M, K)).astype(np.float32)
+    x = jnp.asarray(rng.standard_normal((batch, K)).astype(np.float32))
+    if bits < 16:
+        pw = ops.quantize_weight(w, bits=bits, block=32)
+        pins = ("auto",)
+    else:
+        pw = ops.pack_weight(jnp.asarray(w))
+        pins = ("auto",) + tuple(
+            k for k in backend.kernels if not k.startswith("quant"))
+    records, seen = [], set()
+    for pin in pins:
+        pol = DispatchPolicy(backend=backend_name, kernel=pin,
+                             interpret=interp or None)
+        kernel, plan = backend.select_kernel(
+            M, K, batch, bits=bits, block=pw.block, x_bytes=4, policy=pol)
+        if (kernel, repr(plan)) in seen:
+            continue
+        seen.add((kernel, repr(plan)))
+        # selection runs at trace time; the trials time the compiled
+        # executable — the artifact serving decode steps actually run.
+        fn = jax.jit(lambda xx, _pol=pol: dispatch.dispatch_gemv(
+            xx, pw, policy=_pol))
+        trials_us = _time_trials(lambda: fn(x), trials)
+        records.append(MeasurementRecord(
+            backend=backend_name, kind="single",
+            label=f"{label}/{kernel}", kernel=kernel,
+            M=M, K=K, batch=batch, bits=bits, x_bytes=4,
+            trials_us=trials_us,
+            key=GemvKey(M=M, K=K, batch=batch, bits=bits, block=pw.block,
+                        dtype="float32", backend=backend_name),
+            plan=plan,
+        ))
+    return records
+
+
+def measure_program(backend_name: str, label: str, kind: str,
+                    Ms: tuple[int, ...], K: int, batch: int, group: int,
+                    tokens: int, *, trials: int) -> MeasurementRecord:
+    """Time one program shape under its planned joint mode."""
+    backend = get_backend(backend_name)
+    interp = backend_name != "cpu"
+    policy = DispatchPolicy(backend=backend_name, interpret=interp or None)
+    if kind == "ragged":
+        batch = batch or max(1, -(-tokens // max(group, 1)))
+    key = ProgramKey(kind=kind, Ms=Ms, K=K, batch=batch, group=group,
+                     bits=16, block=32, dtype="float32",
+                     backend=backend_name, tokens=tokens)
+    pplan = backend.plan_program(key, policy=policy)
+    program = _synthesize_program(key)
+    # jit over the traced operands (x, and counts for ragged — counts as a
+    # constant would let XLA fold the gather structure at compile time).
+    if program.counts is not None:
+        fn = jax.jit(lambda xx, cc: backend.execute_program(
+            dataclasses.replace(program, x=xx, counts=cc),
+            pplan, policy, interp))
+        thunk = lambda: fn(program.x, program.counts)  # noqa: E731
+    else:
+        fn = jax.jit(lambda xx: backend.execute_program(
+            dataclasses.replace(program, x=xx), pplan, policy, interp))
+        thunk = lambda: fn(program.x)  # noqa: E731
+    trials_us = _time_trials(thunk, trials)
+    return MeasurementRecord(
+        backend=backend_name, kind=kind, label=f"{label}/{pplan.mode}",
+        kernel=pplan.mode, M=key.total_M, K=K, batch=batch, bits=16,
+        x_bytes=4, trials_us=trials_us, key=key, plan=pplan,
+    )
+
+
+def sweep_shapes(*, smoke: bool) -> tuple[list, list]:
+    """(single shapes, program shapes) for a sweep tier."""
+    singles = list(SMOKE_SINGLE_SHAPES)
+    programs = list(SMOKE_PROGRAM_SHAPES)
+    if smoke:
+        return singles, programs
+    from repro.configs.registry import ARCHS
+
+    for name in ("gemma3-1b", "olmo-1b", "minitron-8b"):
+        cfg = ARCHS[name]
+        for tag, M, K in (("ffn_up", cfg.d_ff, cfg.d_model),
+                          ("ffn_down", cfg.d_model, cfg.d_ff),
+                          ("lm_head", cfg.vocab, cfg.d_model)):
+            if M * K * 4 > MAX_WEIGHT_BYTES:
+                continue
+            singles.append((f"{name}/{tag}", M, K, 1, 16))
+        for b in FULL_EXTRA_BATCHES:
+            singles.append((f"{name}/ffn_down_b{b}",
+                            cfg.d_model, cfg.d_ff, b, 16))
+        hd = cfg.hd
+        programs.append((
+            f"{name}/qkv", "fused",
+            (cfg.n_heads * hd, cfg.n_kv_heads * hd, cfg.n_kv_heads * hd),
+            cfg.d_model, 1, 3, 0))
+    return singles, programs
+
+
+def run_sweep(backend_name: str, *, smoke: bool = False,
+              trials: int = 0, seed: int = 0) -> list[MeasurementRecord]:
+    """The full measurement pass: every sweep shape, every applicable
+    kernel, all three program kinds.  Returns the record list the fitter
+    consumes (records keep their pricing handles; persist them via
+    ``calibration.artifact``)."""
+    trials = trials or (3 if smoke else 5)
+    rng = np.random.default_rng(seed)
+    singles, programs = sweep_shapes(smoke=smoke)
+    records: list[MeasurementRecord] = []
+    for label, M, K, batch, bits in singles:
+        records.extend(measure_single(
+            backend_name, label, M, K, batch, bits, trials=trials, rng=rng))
+    for label, kind, Ms, K, batch, group, tokens in programs:
+        records.append(measure_program(
+            backend_name, label, kind, tuple(Ms), K, batch, group, tokens,
+            trials=trials))
+    return records

@@ -21,6 +21,7 @@ autotuning, and execution to it.  Registered implementations live in
 
 from __future__ import annotations
 
+import contextlib
 import json
 import math
 import os
@@ -56,6 +57,13 @@ class CostModel:
     These are the memory-system parameters of the paper's performance model
     translated to each execution target; a backend owns exactly one frozen
     instance (no module globals, no cross-backend sharing).
+
+    Class-level instances are **seed** constants — hand-estimated on the
+    development host.  The calibration subsystem (``repro.calibration``,
+    DESIGN.md §11) fits every continuous term from instrumented sweeps and
+    swaps a :meth:`with_constants` copy onto the backend at resolve time;
+    ``min_parallel_blocks`` is structural (core/SM/bank count) and is never
+    fitted.
     """
 
     bandwidth_gbps: float      # sustained memory bandwidth, GB/s (1e9 B/s)
@@ -64,10 +72,57 @@ class CostModel:
     program_us: float          # per-grid-program (or per-chunk) step overhead
     min_parallel_blocks: int   # grid fill target: fewer blocks starve the
                                # machine (the paper's small-M rule, §VI-F)
+    # Per-output-element overhead (ns per batch*M element): index math,
+    # store pipeline, reduction bookkeeping — the csl-experiments model's
+    # per-FMACS overhead term.  Seeds are 0 (folded into efficiency until
+    # a measured sweep separates them).
+    elem_ns: float = 0.0
+    # Split-K partial traffic multiplier: each of ``degree`` f32 partial
+    # outputs is written then re-read by the reduce (factor 2.0); fitted
+    # values absorb cache residency of the partials.
+    splitk_reduce_factor: float = 2.0
 
     @property
     def bandwidth_bps(self) -> float:
         return self.bandwidth_gbps * 1e9
+
+    def constants(self) -> dict:
+        """All fields as a plain JSON-able dict (calibration artifacts)."""
+        import dataclasses as _dc
+
+        return _dc.asdict(self)
+
+    def with_constants(self, **overrides) -> "CostModel":
+        """A frozen copy with the named constants replaced.
+
+        The calibration override point: fitted values arrive as a partial
+        dict (only the terms a sweep could identify), everything else keeps
+        this instance's value.  Unknown names raise — a misspelled constant
+        must never silently calibrate nothing.
+        """
+        import dataclasses as _dc
+
+        fields = {f.name for f in _dc.fields(self)}
+        unknown = set(overrides) - fields
+        if unknown:
+            raise ValueError(
+                f"unknown CostModel constants {sorted(unknown)}; "
+                f"expected a subset of {sorted(fields)}"
+            )
+        if "min_parallel_blocks" in overrides:
+            overrides["min_parallel_blocks"] = int(
+                overrides["min_parallel_blocks"])
+        cm = _dc.replace(self, **overrides)
+        if cm.bandwidth_gbps <= 0:
+            raise ValueError(f"bandwidth_gbps must be > 0, got "
+                             f"{cm.bandwidth_gbps}")
+        if not 0 < cm.gemv_efficiency <= 1.0:
+            raise ValueError(f"gemv_efficiency must be in (0, 1], got "
+                             f"{cm.gemv_efficiency}")
+        if min(cm.launch_us, cm.program_us, cm.elem_ns,
+               cm.splitk_reduce_factor) < 0:
+            raise ValueError("overhead constants must be >= 0")
+        return cm
 
 
 # ---------------------------------------------------------------------------
@@ -531,22 +586,33 @@ class AutotuneTable:
     On disk the table is one JSON document (format 3)::
 
         {"format": 3,
-         "tables":   {"tpu": {<shape key>: entry, ...}, "cpu": {...}},
-         "programs": {"tpu": {<program key>: entry, ...}, ...}}
+         "tables":      {"tpu": {<shape key>: entry, ...}, "cpu": {...}},
+         "programs":    {"tpu": {<program key>: entry, ...}, ...},
+         "calibration": {"cpu": {"constants": {...}, "mape": ..., ...}}}
 
     so tuners running on different substrates merge into a single file
     without key collisions — the heterogeneous-fleet analogue of the paper
     shipping pre-swept placements per memory configuration.  ``programs``
-    (new in v3) holds grouped/fused GEMV-program winners; v2 files simply
-    have no such section and v1 flat files migrate as before.  All mutation
-    is guarded by a lock: engines stepped from a thread pool share one
-    table.
+    (new in v3) holds grouped/fused GEMV-program winners; ``calibration``
+    (optional, still format 3) holds fitted per-backend CostModel constants
+    (``repro.calibration``, DESIGN.md §11) — dispatch applies them to the
+    backend the first time it prices a decision after a load.  v2 files
+    simply have no such sections and v1 flat files migrate as before;
+    top-level sections this version doesn't know are preserved verbatim
+    through load/save (a newer writer's table survives an older reader).
+    All mutation is guarded by a lock: engines stepped from a thread pool
+    share one table.
     """
+
+    # Sections this version interprets; anything else round-trips opaquely.
+    _KNOWN_SECTIONS = ("format", "tables", "programs", "calibration")
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self._tables: dict[str, dict[str, dict]] = {}
         self._programs: dict[str, dict[str, dict]] = {}
+        self._calibration: dict[str, dict] = {}
+        self._extras: dict = {}
         self._loaded_paths: set[str] = set()
 
     # -- in-memory access ---------------------------------------------------
@@ -569,6 +635,19 @@ class AutotuneTable:
         with self._lock:
             self._programs.setdefault(namespace, {})[key] = dict(entry)
 
+    def get_calibration(self, namespace: str) -> dict | None:
+        with self._lock:
+            entry = self._calibration.get(namespace)
+            return dict(entry) if entry is not None else None
+
+    def put_calibration(self, namespace: str, entry: dict) -> None:
+        with self._lock:
+            self._calibration[namespace] = dict(entry)
+
+    def snapshot_calibration(self) -> dict[str, dict]:
+        with self._lock:
+            return {ns: dict(e) for ns, e in self._calibration.items()}
+
     def namespaces(self) -> tuple[str, ...]:
         with self._lock:
             return tuple(sorted(self._tables))
@@ -587,6 +666,8 @@ class AutotuneTable:
         with self._lock:
             self._tables.clear()
             self._programs.clear()
+            self._calibration.clear()
+            self._extras.clear()
             self._loaded_paths.clear()
 
     # -- persistence --------------------------------------------------------
@@ -599,14 +680,19 @@ class AutotuneTable:
     @classmethod
     def _parse(
         cls, doc: dict
-    ) -> tuple[dict[str, dict[str, dict]], dict[str, dict[str, dict]]]:
+    ) -> tuple[dict[str, dict[str, dict]], dict[str, dict[str, dict]],
+               dict[str, dict], dict]:
         """Accept a v3/v2 namespaced document or a v1 flat table; returns
-        ``(tables, programs)``.
+        ``(tables, programs, calibration, extras)``.
 
         v2 documents have no ``programs`` section (empty mapping); unknown
         namespaces in either section load verbatim — a fleet table may name
-        backends this process never registered.  v1 files (PR-1) map
-        suffixed shape keys straight to entries; they load into the ``tpu``
+        backends this process never registered.  ``calibration`` (optional
+        in v3) maps backend namespaces to fitted CostModel records.
+        ``extras`` carries any top-level sections this version does not
+        interpret, so a table written by a newer repro survives a
+        load/save cycle here un-truncated.  v1 files (PR-1) map suffixed
+        shape keys straight to entries; they load into the ``tpu``
         namespace — the kernel set those tables named — with the platform
         suffix stripped so v2+ lookups find them.
         """
@@ -616,7 +702,13 @@ class AutotuneTable:
                 ns: dict(t)
                 for ns, t in doc.get("programs", {}).items()
             } if isinstance(doc.get("programs", {}), dict) else {}
-            return tables, programs
+            calibration = {
+                ns: dict(e)
+                for ns, e in doc.get("calibration", {}).items()
+            } if isinstance(doc.get("calibration", {}), dict) else {}
+            extras = {k: v for k, v in doc.items()
+                      if k not in cls._KNOWN_SECTIONS}
+            return tables, programs, calibration, extras
         flat = {}
         for k, v in doc.items():
             if not (isinstance(v, dict) and "kernel" in v):
@@ -625,7 +717,7 @@ class AutotuneTable:
             if head and tail in cls._V1_KEY_SUFFIXES:
                 k = head
             flat[k] = v
-        return ({"tpu": flat} if flat else {}), {}
+        return ({"tpu": flat} if flat else {}), {}, {}, {}
 
     def load(self, path: str) -> dict[str, dict[str, dict]]:
         """Merge the table at ``path`` into memory; returns the single-GEMV
@@ -636,7 +728,7 @@ class AutotuneTable:
         on insert so the shared table can only change under its lock.
         """
         with open(path) as f:
-            parsed, programs = self._parse(json.load(f))
+            parsed, programs, calibration, extras = self._parse(json.load(f))
         with self._lock:
             for ns, entries in parsed.items():
                 self._tables.setdefault(ns, {}).update(
@@ -646,6 +738,9 @@ class AutotuneTable:
                 self._programs.setdefault(ns, {}).update(
                     {k: dict(e) for k, e in entries.items()}
                 )
+            for ns, entry in calibration.items():
+                self._calibration[ns] = dict(entry)
+            self._extras.update(extras)
             self._loaded_paths.add(os.path.abspath(path))
         return parsed
 
@@ -676,21 +771,37 @@ class AutotuneTable:
         with self._lock:
             merged: dict[str, dict[str, dict]] = {}
             merged_prog: dict[str, dict[str, dict]] = {}
+            merged_cal: dict[str, dict] = {}
+            extras: dict = {}
             try:
                 with open(path) as f:
-                    merged, merged_prog = self._parse(json.load(f))
+                    merged, merged_prog, merged_cal, extras = \
+                        self._parse(json.load(f))
             except (FileNotFoundError, json.JSONDecodeError):
                 pass
             for ns, entries in self._tables.items():
                 merged.setdefault(ns, {}).update(entries)
             for ns, entries in self._programs.items():
                 merged_prog.setdefault(ns, {}).update(entries)
+            merged_cal.update(self._calibration)
+            extras.update(self._extras)
+            doc = dict(extras)
+            doc.update({"format": _TABLE_FORMAT, "tables": merged,
+                        "programs": merged_prog})
+            if merged_cal:
+                doc["calibration"] = merged_cal
             tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
-            with open(tmp, "w") as f:
-                json.dump({"format": _TABLE_FORMAT, "tables": merged,
-                           "programs": merged_prog}, f,
-                          indent=1, sort_keys=True)
-            os.replace(tmp, path)
+            try:
+                with open(tmp, "w") as f:
+                    json.dump(doc, f, indent=1, sort_keys=True)
+                os.replace(tmp, path)
+            except BaseException:
+                # never strand a temp file next to the table (CI legs
+                # glob the artifact dir); the target is still intact
+                # because only os.replace publishes.
+                with contextlib.suppress(OSError):
+                    os.unlink(tmp)
+                raise
 
 
 # ---------------------------------------------------------------------------
@@ -730,6 +841,37 @@ class GemvBackend:
         program_us=0.0, min_parallel_blocks=1,
     )
 
+    # -- cost-model calibration (repro.calibration, DESIGN.md §11) ----------
+    #
+    # ``cost_model`` on the CLASS is the hand-seeded constant set; applying
+    # a calibration shadows it with a fitted instance attribute, so every
+    # estimate/selection path picks the fitted constants up with zero
+    # call-site changes.  ``cost_model_source`` is the observability hook:
+    # dispatch stamps it into dispatch_stats()["cost_model_source"] per
+    # decision, so it is always visible which model priced a pick.
+
+    @property
+    def seed_cost_model(self) -> CostModel:
+        """The class-level (hand-seeded) constants, ignoring calibration."""
+        for klass in type(self).__mro__:
+            if "cost_model" in vars(klass):
+                return vars(klass)["cost_model"]
+        raise AssertionError("no class-level cost_model")  # pragma: no cover
+
+    @property
+    def cost_model_source(self) -> str:
+        """``"calibrated"`` when fitted constants are active, else ``"seed"``."""
+        return "calibrated" if "cost_model" in self.__dict__ else "seed"
+
+    def apply_calibration(self, cm: CostModel) -> CostModel:
+        """Activate fitted constants (idempotent; returns the active model)."""
+        self.__dict__["cost_model"] = cm
+        return cm
+
+    def reset_calibration(self) -> None:
+        """Back to the seed constants (no-op when none were applied)."""
+        self.__dict__.pop("cost_model", None)
+
     # -- cost model ---------------------------------------------------------
 
     def estimate_cost_us(
@@ -738,12 +880,14 @@ class GemvBackend:
     ) -> float:
         """Modeled GEMV latency (µs) on this backend.
 
-        Default: memory-bound ref path — bytes over (bandwidth × efficiency).
-        Backends override to model their non-ref kernels.
+        Default: memory-bound ref path — bytes over (bandwidth × efficiency)
+        plus the per-output-element overhead term.  Backends override to
+        model their non-ref kernels.
         """
         io = self.io_bytes(M, K, batch, bits=bits, x_bytes=x_bytes)
         cm = self.cost_model
-        return io / (cm.bandwidth_bps * cm.gemv_efficiency) * 1e6
+        return (io / (cm.bandwidth_bps * cm.gemv_efficiency) * 1e6
+                + batch * M * cm.elem_ns * 1e-3)
 
     @staticmethod
     def io_bytes(M: int, K: int, batch: int, *, bits: int = 16,
@@ -903,7 +1047,8 @@ class GemvBackend:
             imbalance = min(max(key.batch * key.group / T, 1.0),
                             float(key.group))
             return (t + cm.launch_us * launches
-                    + cm.program_us * key.group * imbalance)
+                    + cm.program_us * key.group * imbalance
+                    + T * key.Ms[0] * cm.elem_ns * 1e-3)
         out_bytes = key.batch * key.total_M * x_bytes
         if key.kind == "grouped":
             # every expert has its own token buffer: IV traffic is
@@ -914,7 +1059,8 @@ class GemvBackend:
         io = w_bytes + iv_reads * key.batch * key.K * x_bytes + out_bytes
         launches = 1 if mode in ("fused", "grouped") else key.n_requests
         t = io / (cm.bandwidth_bps * cm.gemv_efficiency) * 1e6
-        return t + cm.launch_us * launches
+        return (t + cm.launch_us * launches
+                + key.batch * key.total_M * cm.elem_ns * 1e-3)
 
     def plan_program(
         self, key: ProgramKey, *, policy: DispatchPolicy = DEFAULT_POLICY,

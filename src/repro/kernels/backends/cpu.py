@@ -130,14 +130,16 @@ class CpuBackend(GemvBackend):
         write+re-read traffic are what keep small GEMVs on ``ref``."""
         cm = self.cost_model
         io = self.io_bytes(M, K, batch, bits=bits, x_bytes=x_bytes)
+        elem = batch * M * cm.elem_ns * 1e-3
         if kernel != "splitk" or plan is None:
-            return io / (cm.bandwidth_bps * cm.gemv_efficiency) * 1e6
+            return io / (cm.bandwidth_bps * cm.gemv_efficiency) * 1e6 + elem
         deg = plan.split_k
         occupancy = min(1.0, deg / cm.min_parallel_blocks)
         t = io / (cm.bandwidth_bps * occupancy) * 1e6
         t += cm.launch_us + cm.program_us * deg
-        t += 2 * deg * batch * M * 4 / cm.bandwidth_bps * 1e6
-        return t
+        t += (cm.splitk_reduce_factor * deg * batch * M * 4
+              / cm.bandwidth_bps * 1e6)
+        return t + elem
 
     # -- planning -----------------------------------------------------------
 

@@ -112,11 +112,12 @@ class GpuBackend(GemvBackend):
     ) -> float:
         cm = self.cost_model
         io = self.io_bytes(M, K, batch, bits=bits, x_bytes=x_bytes)
+        elem = batch * M * cm.elem_ns * 1e-3
         if kernel != "triton" or plan is None:
-            return io / (cm.bandwidth_bps * cm.gemv_efficiency) * 1e6
+            return io / (cm.bandwidth_bps * cm.gemv_efficiency) * 1e6 + elem
         occupancy = min(1.0, plan.n_m / cm.min_parallel_blocks)
         t = io / (cm.bandwidth_bps * occupancy) * 1e6
-        return t + cm.launch_us + cm.program_us * plan.n_m
+        return t + cm.launch_us + cm.program_us * plan.n_m + elem
 
     # -- planning -----------------------------------------------------------
 

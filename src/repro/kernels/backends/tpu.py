@@ -86,8 +86,9 @@ class TpuBackend(GemvBackend):
         """
         cm = self.cost_model
         io = self.io_bytes(M, K, batch, bits=bits, x_bytes=x_bytes)
+        elem = batch * M * cm.elem_ns * 1e-3
         if kernel == "ref":
-            return io / (cm.bandwidth_bps * cm.gemv_efficiency) * 1e6
+            return io / (cm.bandwidth_bps * cm.gemv_efficiency) * 1e6 + elem
         assert plan is not None, kernel
         degree = plan.split_k if kernel == "splitk" else 1
         n_programs = degree * plan.n_m * plan.n_k
@@ -96,8 +97,9 @@ class TpuBackend(GemvBackend):
         t += cm.launch_us + cm.program_us * n_programs
         if degree > 1:
             # partial outputs: kernel writes + host-side reduce reads (f32)
-            t += 2 * degree * batch * M * 4 / cm.bandwidth_bps * 1e6
-        return t
+            t += (cm.splitk_reduce_factor * degree * batch * M * 4
+                  / cm.bandwidth_bps * 1e6)
+        return t + elem
 
     # -- planning -----------------------------------------------------------
 

@@ -101,6 +101,7 @@ __all__ = [
     "record_program_fallback", "record_expert_load",
     "plan_cache_stats", "clear_plan_cache", "dispatch_stats",
     "load_autotune_table", "save_autotune_table", "clear_autotune_table",
+    "autotune_table",
     "available_backends", "get_backend", "resolve_backend", "time_gemv_us",
     "PackedWeights",
 ]
@@ -150,6 +151,10 @@ _DISPATCH_COUNTERS: dict = {
     # path records 0 — the zero-padding-FLOPs claim, counter-verified).
     "expert_load": {"decisions": 0, "routed_tokens": 0, "experts": 0,
                     "max_tokens": 0, "padded_slots": 0},
+    # Which CostModel priced each decision (DESIGN.md §11): "seed" = the
+    # hand-seeded class constants, "calibrated" = constants fitted by
+    # repro.calibration and loaded from the table's `calibration` section.
+    "cost_model_source": {"seed": 0, "calibrated": 0},
 }
 # Backend:kind pairs whose capability-gate degradation already warned
 # (warn once per process, not once per shape — the counter keeps counting).
@@ -184,6 +189,8 @@ def dispatch_stats() -> dict:
             "program_fallbacks": dict(
                 _DISPATCH_COUNTERS["program_fallbacks"]),
             "expert_load": dict(_DISPATCH_COUNTERS["expert_load"]),
+            "cost_model_source": dict(
+                _DISPATCH_COUNTERS["cost_model_source"]),
         }
 
 
@@ -234,9 +241,12 @@ def _count_decision(backend_name: str, key_batch: int,
                     policy: DispatchPolicy, *, kernel: str | None = None,
                     mode: str | None = None,
                     shard_axis: str | None = None,
-                    shard_pick: str | None = None) -> None:
+                    shard_pick: str | None = None,
+                    source: str = "seed") -> None:
     """Record one fresh dispatch decision (caller holds no locks)."""
     with _LOCK:
+        src = _DISPATCH_COUNTERS["cost_model_source"]
+        src[source] = src.get(source, 0) + 1
         if kernel is not None:
             picks = _DISPATCH_COUNTERS["kernel_picks"]
             k = f"{backend_name}:{kernel}"
@@ -275,11 +285,55 @@ def clear_plan_cache() -> None:
         _DISPATCH_COUNTERS["expert_load"] = {
             "decisions": 0, "routed_tokens": 0, "experts": 0,
             "max_tokens": 0, "padded_slots": 0}
+        _DISPATCH_COUNTERS["cost_model_source"] = {"seed": 0,
+                                                   "calibrated": 0}
         _FALLBACK_WARNED.clear()
 
 
 def clear_autotune_table() -> None:
+    """Drop every loaded table entry AND revert backends whose CostModel
+    was calibrated from the table back to their seed constants."""
     _AUTOTUNE_TABLE.clear()
+    for name in available_backends():
+        get_backend(name).reset_calibration()
+    with _LOCK:
+        _CALIBRATION_WARNED.clear()
+
+
+# Backends whose `calibration` table entry failed validation and already
+# warned (once per backend — the entry won't get better between misses).
+_CALIBRATION_WARNED: set[str] = set()
+
+
+def _maybe_apply_calibration(backend) -> str:
+    """Apply the table's fitted constants to ``backend`` (resolve time).
+
+    Called on every plan-cache miss, before selection prices candidates:
+    if the autotune table's ``calibration`` section carries fitted
+    constants for this backend (repro.calibration, DESIGN.md §11) and the
+    backend isn't already running them, they're applied over the seed
+    :class:`CostModel` via ``with_constants``.  Returns the source label
+    ("seed" | "calibrated") recorded with the decision, so
+    ``dispatch_stats()["cost_model_source"]`` says which model priced it.
+    """
+    entry = _AUTOTUNE_TABLE.get_calibration(backend.name)
+    if entry is None or not isinstance(entry.get("constants"), dict):
+        return backend.cost_model_source
+    try:
+        cm = backend.seed_cost_model.with_constants(**entry["constants"])
+    except (TypeError, ValueError) as e:
+        with _LOCK:
+            first = backend.name not in _CALIBRATION_WARNED
+            _CALIBRATION_WARNED.add(backend.name)
+        if first:
+            warnings.warn(
+                f"ignoring invalid calibration entry for backend "
+                f"{backend.name!r}: {e}", RuntimeWarning, stacklevel=3,
+            )
+        return backend.cost_model_source
+    if backend.cost_model != cm:
+        backend.apply_calibration(cm)
+    return "calibrated"
 
 
 def load_autotune_table(path: str) -> dict[str, dict[str, dict]]:
@@ -292,6 +346,13 @@ def save_autotune_table(path: str) -> None:
     """Merge this process's per-backend namespaces into the table at
     ``path`` (read-merge-write, atomic rename; see AutotuneTable.save)."""
     _AUTOTUNE_TABLE.save(path)
+
+
+def autotune_table() -> AutotuneTable:
+    """The process-level table every dispatch reads — the handle the
+    calibration subsystem publishes fitted constants through
+    (``AutotuneTable.put_calibration``; see repro.calibration)."""
+    return _AUTOTUNE_TABLE
 
 
 # ---------------------------------------------------------------------------
@@ -388,6 +449,7 @@ def _resolve(backend, key: GemvKey,
                 _CACHE_STATS["hits"] += 1
                 return cached
             _CACHE_STATS["misses"] += 1
+        source = _maybe_apply_calibration(backend)
         shard_axis = shard_pick = None
         sel_key = key
         if policy.model_shards > 1 and policy.kernel == "auto":
@@ -422,7 +484,8 @@ def _resolve(backend, key: GemvKey,
         with _LOCK:
             _PLAN_CACHE[(key, policy)] = (kernel, plan)
         _count_decision(backend.name, key.batch, policy, kernel=kernel,
-                        shard_axis=shard_axis, shard_pick=shard_pick)
+                        shard_axis=shard_axis, shard_pick=shard_pick,
+                        source=source)
     return kernel, plan
 
 
@@ -565,6 +628,7 @@ def _resolve_program(backend, key: ProgramKey,
                 _CACHE_STATS["program_hits"] += 1
                 return cached
             _CACHE_STATS["program_misses"] += 1
+        source = _maybe_apply_calibration(backend)
         shard_axis = shard_pick = None
         sel_key = key
         if policy.model_shards > 1 and policy.kernel == "auto":
@@ -606,7 +670,8 @@ def _resolve_program(backend, key: ProgramKey,
         with _LOCK:
             _PROGRAM_CACHE[(key, policy)] = pplan
         _count_decision(backend.name, key.batch, policy, mode=pplan.mode,
-                        shard_axis=shard_axis, shard_pick=shard_pick)
+                        shard_axis=shard_axis, shard_pick=shard_pick,
+                        source=source)
     return pplan
 
 

@@ -1,0 +1,449 @@
+"""Measured cost-model calibration (DESIGN.md §11): with_constants
+overrides, fitter recovery/robustness/degeneracy, artifact + table
+round-trips (incl. v1/v2/v3 compat and unknown-section preservation),
+concurrent atomic saves, and dispatch observably pricing with calibrated
+constants (dispatch_stats()["cost_model_source"])."""
+
+import json
+import os
+import threading
+import warnings
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hypothesis not installed: the local stub fills in
+    from _hypothesis_stub import given, settings, st
+
+from repro.calibration import (
+    ARTIFACT_SCHEMA,
+    MeasurementRecord,
+    apply_artifact,
+    calibrate_backend,
+    fit_cost_model,
+    load_artifact,
+    run_sweep,
+    table_entry,
+    write_artifact,
+)
+from repro.calibration.artifact import artifact_doc
+from repro.calibration.fit import _swapped_cost_model, mape, predict_us
+from repro.kernels import dispatch, ops
+from repro.kernels.backends import (
+    AutotuneTable,
+    DispatchPolicy,
+    GemvKey,
+    get_backend,
+)
+
+RNG = np.random.default_rng(11)
+CPU = get_backend("cpu")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    dispatch.clear_plan_cache()
+    dispatch.clear_autotune_table()
+    yield
+    dispatch.clear_plan_cache()
+    dispatch.clear_autotune_table()
+
+
+# --------------------------------------------------------------------------
+# CostModel.with_constants + the calibration shadow slot
+# --------------------------------------------------------------------------
+
+
+def test_with_constants_partial_override():
+    seed = CPU.seed_cost_model
+    cm = seed.with_constants(bandwidth_gbps=100.0, launch_us=7.0)
+    assert cm.bandwidth_gbps == 100.0 and cm.launch_us == 7.0
+    assert cm.gemv_efficiency == seed.gemv_efficiency
+    assert cm.min_parallel_blocks == seed.min_parallel_blocks
+    assert seed.bandwidth_gbps != 100.0  # frozen: the seed never mutates
+
+
+def test_with_constants_rejects_unknown_and_invalid():
+    seed = CPU.seed_cost_model
+    with pytest.raises(ValueError, match="unknown"):
+        seed.with_constants(bandwith_gbps=1.0)  # typo must not no-op
+    with pytest.raises(ValueError):
+        seed.with_constants(gemv_efficiency=1.5)
+    with pytest.raises(ValueError):
+        seed.with_constants(gemv_efficiency=0.0)
+    with pytest.raises(ValueError):
+        seed.with_constants(bandwidth_gbps=-1.0)
+    with pytest.raises(ValueError):
+        seed.with_constants(launch_us=-0.5)
+    # structural count coerces to int (JSON round-trips floats)
+    assert seed.with_constants(min_parallel_blocks=4.0) \
+        .min_parallel_blocks == 4
+
+
+def test_apply_and_reset_calibration_shadow():
+    seed = CPU.seed_cost_model
+    assert CPU.cost_model_source == "seed"
+    fitted = seed.with_constants(bandwidth_gbps=seed.bandwidth_gbps * 2)
+    CPU.apply_calibration(fitted)
+    try:
+        assert CPU.cost_model_source == "calibrated"
+        assert CPU.cost_model == fitted
+        assert CPU.seed_cost_model == seed  # the class constant survives
+        # estimates pick up the fitted constants with no call-site change
+        assert CPU.estimate_cost_us("ref", 2048, 2048, 1) == pytest.approx(
+            0.5 * _seed_ref_us(2048, 2048, 1))
+    finally:
+        CPU.reset_calibration()
+    assert CPU.cost_model_source == "seed"
+    assert CPU.cost_model == seed
+
+
+def _seed_ref_us(M, K, B):
+    with _swapped_cost_model(CPU, CPU.seed_cost_model):
+        return CPU.estimate_cost_us("ref", M, K, B)
+
+
+# --------------------------------------------------------------------------
+# Fitter: recovery, outlier robustness, degeneracy
+# --------------------------------------------------------------------------
+
+SYNTH_SHAPES = ((1024, 1024, 1), (512, 4096, 1), (4096, 512, 1),
+                (2048, 2048, 1), (1024, 4096, 4), (2048, 1024, 8))
+
+
+def _synth_records(true_cm, shapes=SYNTH_SHAPES, *, noise=0.0,
+                   outlier_factor=None):
+    """Records whose measurements are the TRUE model's predictions —
+    ground truth the fitter must recover from the seed start."""
+    rng = np.random.default_rng(3)
+    records = []
+    for M, K, B in shapes:
+        for pin in ("ref", "splitk"):
+            kernel, plan = CPU.select_kernel(
+                M, K, B, x_bytes=4,
+                policy=DispatchPolicy(backend="cpu", kernel=pin))
+            rec = MeasurementRecord(
+                backend="cpu", kind="single", label=f"{M}x{K}b{B}/{kernel}",
+                kernel=kernel, M=M, K=K, batch=B, bits=16, x_bytes=4,
+                trials_us=(), key=GemvKey(M=M, K=K, batch=B, bits=16,
+                                          block=32, dtype="float32",
+                                          backend="cpu"), plan=plan)
+            with _swapped_cost_model(CPU, true_cm):
+                true_us = predict_us(CPU, rec)
+            trials = [true_us * (1.0 + noise * rng.standard_normal())
+                      for _ in range(5)]
+            if outlier_factor:
+                trials[2] = true_us * outlier_factor  # one wild trial
+            records.append(
+                MeasurementRecord(
+                    backend=rec.backend, kind=rec.kind, label=rec.label,
+                    kernel=rec.kernel, M=M, K=K, batch=B, bits=16,
+                    x_bytes=4, trials_us=tuple(abs(t) for t in trials),
+                    key=rec.key, plan=rec.plan))
+    return records
+
+
+def test_fit_recovers_known_constants():
+    seed = CPU.seed_cost_model
+    true_cm = seed.with_constants(
+        bandwidth_gbps=seed.bandwidth_gbps / 3, gemv_efficiency=0.8,
+        launch_us=20.0, elem_ns=2.0)
+    records = _synth_records(true_cm, noise=0.01)
+    fit = fit_cost_model("cpu", records)
+    assert not fit.degenerate
+    assert fit.mape < fit.seed_mape
+    assert fit.mape <= 0.05, fit.mape  # within tolerance of ground truth
+    # the dominant streaming term (bandwidth x efficiency) is identified
+    got = fit.constants
+    true_stream = true_cm.bandwidth_gbps * true_cm.gemv_efficiency
+    assert got["bandwidth_gbps"] * got["gemv_efficiency"] == pytest.approx(
+        true_stream, rel=0.25)
+
+
+def test_fit_monotone_never_worse_than_seed():
+    # even on pure noise, accepted moves only ever lower the objective
+    records = _synth_records(CPU.seed_cost_model, noise=0.3)
+    fit = fit_cost_model("cpu", records)
+    assert fit.mape <= fit.seed_mape
+
+
+def test_fit_robust_to_injected_outliers():
+    seed = CPU.seed_cost_model
+    true_cm = seed.with_constants(gemv_efficiency=0.8, launch_us=10.0)
+    clean = fit_cost_model("cpu", _synth_records(true_cm, noise=0.01))
+    dirty = fit_cost_model(
+        "cpu", _synth_records(true_cm, noise=0.01, outlier_factor=50.0))
+    # the 50x trial is rejected by the median/MAD gate, not regressed in
+    assert dirty.mape <= 0.05, dirty.mape
+    assert abs(dirty.mape - clean.mape) <= 0.04
+
+
+def test_fit_degenerate_single_shape_degrades_gracefully():
+    true_cm = CPU.seed_cost_model.with_constants(gemv_efficiency=0.3)
+    records = _synth_records(true_cm, shapes=((1024, 1024, 1),))
+    fit = fit_cost_model("cpu", records)
+    assert fit.degenerate
+    # only the efficiency moved; everything else is the seed value
+    assert set(fit.fitted) <= {"gemv_efficiency"}
+    # the constants are valid (re-validated by the same override path)
+    cm = CPU.seed_cost_model.with_constants(**fit.constants)
+    assert 0 < cm.gemv_efficiency <= 1.0
+    assert np.isfinite(fit.mape) and fit.mape <= fit.seed_mape
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(min_value=3, max_value=25),
+       spread=st.integers(min_value=2, max_value=200))
+def test_robust_us_bounded_and_outlier_immune(n, spread):
+    """median/MAD: the robust statistic stays inside the clean trials'
+    range even with a 1000x outlier appended."""
+    clean = [100.0 + spread * i / n for i in range(n)]
+    rec = MeasurementRecord(
+        backend="cpu", kind="single", label="t", kernel="ref",
+        M=8, K=8, batch=1, bits=16, x_bytes=4,
+        trials_us=tuple(clean) + (1000.0 * max(clean),))
+    assert min(clean) <= rec.robust_us <= max(clean)
+
+
+# --------------------------------------------------------------------------
+# Artifact round-trip + table calibration section
+# --------------------------------------------------------------------------
+
+
+def _tiny_fit():
+    true_cm = CPU.seed_cost_model.with_constants(gemv_efficiency=0.8)
+    records = _synth_records(true_cm, noise=0.01)
+    return fit_cost_model("cpu", records), records
+
+
+def test_artifact_write_load_apply_round_trip(tmp_path):
+    fit, records = _tiny_fit()
+    path = str(tmp_path / "cpu.json")
+    doc = write_artifact(path, fit, records)
+    assert doc["schema"] == ARTIFACT_SCHEMA
+    loaded = load_artifact(path)
+    assert loaded["constants"] == doc["constants"]
+    assert loaded["mape"] == pytest.approx(fit.mape)
+    assert len(loaded["records"]) == len(records)
+    try:
+        cm = apply_artifact(path)
+        assert CPU.cost_model_source == "calibrated"
+        assert CPU.cost_model == cm
+        assert cm.constants() == {
+            k: pytest.approx(v) for k, v in doc["constants"].items()}
+        # publish=True landed the entry in the process table too
+        entry = dispatch.autotune_table().get_calibration("cpu")
+        assert entry is not None and entry["constants"] == doc["constants"]
+    finally:
+        CPU.reset_calibration()
+
+
+def test_artifact_rejects_wrong_schema(tmp_path):
+    fit, records = _tiny_fit()
+    doc = artifact_doc(fit, records)
+    doc["schema"] = ARTIFACT_SCHEMA + 1
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="schema"):
+        load_artifact(str(p))
+
+
+def test_table_calibration_round_trips(tmp_path):
+    fit, records = _tiny_fit()
+    entry = table_entry(artifact_doc(fit, records))
+    path = str(tmp_path / "table.json")
+    t1 = AutotuneTable()
+    t1.put_calibration("cpu", entry)
+    t1.put("cpu", "64x64xb1_w16g32_float32", {"kernel": "ref", "us": 1.0})
+    t1.save(path)
+    doc = json.load(open(path))
+    assert doc["format"] == 3  # calibration is an optional v3 section
+    t2 = AutotuneTable()
+    t2.load(path)
+    assert t2.get_calibration("cpu") == entry
+    assert t2.get("cpu", "64x64xb1_w16g32_float32")["kernel"] == "ref"
+    assert t2.snapshot_calibration() == {"cpu": entry}
+
+
+def test_table_older_formats_still_load(tmp_path):
+    # v1 flat (PR-1): suffixed shape keys -> tpu namespace
+    v1 = tmp_path / "v1.json"
+    v1.write_text(json.dumps(
+        {"512x512xb1_w16g32_float32_cpu": {"kernel": "ref", "us": 2.0}}))
+    t = AutotuneTable()
+    t.load(str(v1))
+    assert t.get("tpu", "512x512xb1_w16g32_float32")["kernel"] == "ref"
+    assert t.snapshot_calibration() == {}
+    # v2: namespaced tables, no programs/calibration sections
+    v2 = tmp_path / "v2.json"
+    v2.write_text(json.dumps({"format": 2, "tables": {
+        "cpu": {"k": {"kernel": "splitk", "us": 3.0}}}}))
+    t2 = AutotuneTable()
+    t2.load(str(v2))
+    assert t2.get("cpu", "k")["kernel"] == "splitk"
+    assert t2.snapshot_calibration() == {}
+    # v3 without a calibration section
+    v3 = tmp_path / "v3.json"
+    v3.write_text(json.dumps({"format": 3, "tables": {}, "programs": {
+        "cpu": {"p": {"mode": "fused", "n_launches": 1, "us": 4.0}}}}))
+    t3 = AutotuneTable()
+    t3.load(str(v3))
+    assert t3.get_program("cpu", "p")["mode"] == "fused"
+    assert t3.snapshot_calibration() == {}
+
+
+def test_table_unknown_sections_preserved(tmp_path):
+    """A table written by a NEWER repro survives a load/save cycle here."""
+    src = tmp_path / "newer.json"
+    future = {"v9_placements": {"cpu": {"whole": "section"}},
+              "notes": ["free-form"]}
+    src.write_text(json.dumps({
+        "format": 3,
+        "tables": {"cpu": {"k": {"kernel": "ref", "us": 1.0}}},
+        "programs": {},
+        "calibration": {"gpu": {"schema": 1, "constants": {}}},
+        **future,
+    }))
+    t = AutotuneTable()
+    t.load(str(src))
+    out = str(tmp_path / "resaved.json")
+    t.save(out)
+    doc = json.load(open(out))
+    for k, v in future.items():
+        assert doc[k] == v, k
+    assert doc["calibration"]["gpu"] == {"schema": 1, "constants": {}}
+    assert doc["tables"]["cpu"]["k"]["kernel"] == "ref"
+
+
+def test_concurrent_saves_never_corrupt(tmp_path):
+    """The satellite lock: concurrent CI legs saving one table must leave a
+    parseable document with every entry, and no stranded temp files."""
+    path = str(tmp_path / "shared.json")
+    table = AutotuneTable()
+    table.put_calibration("cpu", {"schema": 1, "constants": {}})
+    errs = []
+
+    def writer(i):
+        try:
+            table.put(f"ns{i}", f"key{i}", {"kernel": "ref", "us": float(i)})
+            for _ in range(5):
+                table.save(path)
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(8)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errs
+    doc = json.load(open(path))  # parses: never a truncated interleave
+    assert doc["format"] == 3
+    for i in range(8):
+        assert doc["tables"][f"ns{i}"][f"key{i}"]["us"] == float(i)
+    assert doc["calibration"]["cpu"]["schema"] == 1
+    assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")] == []
+
+
+# --------------------------------------------------------------------------
+# Dispatch integration: calibrated constants observably price decisions
+# --------------------------------------------------------------------------
+
+
+def _dispatch_once(M=2048, K=2048):
+    w = RNG.standard_normal((M, K)).astype(np.float32)
+    x = RNG.standard_normal((1, K)).astype(np.float32)
+    return dispatch.dispatch_gemv(
+        x, ops.pack_weight(w), policy=DispatchPolicy(backend="cpu"))
+
+
+def test_dispatch_counts_cost_model_source():
+    _dispatch_once()
+    stats = dispatch.dispatch_stats()["cost_model_source"]
+    assert stats["seed"] >= 1 and stats["calibrated"] == 0
+
+    seed = CPU.seed_cost_model
+    dispatch.autotune_table().put_calibration("cpu", {
+        "schema": 1,
+        "constants": seed.with_constants(
+            bandwidth_gbps=seed.bandwidth_gbps * 2).constants(),
+    })
+    dispatch.clear_plan_cache()
+    _dispatch_once()
+    stats = dispatch.dispatch_stats()["cost_model_source"]
+    assert stats["calibrated"] >= 1
+    assert CPU.cost_model_source == "calibrated"
+    assert CPU.cost_model.bandwidth_gbps == seed.bandwidth_gbps * 2
+
+    # clearing the table reverts the backend to its seed constants
+    dispatch.clear_autotune_table()
+    dispatch.clear_plan_cache()
+    assert CPU.cost_model_source == "seed"
+    _dispatch_once()
+    stats = dispatch.dispatch_stats()["cost_model_source"]
+    assert stats["seed"] >= 1 and stats["calibrated"] == 0
+
+
+def test_dispatch_ignores_invalid_calibration_entry():
+    dispatch.autotune_table().put_calibration(
+        "cpu", {"schema": 1, "constants": {"bogus_term": 1.0}})
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        _dispatch_once()
+    assert any("invalid calibration" in str(w.message) for w in caught)
+    stats = dispatch.dispatch_stats()["cost_model_source"]
+    assert stats["seed"] >= 1 and stats["calibrated"] == 0
+    assert CPU.cost_model_source == "seed"
+
+
+def test_calibration_survives_table_save_load_cycle(tmp_path):
+    """The acceptance lock: fitted constants round-trip the v3 table and
+    the RELOADING process prices with them."""
+    fit, records = _tiny_fit()
+    path = str(tmp_path / "fleet.json")
+    doc = artifact_doc(fit, records)
+    dispatch.autotune_table().put_calibration("cpu", table_entry(doc))
+    dispatch.save_autotune_table(path)
+
+    dispatch.clear_autotune_table()  # "new process"
+    dispatch.clear_plan_cache()
+    assert CPU.cost_model_source == "seed"
+    dispatch.load_autotune_table(path)
+    _dispatch_once()
+    assert dispatch.dispatch_stats()["cost_model_source"]["calibrated"] >= 1
+    assert CPU.cost_model.constants() == {
+        k: pytest.approx(v) for k, v in doc["constants"].items()}
+
+
+# --------------------------------------------------------------------------
+# End-to-end smoke: the one-command loop on the CPU backend
+# --------------------------------------------------------------------------
+
+
+def test_calibrate_backend_smoke_end_to_end(tmp_path):
+    doc = calibrate_backend("cpu", smoke=True, trials=2,
+                            out_dir=str(tmp_path))
+    try:
+        assert doc["schema"] == ARTIFACT_SCHEMA
+        assert os.path.exists(doc["path"])
+        assert doc["n_records"] >= 10
+        # all three program kinds were measured
+        kinds = {r["kind"] for r in doc["records"]}
+        assert {"single", "fused", "grouped", "ragged"} <= kinds
+        # the fit can only improve on the seed (monotone descent)
+        assert doc["mape"] <= doc["seed_mape"]
+        assert not doc["degenerate"]
+        assert CPU.cost_model_source == "calibrated"
+    finally:
+        CPU.reset_calibration()
+
+
+def test_run_sweep_smoke_covers_kernels():
+    records = run_sweep("cpu", smoke=True, trials=1)
+    kernels = {r.kernel for r in records if r.kind == "single"}
+    assert {"ref", "splitk", "quant"} <= kernels
+    assert all(len(r.trials_us) == 1 for r in records)
+    assert all(r.robust_us > 0 for r in records)
+    assert mape(CPU, CPU.seed_cost_model, records) > 0

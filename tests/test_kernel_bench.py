@@ -85,6 +85,51 @@ def test_moe_rows_ragged_planned(backend):
             assert r[f"model_us/{m}"] > 0
 
 
+def test_measured_rows_carry_prediction_fields(monkeypatch):
+    """Schema-4 satellite: every measured dispatch row doubles as a
+    model-error probe — predicted_us/<kern> and pred_over_measured/<kern>
+    ride along, plus the row-level cost_model_source tag."""
+    monkeypatch.setattr(kernel_bench, "DISPATCH_ARCHS", ("gemma3-1b",))
+    rows = kernel_bench.dispatch_rows(measure=True, backend_name="cpu")
+    fixed = kernel_bench.fixed_kernels("cpu")
+    measured_rows = [r for r in rows
+                     if r["M"] * r["K"] * 4 <= 256 * 2**20]
+    assert measured_rows, "no registry shape under the measurement byte cap"
+    for r in rows:
+        assert r["cost_model_source"] in ("seed", "calibrated")
+    for r in measured_rows:
+        for kern in ("auto",) + fixed:
+            assert r[f"measured_us/{kern}"] > 0
+            assert r[f"predicted_us/{kern}"] > 0
+            assert r[f"pred_over_measured/{kern}"] == pytest.approx(
+                r[f"predicted_us/{kern}"] / r[f"measured_us/{kern}"])
+
+
+def test_calibrate_cli_smoke(tmp_path):
+    """One-command acceptance path: kernel_bench --calibrate --smoke on the
+    CPU backend writes a schema-1 artifact whose fit improves on the seed
+    constants and lands a calibration section in the autotune table."""
+    out_dir = str(tmp_path / "artifacts")
+    table = str(tmp_path / "table.json")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, BENCH, "--calibrate", "--smoke", "--trials", "2",
+         "--backend", "cpu", "--out-dir", out_dir, "--table", table],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "calibrate/cpu:" in proc.stdout
+    doc = json.load(open(os.path.join(out_dir, "cpu.json")))
+    assert doc["schema"] == 1
+    assert doc["mape"] <= doc["seed_mape"]
+    assert doc["records"]
+    tdoc = json.load(open(table))
+    assert tdoc["format"] == 3
+    assert tdoc["calibration"]["cpu"]["constants"] == doc["constants"]
+
+
 def test_json_cli_output_parses(tmp_path):
     """Smoke test for the --json flag: run the CLI, parse the schema-3
     document (dispatch rows + program rows + moe rows)."""

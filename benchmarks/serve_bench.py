@@ -16,6 +16,9 @@ performance; the dispatch-mix and scheduling behavior are real.
     PYTHONPATH=src python benchmarks/serve_bench.py --policy gemv_aware
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
         PYTHONPATH=src python benchmarks/serve_bench.py --mesh 1x4 --smoke
+    PYTHONPATH=src python benchmarks/serve_bench.py \\
+        --trace shared-prefix --prefix-cache --smoke   # §12 hit-rate leg
+    PYTHONPATH=src python benchmarks/serve_bench.py --kv-store int8
 """
 
 from __future__ import annotations
@@ -38,9 +41,22 @@ def print_run(run: dict) -> None:
         if axes:
             shard_tag = " shards[" + " ".join(
                 f"{a}:{n}" for a, n in sorted(axes.items())) + "]"
+    prefix_tag = ""
+    pc = run.get("prefix_cache")
+    if pc:
+        hit = pc["ttft_hit_ms"].get("p50", float("nan"))
+        miss = pc["ttft_miss_ms"].get("p50", float("nan"))
+        prefix_tag = (
+            f" | prefix hit_rate={pc['hit_rate']:.2f} "
+            f"saved={pc['prefill_tokens_saved']}tok "
+            f"ttft(hit/miss) p50={hit:.1f}/{miss:.1f}ms"
+        )
+    store_tag = ""
+    if run.get("kv_store", "fp") != "fp":
+        store_tag = f" kv={run['kv_store']}"
     print(
         f"serve/{run['policy']} slots={run['batch_slots']} "
-        f"thresh={run['gemv_batch_threshold']}{mesh_tag}: "
+        f"thresh={run['gemv_batch_threshold']}{mesh_tag}{store_tag}: "
         f"completed={run['completed']} "
         f"ttft p50={ttft.get('p50', float('nan')):.1f}ms "
         f"p99={ttft.get('p99', float('nan')):.1f}ms | "
@@ -50,7 +66,7 @@ def print_run(run: dict) -> None:
         f"dispatch gemv={disp['gemv_path']} "
         f"matmul_fallback={disp['matmul_fallback']} "
         f"program_hits={disp['plan_cache']['program_hits']}"
-        f"{shard_tag}"
+        f"{shard_tag}{prefix_tag}"
     )
 
 
@@ -84,6 +100,18 @@ def main(argv=None) -> int:
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="split prompts longer than this many tokens into "
                          "one-chunk-per-step prefill splices")
+    ap.add_argument("--trace", default="uniform",
+                    choices=("uniform", "shared-prefix"),
+                    help="trace shape: uniform i.i.d. prompts, or the "
+                         "Zipf-tenant shared-prefix mixture (DESIGN.md §12)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="serve through the shared-prefix KV cache; runs "
+                         "then report hit-rate / prefill-tokens-saved / "
+                         "TTFT split")
+    ap.add_argument("--kv-store", default="fp",
+                    choices=("fp", "int8", "int4"),
+                    help="KV storage format (int8/int4: quantized pages + "
+                         "per-page scales, kernels.kv_quant)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace + slot count (CI leg)")
     ap.add_argument("--json", metavar="OUT", default=None,
@@ -95,7 +123,8 @@ def main(argv=None) -> int:
     if args.requests is not None:
         from repro.serving.bench import TraceConfig
 
-        base = TraceConfig.smoke() if args.smoke else TraceConfig()
+        base = (TraceConfig.smoke(kind=args.trace) if args.smoke
+                else TraceConfig(kind=args.trace))
         tcfg = TraceConfig(**{**base.__dict__, "n_requests": args.requests})
     doc = run_serve_trace(
         args.arch, policies=policies, smoke=args.smoke, seed=args.seed,
@@ -103,6 +132,8 @@ def main(argv=None) -> int:
         gemv_backend=args.backend,
         mesh_shape=parse_mesh(args.mesh) if args.mesh else None,
         prefill_chunk=args.prefill_chunk,
+        trace_kind=args.trace, prefix_cache=args.prefix_cache,
+        kv_store=args.kv_store,
         trace_config=tcfg, out=args.json,
     )
     for run in doc["runs"]:

@@ -232,6 +232,13 @@ def serve_cache_spec(
         if _divides(shape[3], model_n):
             spec[3] = "model"
         return P(*spec)
+    if name in ("k_scale", "v_scale"):
+        # quantized-page scales [L, B, S, Hkv]: heads or nothing — NEVER
+        # the generic branch below, which would pick the first divisible
+        # dim from axis 2 and shard the SEQUENCE axis (see docstring)
+        if _divides(shape[3], model_n):
+            spec[3] = "model"
+        return P(*spec)
     if len(shape) >= 3 and name != "pos":
         # recurrent state [L, B, channels...]: first divisible channel dim
         for d in range(2, len(shape)):
@@ -249,6 +256,47 @@ def plan_serve_cache(cache, mesh: Mesh, cfg: ModelConfig):
         return serve_cache_spec(mesh, cfg, np.shape(leaf), name)
 
     return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def segment_spec(
+    mesh: Mesh, cfg: ModelConfig, shape: tuple[int, ...], name: str, *,
+    kind: str = "kv",
+) -> P:
+    """Prefix-cache SEGMENT placement (DESIGN.md §12): the slot-cache
+    policy minus the batch axis.
+
+    A segment is a slot row's leading span pulled out of the serving
+    cache: positional leaves are ``[L, span, Hkv, hd]`` (scales
+    ``[L, span, Hkv]``), state snapshots ``[L, channels...]``.  Matching
+    the slot placement — heads (or state channels) on 'model', span NEVER
+    sharded — means gather/concatenate and ``splice_prefix`` are shard-
+    local: a cached segment splices back without any resharding transfer.
+    """
+    model_n = mesh.shape.get("model", 1)
+    spec: list[Any] = [None] * len(shape)
+    if model_n <= 1:
+        return P(*spec)
+    if kind == "kv":
+        # [L, span, H, hd] or [L, span, H]: heads (axis 2) or nothing
+        if len(shape) >= 3 and _divides(shape[2], model_n):
+            spec[2] = "model"
+        return P(*spec)
+    # state snapshot [L, channels...]: first divisible channel dim
+    for d in range(1, len(shape)):
+        if _divides(shape[d], model_n):
+            spec[d] = "model"
+            break
+    return P(*spec)
+
+
+def plan_segment(segment, mesh: Mesh, cfg: ModelConfig, *,
+                 kind: str = "kv"):
+    """PartitionSpec tree for one prefix-cache segment payload part."""
+    def f(path, leaf):
+        return segment_spec(mesh, cfg, np.shape(leaf), _path_str(path),
+                            kind=kind)
+
+    return jax.tree_util.tree_map_with_path(f, segment)
 
 
 def to_named(spec_tree, mesh: Mesh):

@@ -1,0 +1,110 @@
+"""Quantized KV-cache pages: int8 / packed-int4 storage with per-page scales.
+
+PIMnast's serving argument is bandwidth: every decode step streams the whole
+KV working set past the compute, so KV bytes are the capacity AND latency
+currency.  This module provides the page codec the serving cache uses to
+store K/V at 8 or 4 bits with an amax scale per (position, head) page —
+the same absmax scale machinery as :mod:`repro.kernels.quant_gemv` (which
+block-scales weights along K; here the "block" is one head's ``hd`` lane
+vector, the natural unit the attention read path consumes).
+
+Layout (one attention layer, slot-managed serving cache):
+
+  k / v:               [B, S, Hkv, hd]      int8   (int4: [B, S, Hkv, hd//2],
+                                                    two nibbles per byte
+                                                    along ``hd`` — the
+                                                    ``quant4_gemv`` packing)
+  k_scale / v_scale:   [B, S, Hkv]          float32 amax/qmax per page
+
+Dequantization happens on the decode read path (``layers.apply_attention``)
+right before ``attention_core``; writes quantize the fresh rope'd K/V page
+and store its scale alongside.  The codec is deterministic, so a segment
+quantized at prefill time and re-spliced from the prefix cache is
+bit-identical to re-prefilling under the same store — greedy token identity
+with the prefix cache on vs off holds even in int8/int4 mode.
+
+``fp`` (no quantization) stays the default everywhere; int8/int4 trade
+exactness for capacity, with per-family tolerances documented in
+DESIGN.md §12 and pinned by tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Storage modes for the serving KV cache.
+KV_STORES = ("fp", "int8", "int4")
+
+
+def validate_kv_store(store: str) -> str:
+    if store not in KV_STORES:
+        raise ValueError(
+            f"unknown kv_store {store!r}; expected one of {KV_STORES}")
+    return store
+
+
+def kv_store_bits(store: str) -> int | None:
+    """Bits per stored KV element (None for the fp escape hatch)."""
+    validate_kv_store(store)
+    return {"fp": None, "int8": 8, "int4": 4}[store]
+
+
+def stored_head_dim(store: str, hd: int) -> int:
+    """Last-dim width of a stored K/V leaf (int4 packs two per byte)."""
+    if store == "int4":
+        if hd % 2:
+            raise ValueError(f"int4 KV store needs an even head_dim, got {hd}")
+        return hd // 2
+    return hd
+
+
+def quantize_page(x: jnp.ndarray, bits: int):
+    """Quantize KV pages ``x: [..., hd]`` -> (codes int8, scale f32 [...]).
+
+    Symmetric absmax per page: ``scale = amax / qmax`` (1.0 for an all-zero
+    page so dequant stays exact there), codes rounded-to-nearest and
+    clipped.  ``bits == 4`` packs adjacent lanes (even index = low nibble)
+    into one int8 along the last dim — the ``quant4_gemv`` convention.
+    """
+    assert bits in (8, 4), bits
+    qmax = 127.0 if bits == 8 else 7.0
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -qmax, qmax).astype(
+        jnp.int8)
+    if bits == 4:
+        lo = q[..., 0::2]
+        hi = q[..., 1::2]
+        q = ((hi << 4) | (lo & 0xF)).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_page(q: jnp.ndarray, scale: jnp.ndarray, *, hd: int,
+                    out_dtype) -> jnp.ndarray:
+    """Inverse of :func:`quantize_page`: codes + scales -> [..., hd].
+
+    Packed int4 is detected from the last dim (``hd // 2``); the unpack
+    mirrors ``quant_gemv._quant4_kernel`` — arithmetic shifts recover the
+    signed nibbles, even lanes from the low nibble.
+    """
+    if q.shape[-1] != hd:
+        assert q.shape[-1] * 2 == hd, (q.shape, hd)
+        lo = jnp.right_shift(jnp.left_shift(q, 4), 4)  # sign-extend low
+        hi = jnp.right_shift(q, 4)                     # arithmetic: signed
+        q = jnp.stack([lo, hi], axis=-1).reshape(q.shape[:-1] + (hd,))
+    return (q.astype(jnp.float32) * scale[..., None]).astype(out_dtype)
+
+
+def roundtrip_error(x: jnp.ndarray, bits: int) -> float:
+    """Max abs reconstruction error of one quantize/dequantize pass (test
+    and documentation helper; the per-page bound is ``amax / (2 * qmax)``)."""
+    q, s = quantize_page(x, bits)
+    y = dequantize_page(q, s, hd=x.shape[-1], out_dtype=jnp.float32)
+    return float(jnp.max(jnp.abs(y - x.astype(jnp.float32))))
+
+
+def tree_bytes(tree) -> int:
+    """Total device bytes of a pytree of arrays (capacity accounting)."""
+    return int(sum(leaf.nbytes for leaf in jax.tree.leaves(tree)))

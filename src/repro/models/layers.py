@@ -165,7 +165,8 @@ def apply_attention(
     cache_kv: tuple[jnp.ndarray, jnp.ndarray] | None = None,
     cache_pos: jnp.ndarray | None = None,  # [] scalar write offset
     gemv=None,                             # DispatchPolicy for decode QKV
-) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray] | None]:
+    cache_scales: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+) -> tuple[jnp.ndarray, tuple | None]:
     """Self-attention with optional KV cache (decode).
 
     cache_kv: ([B, C, Hkv, D], [B, C, Hkv, D]) rolling caches. When given,
@@ -175,6 +176,15 @@ def apply_attention(
     projections run as ONE fused GEMV program (shared input vector, one
     kernel launch for the whole head group) instead of three einsums — the
     paper's IV-broadcast amortization at the decode hot path.
+
+    ``cache_scales`` switches the cache to the quantized KV store
+    (``repro.kernels.kv_quant``, DESIGN.md §12): ``cache_kv`` then holds
+    int8 codes (packed int4 when its last dim is ``D // 2``) and
+    ``cache_scales = (k_scale, v_scale)`` the per-(position, head) page
+    scales ``[B, C, Hkv]``.  Fresh K/V pages are quantized before the
+    write; the whole cache is dequantized right before ``attention_core``
+    (the read path pays the dequant, storage pays 1/4–1/8 the bytes).
+    The returned cache tuple is then ``(k, v, k_scale, v_scale)``.
     """
     B, S, d = x.shape
     if gemv is not None and S == 1 and gemv.fuse_programs:
@@ -218,12 +228,25 @@ def apply_attention(
     if cache_kv is not None:
         ck, cv = cache_kv
         cp = jnp.asarray(cache_pos)
+        if cache_scales is not None:
+            # Quantized KV store: encode the fresh pages, write codes and
+            # scales at the same per-slot offsets as the fp path.
+            from repro.kernels.kv_quant import dequantize_page, quantize_page
+
+            bits = 8 if ck.shape[-1] == k.shape[-1] else 4
+            qk, k_sc = quantize_page(k, bits)
+            qv, v_sc = quantize_page(v, bits)
+            writes = list(zip(cache_kv + cache_scales,
+                              (qk, qv, k_sc, v_sc)))
+        else:
+            writes = [(ck, k), (cv, v)]
         if cp.ndim == 0:
             # Lockstep scalar offset: every slot writes at the same position.
-            ck = jax.lax.dynamic_update_slice_in_dim(
-                ck, k.astype(ck.dtype), cache_pos, axis=1)
-            cv = jax.lax.dynamic_update_slice_in_dim(
-                cv, v.astype(cv.dtype), cache_pos, axis=1)
+            updated = [
+                jax.lax.dynamic_update_slice_in_dim(
+                    c, u.astype(c.dtype), cache_pos, axis=1)
+                for c, u in writes
+            ]
         else:
             # Per-slot position vector [B] (slot-managed cache, DESIGN.md
             # §8): each slot writes its new K/V at its own offset.
@@ -231,14 +254,22 @@ def apply_attention(
                 return jax.lax.dynamic_update_slice_in_dim(
                     c1, u1, p1, axis=0)
 
-            ck = jax.vmap(wr)(ck, k.astype(ck.dtype), cp)
-            cv = jax.vmap(wr)(cv, v.astype(cv.dtype), cp)
+            updated = [jax.vmap(wr)(c, u.astype(c.dtype), cp)
+                       for c, u in writes]
+        if cache_scales is not None:
+            ck, cv, ck_sc, cv_sc = updated
+            kf = dequantize_page(ck, ck_sc, hd=k.shape[-1], out_dtype=x.dtype)
+            vf = dequantize_page(cv, cv_sc, hd=v.shape[-1], out_dtype=x.dtype)
+            new_cache = (ck, cv, ck_sc, cv_sc)
+        else:
+            ck, cv = updated
+            kf, vf = ck, cv
+            new_cache = (ck, cv)
         kv_valid = cp + x.shape[1]
         out = attention_core(
-            q, ck, cv, q_positions=positions, kv_valid_len=kv_valid,
+            q, kf, vf, q_positions=positions, kv_valid_len=kv_valid,
             window=window, causal=True,
         )
-        new_cache = (ck, cv)
     else:
         out = attention_core(
             q, k, v, q_positions=positions, kv_valid_len=None,

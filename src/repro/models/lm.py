@@ -154,7 +154,8 @@ def init_lm(key, cfg: ModelConfig) -> Params:
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=None, *, per_slot_pos: bool = False) -> Params:
+               dtype=None, *, per_slot_pos: bool = False,
+               kv_store: str = "fp") -> Params:
     """Decode state for every family; entries have a leading layer dim so the
     layer scan threads them as xs/ys.
 
@@ -163,14 +164,35 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     lockstep scalar — the serving subsystem's slot-managed layout
     (DESIGN.md §8), which lets heterogeneous prompt lengths decode
     correctly in one batch.  ``forward`` accepts either form.
+
+    ``kv_store`` selects the attention-KV storage format (DESIGN.md §12):
+    ``"fp"`` (default) keeps full-precision leaves; ``"int8"`` / ``"int4"``
+    store quantized pages plus per-(position, head) ``k_scale`` /
+    ``v_scale`` leaves (``repro.kernels.kv_quant``), dequantized on the
+    attention read path.  Recurrent state (rwkv / mamba) always stays fp —
+    it is O(1) per slot, not the capacity term.
     """
+    from repro.kernels.kv_quant import stored_head_dim, validate_kv_store
+
+    validate_kv_store(kv_store)
     dtype = dtype or _dtype(cfg)
     n, d, hd = cfg.n_layers, cfg.d_model, cfg.hd
     pos_shape = (batch,) if per_slot_pos else ()
     cache: Params = {"pos": jnp.zeros(pos_shape, jnp.int32)}
     if cfg.family != "ssm":
-        cache["k"] = jnp.zeros((n, batch, max_len, cfg.n_kv_heads, hd), dtype)
-        cache["v"] = jnp.zeros((n, batch, max_len, cfg.n_kv_heads, hd), dtype)
+        if kv_store == "fp":
+            kv_shape = (n, batch, max_len, cfg.n_kv_heads, hd)
+            cache["k"] = jnp.zeros(kv_shape, dtype)
+            cache["v"] = jnp.zeros(kv_shape, dtype)
+        else:
+            hd_s = stored_head_dim(kv_store, hd)
+            kv_shape = (n, batch, max_len, cfg.n_kv_heads, hd_s)
+            sc_shape = (n, batch, max_len, cfg.n_kv_heads)
+            cache["k"] = jnp.zeros(kv_shape, jnp.int8)
+            cache["v"] = jnp.zeros(kv_shape, jnp.int8)
+            # all-zero pages round-trip exactly under scale 1.0
+            cache["k_scale"] = jnp.ones(sc_shape, jnp.float32)
+            cache["v_scale"] = jnp.ones(sc_shape, jnp.float32)
     if cfg.family == "ssm":
         H, hdr = S.rwkv_heads(cfg)
         cache["rwkv_s"] = jnp.zeros((n, batch, H, hdr, hdr), jnp.float32)
@@ -270,7 +292,7 @@ def prepack_decode_params(params: Params, cfg: ModelConfig,
 
 def _self_block(
     p: Params, x, cfg: ModelConfig, positions, window,
-    cache_kv, cache_pos, mamba_state=None, gemv=None,
+    cache_kv, cache_pos, mamba_state=None, gemv=None, cache_scales=None,
 ):
     """attention (+ parallel mamba) + FFN/MoE with pre-norms."""
     aux = jnp.zeros((), jnp.float32)
@@ -278,6 +300,7 @@ def _self_block(
     attn_out, new_kv = L.apply_attention(
         p["attn"], h, cfg, positions=positions, window=window,
         cache_kv=cache_kv, cache_pos=cache_pos, gemv=gemv,
+        cache_scales=cache_scales,
     )
     new_state = {}
     if cfg.parallel_ssm:
@@ -464,13 +487,17 @@ def _forward_flat(params, cfg, x, positions, ctx, cache, is_global, remat,
             return (x, aux), (new_cache_l if decode else {})
         window = _window_for(cfg, flag_global)
         cache_kv = (cache_l["k"], cache_l["v"]) if decode else None
+        cache_scales = (
+            (cache_l["k_scale"], cache_l["v_scale"])
+            if decode and "k_scale" in cache_l else None
+        )
         cache_pos = cache["pos"] if decode else None
         mamba_state = None
         if cfg.parallel_ssm and decode:
             mamba_state = (cache_l["mamba_conv"], cache_l["mamba_h"])
         x, new_kv, new_state, aux_l = _self_block(
             pl, x, cfg, positions, window, cache_kv, cache_pos,
-            mamba_state=mamba_state, gemv=gemv,
+            mamba_state=mamba_state, gemv=gemv, cache_scales=cache_scales,
         )
         if ctx is not None and "cross" in pl:  # whisper decoder
             h = L.apply_norm(pl["ln_cross"], x, cfg)
@@ -478,7 +505,10 @@ def _forward_flat(params, cfg, x, positions, ctx, cache, is_global, remat,
         new_cache_l = {}
         if decode:
             if new_kv is not None:
-                new_cache_l["k"], new_cache_l["v"] = new_kv
+                new_cache_l["k"], new_cache_l["v"] = new_kv[0], new_kv[1]
+                if len(new_kv) == 4:  # quantized store: scale leaves ride
+                    new_cache_l["k_scale"] = new_kv[2]
+                    new_cache_l["v_scale"] = new_kv[3]
             new_cache_l.update(new_state)
         x = constrain(x, ("batch", None, None))
         return (x, aux + aux_l), new_cache_l
@@ -537,11 +567,18 @@ def _forward_grouped(params, cfg, x, positions, ctx, cache, remat,
     g = cfg.cross_attn_every
     decode = cache is not None
     n_groups = cfg.n_layers // g
+    # cache leaf names threaded through the group scan (k/v plus the
+    # quantized store's scale leaves when present)
+    kv_names = (
+        [n for n in ("k", "v", "k_scale", "v_scale") if n in cache]
+        if decode else []
+    )
 
-    def layer_step(x, pl, cache_kv, cache_pos, cross):
+    def layer_step(x, pl, cache_kv, cache_pos, cross, cache_scales=None):
         window = 0
         x, new_kv, _, aux = _self_block(
             pl, x, cfg, positions, window, cache_kv, cache_pos, gemv=gemv,
+            cache_scales=cache_scales,
         )
         if cross:
             h = L.apply_norm(pl["ln_cross"], x, cfg)
@@ -553,30 +590,42 @@ def _forward_grouped(params, cfg, x, positions, ctx, cache, remat,
     def body(carry, xs):
         x, aux = carry
         pg, cache_g = xs  # params for the group; cache [g, ...] slices
-        new_ks, new_vs = [], []
+        new_leaves = {n: [] for n in kv_names}
+
+        def take(nkv):
+            for n, leaf in zip(kv_names, nkv):
+                new_leaves[n].append(leaf)
+
+        def args_for(i):
+            if not decode:
+                return None, None
+            ckv = (cache_g["k"][i], cache_g["v"][i])
+            cscl = (
+                (cache_g["k_scale"][i], cache_g["v_scale"][i])
+                if "k_scale" in cache_g else None
+            )
+            return ckv, cscl
+
         for i in range(g - 1):
             pl = jax.tree.map(lambda a: a[i], pg["plain"])
-            ckv = (
-                (cache_g["k"][i], cache_g["v"][i]) if decode else None
-            )
+            ckv, cscl = args_for(i)
             x, nkv, a = layer_step(
-                x, pl, ckv, cache["pos"] if decode else None, cross=False
+                x, pl, ckv, cache["pos"] if decode else None, cross=False,
+                cache_scales=cscl,
             )
             aux = aux + a
             if decode:
-                new_ks.append(nkv[0]); new_vs.append(nkv[1])
-        ckv = (
-            (cache_g["k"][g - 1], cache_g["v"][g - 1]) if decode else None
-        )
+                take(nkv)
+        ckv, cscl = args_for(g - 1)
         x, nkv, a = layer_step(
             x, pg["cross_layer"], ckv, cache["pos"] if decode else None,
-            cross=True,
+            cross=True, cache_scales=cscl,
         )
         aux = aux + a
         if decode:
-            new_ks.append(nkv[0]); new_vs.append(nkv[1])
+            take(nkv)
             new_cache_g = {
-                "k": jnp.stack(new_ks), "v": jnp.stack(new_vs)
+                n: jnp.stack(new_leaves[n]) for n in kv_names
             }
         else:
             new_cache_g = {}
@@ -585,19 +634,18 @@ def _forward_grouped(params, cfg, x, positions, ctx, cache, remat,
     if remat:
         body = jax.checkpoint(body)
 
+    def grouped_cache():
+        return {n: cache[n].reshape((n_groups, g) + cache[n].shape[1:])
+                for n in kv_names}
+
     if cfg.unroll_layers:
         carry = (x, jnp.zeros((), jnp.float32))
         new_groups = []
         for gi in range(n_groups):
             pg = jax.tree.map(lambda a: a[gi], params["groups"])
             if decode:
-                kc = cache["k"].reshape(
-                    (n_groups, g) + cache["k"].shape[1:]
-                )[gi]
-                vc = cache["v"].reshape(
-                    (n_groups, g) + cache["v"].shape[1:]
-                )[gi]
-                carry, nc = body(carry, (pg, {"k": kc, "v": vc}))
+                cg = {n: leaf[gi] for n, leaf in grouped_cache().items()}
+                carry, nc = body(carry, (pg, cg))
                 new_groups.append(nc)
             else:
                 carry, _ = body(carry, (pg, None))
@@ -605,22 +653,18 @@ def _forward_grouped(params, cfg, x, positions, ctx, cache, remat,
         if decode:
             stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *new_groups)
             new_cache = {
-                "k": stacked["k"].reshape(cache["k"].shape),
-                "v": stacked["v"].reshape(cache["v"].shape),
+                n: stacked[n].reshape(cache[n].shape) for n in kv_names
             }
             return x, new_cache, aux
         return x, None, aux
 
     if decode:
-        kc = cache["k"].reshape((n_groups, g) + cache["k"].shape[1:])
-        vc = cache["v"].reshape((n_groups, g) + cache["v"].shape[1:])
         (x, aux), new_c = jax.lax.scan(
             body, (x, jnp.zeros((), jnp.float32)),
-            (params["groups"], {"k": kc, "v": vc}),
+            (params["groups"], grouped_cache()),
         )
         new_cache = {
-            "k": new_c["k"].reshape(cache["k"].shape),
-            "v": new_c["v"].reshape(cache["v"].shape),
+            n: new_c[n].reshape(cache[n].shape) for n in kv_names
         }
         return x, new_cache, aux
     (x, aux), _ = jax.lax.scan(

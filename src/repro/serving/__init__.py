@@ -5,6 +5,9 @@
 (admission policies + backpressure + deadlines), :mod:`~repro.serving.metrics`
 (TTFT / per-token-latency / dispatcher-counter telemetry), and
 :mod:`~repro.serving.sampling` (greedy-compatible temperature/top-k/top-p).
+:mod:`~repro.serving.prefix_cache` adds opt-in shared-prefix KV reuse
+(radix index over refcounted segments, DESIGN.md §12) with quantized KV
+storage underneath (``kv_store="int8"``/``"int4"``).
 :mod:`~repro.serving.bench` drives a synthetic multi-tenant trace over it.
 """
 
@@ -16,6 +19,11 @@ from repro.serving.engine import (  # noqa: F401
 )
 from repro.serving.kv_cache import SlotKVCache  # noqa: F401
 from repro.serving.metrics import Histogram, ServingMetrics  # noqa: F401
+from repro.serving.prefix_cache import (  # noqa: F401
+    PrefixCache,
+    PrefixCacheConfig,
+    prefix_cacheable,
+)
 from repro.serving.sampling import (  # noqa: F401
     GREEDY,
     SamplingParams,

@@ -39,7 +39,13 @@ import numpy as np
 # v3: ragged MoE serving — per-run metrics docs carry the expert_load /
 # program_fallbacks dispatch counters and the derived expert_balance
 # summary (metrics schema v2, DESIGN.md §10).
-SCHEMA_VERSION = 3
+# v4: shared-prefix serving (DESIGN.md §12) — the trace config carries the
+# ``kind`` / tenant-mixture fields, per-run docs carry ``kv_store`` and
+# (with the prefix cache on) the ``prefix_index`` segment-store stats plus
+# the metrics doc's ``prefix_cache`` section (metrics schema v3).
+SCHEMA_VERSION = 4
+
+TRACE_KINDS = ("uniform", "shared-prefix")
 
 
 @dataclass(frozen=True)
@@ -50,11 +56,36 @@ class TraceConfig:
     max_new_range: tuple[int, int] = (4, 12)
     eos_ids: tuple[int, ...] = ()   # tokenizer-aware stop set (empty: none)
     seed: int = 0
+    # "uniform": i.i.d. random prompts (the pre-§12 trace).
+    # "shared-prefix": the multi-tenant mixture the prefix cache exists
+    # for — each tenant owns one seeded system-prompt prefix (length drawn
+    # from prefix_len_range), tenants are picked Zipf(zipf_a) per request
+    # (a few hot tenants dominate, the realistic skew), and the prompt is
+    # that shared prefix plus a private suffix (prompt_len_range).
+    kind: str = "uniform"
+    n_tenants: int = 4
+    zipf_a: float = 1.5             # tenant-popularity skew exponent
+    prefix_len_range: tuple[int, int] = (8, 16)
+
+    def __post_init__(self):
+        if self.kind not in TRACE_KINDS:
+            raise ValueError(
+                f"unknown trace kind {self.kind!r}; "
+                f"expected one of {TRACE_KINDS}")
 
     @classmethod
-    def smoke(cls) -> "TraceConfig":
+    def smoke(cls, **kw) -> "TraceConfig":
+        if kw.get("kind") == "shared-prefix":
+            # low arrival rate on purpose: with no queue backlog, TTFT is
+            # dominated by prefill work, so the hit/miss TTFT split the CI
+            # leg asserts reflects the skipped prefix — not queueing noise
+            base = dict(n_requests=16, arrival_rate=0.6,
+                        prompt_len_range=(2, 6), max_new_range=(3, 5),
+                        n_tenants=3, prefix_len_range=(16, 24))
+            base.update(kw)
+            return cls(**base)
         return cls(n_requests=10, arrival_rate=4.0,
-                   prompt_len_range=(2, 10), max_new_range=(3, 5))
+                   prompt_len_range=(2, 10), max_new_range=(3, 5), **kw)
 
 
 def build_trace(tcfg: TraceConfig, vocab: int,
@@ -65,16 +96,33 @@ def build_trace(tcfg: TraceConfig, vocab: int,
     max_new_tokens, the synthetic-ids default)."""
     lo, hi = tcfg.prompt_len_range
     nlo, nhi = tcfg.max_new_range
+    prefixes, weights = [], None
+    if tcfg.kind == "shared-prefix":
+        plo, phi = tcfg.prefix_len_range
+        prefixes = [
+            rng.integers(0, vocab,
+                         int(rng.integers(plo, phi + 1))).astype(np.int32)
+            for _ in range(tcfg.n_tenants)
+        ]
+        # truncated Zipf over tenant ranks: a few hot system prompts
+        w = 1.0 / np.arange(1, tcfg.n_tenants + 1) ** tcfg.zipf_a
+        weights = w / w.sum()
     t = 0.0
     out = []
     for i in range(tcfg.n_requests):
         t += rng.exponential(1.0 / tcfg.arrival_rate)
         plen = int(rng.integers(lo, hi + 1))
+        prompt = rng.integers(0, vocab, plen).astype(np.int32)
+        tenant = None
+        if tcfg.kind == "shared-prefix":
+            tenant = int(rng.choice(tcfg.n_tenants, p=weights))
+            prompt = np.concatenate([prefixes[tenant], prompt])
         out.append({
             "arrival_step": int(t),
-            "prompt": rng.integers(0, vocab, plen).astype(np.int32),
+            "prompt": prompt,
             "max_new_tokens": int(rng.integers(nlo, nhi + 1)),
             "eos_ids": tuple(tcfg.eos_ids),
+            "tenant": tenant,
         })
     return out
 
@@ -83,6 +131,7 @@ def run_policy(cfg, params, policy: str, trace: list[dict], *,
                batch_slots: int, max_len: int, gemv_batch_threshold: int,
                gemv_backend: str | None = None, max_queue: int = 0,
                mesh=None, prefill_chunk: int | None = None,
+               prefix_cache=False, kv_store: str = "fp",
                max_iters: int = 5000) -> dict:
     """Serve one trace under one scheduler policy; returns the metrics doc
     (per-step snapshots dropped — aggregates only) tagged with the run
@@ -98,6 +147,7 @@ def run_policy(cfg, params, policy: str, trace: list[dict], *,
         gemv_batch_threshold=gemv_batch_threshold,
         gemv_backend=gemv_backend, scheduler=policy, max_queue=max_queue,
         mesh=mesh, prefill_chunk=prefill_chunk,
+        prefix_cache=prefix_cache, kv_store=kv_store,
     )
     pending = [
         Request(rid=i, prompt=t["prompt"],
@@ -132,6 +182,9 @@ def run_policy(cfg, params, policy: str, trace: list[dict], *,
         total_generated=sum(len(r.generated) for r in done),
         mesh=(None if mesh is None
               else {k: int(v) for k, v in mesh.shape.items()}),
+        kv_store=kv_store,
+        prefix_index=(eng.prefix.stats() if eng.prefix is not None
+                      else None),
     )
     return doc
 
@@ -147,6 +200,9 @@ def run_serve_trace(
     gemv_backend: str | None = None,
     mesh_shape: tuple[int, int] | None = None,
     prefill_chunk: int | None = None,
+    trace_kind: str = "uniform",
+    prefix_cache=False,
+    kv_store: str = "fp",
     trace_config: TraceConfig | None = None,
     out: str | None = None,
 ) -> dict:
@@ -163,6 +219,13 @@ def run_serve_trace(
     devices (forced-host-platform in CI: ``XLA_FLAGS=--xla_force_host_
     platform_device_count=N``); every run then records the mesh and the
     per-shard dispatch stats.
+
+    ``trace_kind="shared-prefix"`` switches to the Zipf-tenant mixture
+    (:class:`TraceConfig`); with ``prefix_cache=True`` every run serves it
+    through the shared-prefix subsystem (DESIGN.md §12) and its doc
+    carries the hit-rate / prefill-tokens-saved / TTFT-split evidence the
+    ``prefix-cache-smoke`` CI leg asserts.  ``kv_store`` selects the KV
+    storage format (fp / int8 / int4) for every run.
     """
     from repro.configs.registry import get_config
     from repro.models import lm
@@ -177,9 +240,9 @@ def run_serve_trace(
     if smoke:
         batch_slots = min(batch_slots, 4)
         gemv_batch_threshold = min(gemv_batch_threshold, 2)
-        tcfg = trace_config or TraceConfig.smoke()
+        tcfg = trace_config or TraceConfig.smoke(kind=trace_kind)
     else:
-        tcfg = trace_config or TraceConfig()
+        tcfg = trace_config or TraceConfig(kind=trace_kind)
     tcfg = TraceConfig(**{**tcfg.__dict__, "seed": seed})
     rng = np.random.default_rng(tcfg.seed)
     trace = build_trace(tcfg, cfg.vocab, rng)
@@ -188,7 +251,8 @@ def run_serve_trace(
                    max_len=max_len,
                    gemv_batch_threshold=gemv_batch_threshold,
                    gemv_backend=gemv_backend, mesh=mesh,
-                   prefill_chunk=prefill_chunk)
+                   prefill_chunk=prefill_chunk,
+                   prefix_cache=prefix_cache, kv_store=kv_store)
         for policy in policies
     ]
     doc = {
@@ -198,13 +262,22 @@ def run_serve_trace(
         "mesh": (None if mesh is None
                  else {k: int(v) for k, v in mesh.shape.items()}),
         "trace": {
+            "kind": tcfg.kind,
             "n_requests": tcfg.n_requests,
             "arrival_rate": tcfg.arrival_rate,
             "prompt_len_range": list(tcfg.prompt_len_range),
             "max_new_range": list(tcfg.max_new_range),
             "eos_ids": list(tcfg.eos_ids),
             "seed": tcfg.seed,
+            "n_tenants": (tcfg.n_tenants
+                          if tcfg.kind == "shared-prefix" else None),
+            "zipf_a": (tcfg.zipf_a
+                       if tcfg.kind == "shared-prefix" else None),
+            "prefix_len_range": (list(tcfg.prefix_len_range)
+                                 if tcfg.kind == "shared-prefix" else None),
         },
+        "prefix_cache": bool(prefix_cache),
+        "kv_store": kv_store,
         "runs": runs,
     }
     if out:

@@ -17,7 +17,23 @@
   / throughput histograms plus per-step GEMV-dispatcher counter snapshots,
   exportable as a schema-versioned JSON document;
 * :mod:`~repro.serving.sampling` — temperature/top-k/top-p sampling,
-  greedy-compatible (the default stays exact argmax).
+  greedy-compatible (the default stays exact argmax);
+* :class:`~repro.serving.prefix_cache.PrefixCache` (opt-in,
+  ``prefix_cache=True``) — shared-prefix KV reuse (DESIGN.md §12): at
+  admission the engine matches the request's longest cached prefix,
+  splices the matched segments into the slot, and prefills ONLY the
+  private tail through the chunked-prefill continuation seam — the
+  matched prefill GEMVs never run.  Prefilled KV is filed back into the
+  radix index (including at preemption, so a readmitted request re-
+  prefills only its generated tail); segments are refcount-pinned while
+  a slot uses them and LRU-evicted under capacity pressure.  Encoder /
+  cross-attention families (whisper, llama-vision) are gated off —
+  their KV folds in per-request modality features, so token-keyed reuse
+  would be unsound.  ``kv_store="int8"`` (``"int4"`` behind the same
+  flag) stores KV as quantized pages + per-(position, head) scales
+  (``kernels.kv_quant``), multiplying the slots a memory budget holds;
+  greedy token identity with the prefix cache on vs off holds in every
+  store format because the codec is deterministic.
 
 Decode-time matmuls are where the paper's technique lives: with the decode
 batch <= ``gemv_batch_threshold`` the projections route through the unified
@@ -55,8 +71,12 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.kernels.dispatch import DispatchPolicy
 from repro.models import lm
-from repro.serving.kv_cache import SlotKVCache
+from repro.kernels.kv_quant import validate_kv_store
+from repro.serving.kv_cache import POSITIONAL_LEAVES, SlotKVCache
 from repro.serving.metrics import ServingMetrics
+from repro.serving.prefix_cache import (
+    PrefixCache, PrefixCacheConfig, prefix_cacheable,
+)
 from repro.serving.sampling import SamplingParams, request_rng, sample_token
 from repro.serving.scheduler import QueueFull, Scheduler, SchedulerConfig
 
@@ -87,6 +107,9 @@ class Request:
     evictions: int = 0              # times this request lost its slot
     first_token_time: float | None = None
     finish_time: float | None = None
+    # Prefix-cache outcome of the FIRST admission (None: engine ran
+    # without a prefix cache) — keys the TTFT hit/miss split.
+    prefix_hit: bool | None = None
 
     def stop_set(self) -> frozenset[int]:
         """The effective stop-token set (``eos_ids`` over the ``eos_id``
@@ -160,6 +183,8 @@ class Engine:
                  metrics: ServingMetrics | None = None,
                  mesh=None,
                  prefill_chunk: int | None = None,
+                 prefix_cache=None,
+                 kv_store: str = "fp",
                  clock=time.monotonic):
         self.cfg = cfg
         self.slots = batch_slots
@@ -167,6 +192,7 @@ class Engine:
         self.clock = clock
         self.mesh = mesh
         self.prefill_chunk = prefill_chunk
+        self.kv_store = validate_kv_store(kv_store)
         model_shards = 1
         if mesh is not None:
             from repro.launch.mesh import model_axis_size
@@ -225,7 +251,32 @@ class Engine:
                 moe_top_k=(cfg.moe.top_k if cfg.moe is not None else 1),
             ))
         self.metrics = metrics or ServingMetrics(clock=clock)
-        self.kv = SlotKVCache(cfg, batch_slots, max_len, mesh=mesh)
+        self.kv = SlotKVCache(cfg, batch_slots, max_len, mesh=mesh,
+                              kv_store=kv_store)
+        # Shared-prefix KV reuse (opt-in; class docstring / DESIGN.md §12).
+        # ``prefix_cache`` accepts True (default config), a
+        # PrefixCacheConfig, or a prebuilt PrefixCache; encoder /
+        # cross-attention families silently stay uncached (their KV is not
+        # a pure function of the token prefix).
+        self.prefix: PrefixCache | None = None
+        if prefix_cache and prefix_cacheable(cfg):
+            if isinstance(prefix_cache, PrefixCache):
+                self.prefix = prefix_cache
+            else:
+                has_state = any(
+                    name != "pos" and name not in POSITIONAL_LEAVES
+                    and leaf.ndim > 1
+                    for name, leaf in self.kv.cache.items())
+                self.prefix = PrefixCache(
+                    prefix_cache if isinstance(prefix_cache,
+                                               PrefixCacheConfig) else None,
+                    has_state=has_state,
+                    placer=self._segment_placer() if mesh is not None
+                    else None,
+                )
+            # Admission prices a cached prefix as near-zero prefill: sjf /
+            # gemv_aware sort by the TAIL the request would actually run.
+            self.scheduler.prefill_cost = self._prefill_cost
         self.active: dict[int, Request] = {}   # slot -> request
         # slot -> [request, tokens spliced so far] (chunked prefill in
         # flight: the slot is alloc'd but not yet decoding)
@@ -305,6 +356,62 @@ class Engine:
                 (b, self.cfg.vision_tokens, self.cfg.d_model),
                 dtype=np.float32))
         return extra
+
+    # -- prefix-cache integration (DESIGN.md §12) ----------------------------
+
+    def _segment_placer(self):
+        """Sharded mode: place segment payloads like the slot cache (heads
+        on 'model'), so gather/splice never reshards mid-flight."""
+        from repro.distributed import sharding as shd
+
+        def placer(tree, kind):
+            if not tree:
+                return tree
+            spec = shd.plan_segment(tree, self.mesh, self.cfg, kind=kind)
+            return jax.device_put(tree, shd.to_named(spec, self.mesh))
+
+        return placer
+
+    def _prefill_cost(self, r: Request) -> int:
+        """Prefill tokens this request would ACTUALLY run: pending minus
+        the cached prefix (scheduler ordering hook — a pure probe)."""
+        toks = self._pending_tokens(r)
+        return max(1, len(toks) - self.prefix.match_len(toks))
+
+    def _prefix_match(self, r: Request):
+        """Admission-time lookup; records hit/miss metrics and pins the
+        request's first-admission outcome for the TTFT split."""
+        m = self.prefix.match(self._pending_tokens(r))
+        if r.prefix_hit is None:
+            r.prefix_hit = m is not None
+        self.metrics.prefix_lookup(m is not None,
+                                   m.length if m is not None else 0)
+        return m
+
+    def _admit_prefix_hit(self, r: Request, m) -> None:
+        """The hit fast path: pin the matched segments, splice them into a
+        fresh slot, and hand the PRIVATE TAIL to the chunked-prefill
+        continuation seam — the matched prefill GEMVs never run."""
+        slot = self.kv.alloc()
+        self.prefix.acquire(m)
+        # the pin travels with the slot (slot_meta survives defrag) and is
+        # dropped in _release_prefix on finish/preemption
+        self.kv.slot_meta[slot]["prefix_match"] = m
+        self.kv.splice_prefix(slot, self.prefix.gather(m), m.length)
+        self._prefilling[slot] = [r, m.length]
+
+    def _prefix_insert(self, slot: int, tokens: np.ndarray) -> None:
+        """File a slot's freshly prefilled KV into the radix index."""
+        if self.prefix is None or len(tokens) == 0:
+            return
+        self.prefix.insert(tokens,
+                           self.kv.extract_prefix(slot, len(tokens)))
+
+    def _release_prefix(self, slot: int) -> None:
+        """Unpin the segments a slot acquired at admission (before free)."""
+        m = self.kv.slot_meta.get(slot, {}).pop("prefix_match", None)
+        if m is not None and self.prefix is not None:
+            self.prefix.release(m)
 
     # -- back-compat views ---------------------------------------------------
 
@@ -387,14 +494,26 @@ class Engine:
             for r in admitted:
                 r.admit_seq = self._admit_seq
                 self._admit_seq += 1
+            misses = admitted
+            if self.prefix is not None:
+                # prefix hits splice their cached segments and join the
+                # chunked-prefill continuation with only the private tail
+                # left to run; misses take the normal prefill paths below
+                misses = []
+                for r in admitted:
+                    m = self._prefix_match(r)
+                    if m is not None:
+                        self._admit_prefix_hit(r, m)
+                    else:
+                        misses.append(r)
             if self.prefill_chunk:
-                chunked = [r for r in admitted
+                chunked = [r for r in misses
                            if len(self._pending_tokens(r))
                            > self.prefill_chunk]
             else:
                 chunked = []
             chunked_ids = {id(r) for r in chunked}
-            plain = [r for r in admitted if id(r) not in chunked_ids]
+            plain = [r for r in misses if id(r) not in chunked_ids]
             if plain:
                 finished.extend(self._prefill(plain))
             for r in chunked:
@@ -456,11 +575,18 @@ class Engine:
         if self._prefilling:
             slot = max(self._prefilling,
                        key=lambda s: self._prefilling[s][0].admit_seq)
-            r = self._prefilling.pop(slot)[0]
+            r, valid = self._prefilling.pop(slot)
         else:
             slot = max(self.active,
                        key=lambda s: self.active[s].admit_seq)
             r = self.active.pop(slot)
+            valid = int(self.kv.kv_valid_len()[slot])
+        # File the victim's computed KV into the prefix cache BEFORE the
+        # slot is freed: readmission then matches it and re-prefills only
+        # the tokens generated after this point (the pre-§12 engine threw
+        # the whole stream's prefill away on every eviction).
+        self._prefix_insert(slot, self._pending_tokens(r)[:valid])
+        self._release_prefix(slot)
         self.kv.free(slot)
         r.slot = -1
         r.evictions += 1
@@ -499,13 +625,16 @@ class Engine:
         # batch-pad rows reuse the first slot's modality features
         row_idx = slots + [slots[0]] * (nb - len(wave))
         extra = {k: v[jnp.asarray(row_idx)] for k, v in self._extra.items()}
-        sub = lm.init_cache(self.cfg, nb, self.max_len, per_slot_pos=True)
+        sub = lm.init_cache(self.cfg, nb, self.max_len, per_slot_pos=True,
+                            kv_store=self.kv_store)
         with self._mesh_ctx():
             last, sub = self._jit_prefill(
                 self.params, jnp.asarray(tokens), jnp.asarray(lens), sub,
                 extra,
             )
         self.kv.splice(sub, slots, lengths)
+        for slot, t in zip(slots, toks):
+            self._prefix_insert(slot, t)
         last_np = np.asarray(last)
         now = self.clock()
         finished = []
@@ -522,10 +651,13 @@ class Engine:
         the whole step); the final chunk samples the first token and moves
         the request into the decode set."""
         finished = []
+        # prefix-hit tails ride this seam even when chunking is off
+        # (prefill_chunk=None): one un-split chunk covers the whole tail
+        chunk_limit = self.prefill_chunk or self.max_len
         for slot in sorted(self._prefilling):
             req, consumed = self._prefilling[slot]
             toks = self._pending_tokens(req)
-            chunk = toks[consumed:consumed + self.prefill_chunk]
+            chunk = toks[consumed:consumed + chunk_limit]
             c = len(chunk)
             if self.cfg.family == "ssm" or self.cfg.parallel_ssm:
                 cpad = c  # exact: no pads through the recurrence
@@ -534,14 +666,14 @@ class Engine:
                 # update starts at ``consumed``, and an over-long pad would
                 # make dynamic_update_slice CLAMP the start index backwards,
                 # silently overwriting valid KV from earlier chunks
-                cpad = max(min(_next_pow2(c), self.prefill_chunk,
+                cpad = max(min(_next_pow2(c), chunk_limit,
                                self.max_len - consumed), c)
             tokens = np.zeros((1, cpad), np.int32)
             tokens[0, :c] = chunk
             # first chunk starts from a fresh b=1 cache; later chunks
             # continue from the slot's own row (pos = tokens spliced so far)
             sub = (lm.init_cache(self.cfg, 1, self.max_len,
-                                 per_slot_pos=True)
+                                 per_slot_pos=True, kv_store=self.kv_store)
                    if consumed == 0 else self.kv.slot_view(slot))
             extra1 = {k: v[slot:slot + 1] for k, v in self._extra.items()}
             with self._mesh_ctx():
@@ -553,8 +685,16 @@ class Engine:
             self._prefilling[slot][1] = consumed + c
             self.metrics.prefill_chunk(c)
             if consumed + c < len(toks):
+                # State-carrying families can only resume from a snapshot,
+                # and edge SPLITS can't create one mid-edge — so chunk
+                # boundaries are where their shareable boundaries come
+                # from: checkpoint the state each chunk.  Pure-KV families
+                # skip this (they match mid-edge anyway).
+                if self.prefix is not None and self.prefix.has_state:
+                    self._prefix_insert(slot, toks[:consumed + c])
                 continue
             del self._prefilling[slot]
+            self._prefix_insert(slot, toks)
             req2 = req  # fully spliced: sample the first token, activate
             tok = self._sample(req2, np.asarray(last)[0])
             if self._activate(req2, slot, tok, self.clock()):
@@ -639,6 +779,7 @@ class Engine:
     def _finish(self, r: Request, slot: int, now: float) -> None:
         r.done = True
         self.metrics.request_finished(r, now)
+        self._release_prefix(slot)
         self.kv.free(slot)
         del self.active[slot]
         self._rngs.pop(r.rid, None)

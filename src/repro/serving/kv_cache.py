@@ -19,9 +19,29 @@ lifecycle around it:
   ``kv_valid_len`` — and is overwritten as decode advances).
 
 Every cache leaf except ``pos`` is ``[L, B, ...]`` with batch on axis 1
-(the layout ``models.lm.init_cache`` builds); ``pos`` is ``[B]``.  All
-mutation is functional (``.at`` updates) — the class only swaps array
-references, so a snapshot taken by a caller stays valid.
+(the layout ``models.lm.init_cache`` builds); ``pos`` is ``[B]``.  The
+mutation bodies dispatch on leaf NDIM, not on a hard-coded name list: any
+1-D ``[B]`` leaf is treated as per-slot vector data (like ``pos``) and any
+higher-rank leaf as ``[L, B, ...]`` — so cache layouts that grow new
+per-slot fields (quantized-store scales, future metadata) ride through
+splice/merge/defrag without this file learning their names.  All mutation
+is functional (``.at`` updates) — the class only swaps array references,
+so a snapshot taken by a caller stays valid.
+
+Host-side per-slot metadata (``slot_meta``) travels with the same
+lifecycle: an opaque dict per active slot, carried wholesale through
+:meth:`compact` (including keys this class does not recognize — the
+prefix-cache subsystem stores its segment references there, DESIGN.md
+§12) and dropped on :meth:`free`.
+
+``kv_store`` selects the attention-KV storage format
+(``repro.kernels.kv_quant``): ``"int8"`` / ``"int4"`` store quantized
+pages + per-page scale leaves, multiplying the slots a fixed memory
+budget holds; ``"fp"`` stays the default.  :meth:`extract_prefix` /
+:meth:`splice_prefix` are the prefix-cache seam: they move a slot's
+leading KV span (plus a recurrent-state snapshot) out to refcounted
+shared segments and back, in whatever storage format the cache uses —
+a spliced segment is bit-identical to the prefill that produced it.
 
 Sharded mode (DESIGN.md §9): constructed with a ``mesh``, the cache plans
 placements with :func:`repro.distributed.sharding.plan_serve_cache` —
@@ -45,7 +65,19 @@ from repro.configs.base import ModelConfig
 from repro.models import lm
 
 
+# Cache leaves with a per-position sequence axis ``[L, B, S, ...]`` — the
+# span a shared-prefix segment owns.  Everything else (minus ``pos`` and
+# 1-D per-slot vectors) is recurrent state, snapshotted whole.
+POSITIONAL_LEAVES = ("k", "v", "k_scale", "v_scale")
+
+
 # -- pure mutation bodies (jitted with explicit shardings in mesh mode) -----
+#
+# Leaf handling dispatches on NDIM: a 1-D leaf is per-slot vector data
+# (``pos`` and any future [B] field), everything else is [L, B, ...] with
+# batch on axis 1.  ``pos`` itself keeps its special splice semantics
+# (set to the true spliced lengths); unknown 1-D leaves are carried
+# through every mutation instead of being silently dropped.
 
 
 def _splice_fn(cache, sub, idx, lengths):
@@ -55,6 +87,8 @@ def _splice_fn(cache, sub, idx, lengths):
     for name, leaf in cache.items():
         if name == "pos":
             new[name] = leaf.at[idx].set(lengths)
+        elif leaf.ndim == 1:
+            new[name] = leaf.at[idx].set(sub[name].astype(leaf.dtype))
         else:
             new[name] = leaf.at[:, idx].set(sub[name].astype(leaf.dtype))
     return new
@@ -62,10 +96,10 @@ def _splice_fn(cache, sub, idx, lengths):
 
 def _merge_fn(cache, new_prefix):
     """Write a decoded b-slot prefix back into the full cache."""
-    b = new_prefix["pos"].shape[0]
     merged = {}
     for name, leaf in cache.items():
-        if name == "pos":
+        if leaf.ndim == 1:
+            b = new_prefix[name].shape[0]
             merged[name] = leaf.at[:b].set(new_prefix[name])
         else:
             merged[name] = jax.lax.dynamic_update_slice_in_dim(
@@ -76,7 +110,7 @@ def _merge_fn(cache, new_prefix):
 def _defrag_fn(cache, srcs, dsts):
     """One batched gather/scatter per leaf: rows ``srcs`` -> ``dsts``."""
     return {
-        name: (leaf.at[dsts].set(leaf[srcs]) if name == "pos"
+        name: (leaf.at[dsts].set(leaf[srcs]) if leaf.ndim == 1
                else leaf.at[:, dsts].set(leaf[:, srcs]))
         for name, leaf in cache.items()
     }
@@ -86,14 +120,18 @@ class SlotKVCache:
     """Decode state for ``batch_slots`` concurrent requests."""
 
     def __init__(self, cfg: ModelConfig, batch_slots: int, max_len: int,
-                 dtype=None, mesh=None):
+                 dtype=None, mesh=None, kv_store: str = "fp"):
         self.cfg = cfg
         self.batch_slots = batch_slots
         self.max_len = max_len
+        self.kv_store = kv_store
         self.cache = lm.init_cache(cfg, batch_slots, max_len, dtype,
-                                   per_slot_pos=True)
+                                   per_slot_pos=True, kv_store=kv_store)
         self._free: list[int] = list(range(batch_slots))
         self._active: set[int] = set()
+        # Opaque per-slot metadata (prefix-segment refs, future fields):
+        # carried through compact() wholesale, dropped on free().
+        self.slot_meta: dict[int, dict] = {}
         self.mesh = mesh
         self.shardings = None
         self._splice_jit = _splice_fn
@@ -138,12 +176,14 @@ class SlotKVCache:
             raise RuntimeError("no free KV-cache slots")
         slot = self._free.pop(0)
         self._active.add(slot)
+        self.slot_meta[slot] = {}
         return slot
 
     def free(self, slot: int) -> None:
         if slot not in self._active:
             raise ValueError(f"slot {slot} is not active")
         self._active.remove(slot)
+        self.slot_meta.pop(slot, None)
         bisect.insort(self._free, slot)
 
     def kv_valid_len(self) -> np.ndarray:
@@ -164,7 +204,7 @@ class SlotKVCache:
         n = len(slots)
         assert n == len(lengths), (slots, lengths)
         idx = jnp.asarray(slots, jnp.int32)
-        sub = {name: leaf[:n] if name == "pos" else leaf[:, :n]
+        sub = {name: leaf[:n] if leaf.ndim == 1 else leaf[:, :n]
                for name, leaf in sub_cache.items()}
         self.cache = self._splice_jit(
             self.cache, sub, idx, jnp.asarray(lengths, jnp.int32))
@@ -175,7 +215,7 @@ class SlotKVCache:
         """The first ``b`` slots as a standalone cache pytree (zero-copy
         under jit; the engine decodes this bucket)."""
         return {
-            name: (leaf[:b] if name == "pos" else leaf[:, :b])
+            name: (leaf[:b] if leaf.ndim == 1 else leaf[:, :b])
             for name, leaf in self.cache.items()
         }
 
@@ -183,10 +223,60 @@ class SlotKVCache:
         """One slot row as a standalone b=1 cache pytree (the chunked-
         prefill continuation input / decode-bucket snapshot)."""
         return {
-            name: (leaf[slot:slot + 1] if name == "pos"
+            name: (leaf[slot:slot + 1] if leaf.ndim == 1
                    else leaf[:, slot:slot + 1])
             for name, leaf in self.cache.items()
         }
+
+    # -- prefix-cache segment seam (DESIGN.md §12) ---------------------------
+
+    def extract_prefix(self, slot: int, length: int) -> dict:
+        """Copy slot ``slot``'s leading ``length`` KV positions out as a
+        shareable segment payload: ``{"kv": {...}, "state": {...}}``.
+
+        Positional leaves (:data:`POSITIONAL_LEAVES`) are sliced to the
+        span ``[L, length, ...]``; everything else is a whole recurrent-
+        state snapshot ``[L, ...]`` — valid exactly at ``length`` consumed
+        tokens, which is why state-carrying families only match at segment
+        boundaries.  Slicing copies, so the payload stays valid after the
+        slot is reused.  The payload is in the cache's own ``kv_store``
+        format (quantized segments splice back bit-identically).
+        """
+        kv, state = {}, {}
+        for name, leaf in self.cache.items():
+            if name == "pos" or leaf.ndim == 1:
+                continue
+            if name in POSITIONAL_LEAVES:
+                kv[name] = leaf[:, slot, :length]
+            else:
+                state[name] = leaf[:, slot]
+        return {"kv": kv, "state": state}
+
+    def splice_prefix(self, slot: int, payload: dict, length: int) -> None:
+        """Write a segment payload into slot ``slot`` covering positions
+        ``[0, length)`` and set ``pos = length`` — the prefix-hit fast
+        path: the tail then continues through the chunked-prefill seam
+        (``slot_view`` + continuation prefill), skipping the prefix's
+        prefill GEMVs entirely."""
+        sub = {}
+        for name, leaf in self.cache.items():
+            if name == "pos":
+                sub[name] = jnp.zeros((1,), jnp.int32)  # set by lengths
+            elif leaf.ndim == 1:
+                sub[name] = leaf[slot:slot + 1]  # carry per-slot vectors
+            elif name in POSITIONAL_LEAVES:
+                seg = payload["kv"][name]
+                row = jnp.zeros((leaf.shape[0], 1) + leaf.shape[2:],
+                                leaf.dtype)
+                sub[name] = row.at[:, 0, :seg.shape[1]].set(
+                    seg.astype(leaf.dtype))
+            else:
+                sub[name] = payload["state"][name][:, None].astype(leaf.dtype)
+        if self.shardings is not None:
+            # segments live wherever the prefix cache put them; the jitted
+            # splice pins its inputs, so place the sub-rows like the cache
+            sub = jax.device_put(sub, self.shardings)
+        self.splice(sub, [slot], [length])
 
     def merge_prefix(self, new_cache, b: int) -> None:
         """Write a decoded ``b``-slot prefix back into the full cache."""
@@ -211,6 +301,11 @@ class SlotKVCache:
         move; this sits on the per-step hot path.  Returns ``{src: dst}``
         for every moved slot so the engine can re-point its request map
         and per-slot side arrays.
+
+        ``slot_meta`` moves with its slot — the WHOLE dict, including keys
+        this class does not recognize (the prefix cache's segment refs,
+        anything future layers attach): defrag must never silently drop
+        per-slot metadata.
         """
         moves: dict[int, int] = {}
         while self._free and self._active:
@@ -228,4 +323,6 @@ class SlotKVCache:
                 self.cache,
                 jnp.asarray(list(moves), jnp.int32),
                 jnp.asarray(list(moves.values()), jnp.int32))
+            for src, dst in moves.items():
+                self.slot_meta[dst] = self.slot_meta.pop(src, {})
         return moves

@@ -33,7 +33,11 @@ import numpy as np
 # v2: the dispatch counters carry the ``expert_load`` and
 # ``program_fallbacks`` sections (ragged MoE serving) and the document
 # gains the derived ``expert_balance`` summary when MoE dispatches ran.
-SCHEMA_VERSION = 2
+# v3: prefix-cache counters (``prefix_hits`` / ``prefix_misses`` /
+# ``prefill_tokens_saved``), the hit/miss TTFT split histograms
+# (``ttft_hit_ms`` / ``ttft_miss_ms``), and the ``prefix_cache`` summary
+# section when any lookup ran.
+SCHEMA_VERSION = 3
 
 # Per-step snapshots kept in memory; older entries are dropped (the
 # aggregate histograms/counters keep full fidelity).
@@ -94,6 +98,11 @@ class ServingMetrics:
         self.clock = clock
         self.start_time = clock()
         self.ttft_ms = Histogram("ttft_ms")
+        # TTFT split by prefix-cache outcome: a hit prefills only the
+        # private tail, so its TTFT should sit strictly below the miss
+        # distribution (the CI smoke leg asserts p50 hit < p50 miss).
+        self.ttft_hit_ms = Histogram("ttft_hit_ms")
+        self.ttft_miss_ms = Histogram("ttft_miss_ms")
         self.per_token_ms = Histogram("per_token_ms")
         self.step_ms = Histogram("step_ms")
         self.batch_sizes = Histogram("decode_batch")
@@ -103,6 +112,8 @@ class ServingMetrics:
             "tokens_out": 0, "prefill_tokens": 0, "prefill_waves": 0,
             "prefill_chunks": 0,
             "decode_steps": 0, "engine_steps": 0,
+            "prefix_hits": 0, "prefix_misses": 0,
+            "prefill_tokens_saved": 0,
         }
         self.steps: list[dict] = []
         # Dispatch counters are process-global; everything this engine
@@ -124,13 +135,30 @@ class ServingMetrics:
         """A running slot was preempted for a deadline-imminent request."""
         self.counters["evicted"] += 1
 
+    def prefix_lookup(self, hit: bool, saved_tokens: int = 0) -> None:
+        """One prefix-cache admission lookup; ``saved_tokens`` is the
+        matched prefill the hit skipped."""
+        if hit:
+            self.counters["prefix_hits"] += 1
+            self.counters["prefill_tokens_saved"] += saved_tokens
+        else:
+            self.counters["prefix_misses"] += 1
+
     def first_token(self, req, now: float) -> None:
         """Record TTFT once per request: a preempted request re-prefills on
         readmission, but its first token already streamed out."""
         if req.first_token_time is not None:
             return
         req.first_token_time = now
-        self.ttft_ms.record((now - req.submit_time) * 1e3)
+        ttft = (now - req.submit_time) * 1e3
+        self.ttft_ms.record(ttft)
+        # hit/miss split keyed by the FIRST admission's cache outcome
+        # (None when the engine ran without a prefix cache)
+        hit = getattr(req, "prefix_hit", None)
+        if hit is True:
+            self.ttft_hit_ms.record(ttft)
+        elif hit is False:
+            self.ttft_miss_ms.record(ttft)
 
     def request_finished(self, req, now: float) -> None:
         req.finish_time = now
@@ -220,6 +248,19 @@ class ServingMetrics:
         balance = self.expert_balance(dispatch)
         if balance is not None:
             doc["expert_balance"] = balance
+        lookups = (self.counters["prefix_hits"]
+                   + self.counters["prefix_misses"])
+        if lookups:
+            doc["prefix_cache"] = {
+                "lookups": lookups,
+                "hits": self.counters["prefix_hits"],
+                "misses": self.counters["prefix_misses"],
+                "hit_rate": self.counters["prefix_hits"] / lookups,
+                "prefill_tokens_saved":
+                    self.counters["prefill_tokens_saved"],
+                "ttft_hit_ms": self.ttft_hit_ms.summary(),
+                "ttft_miss_ms": self.ttft_miss_ms.summary(),
+            }
         if include_steps:
             doc["steps"] = list(self.steps)
         return doc

@@ -1,0 +1,381 @@
+"""Shared-prefix KV reuse: a radix index over token ids whose nodes own
+refcounted KV segments (DESIGN.md §12).
+
+PIMnast's serving argument is that GEMV inference is bandwidth-bound —
+every redundant prefill GEMV re-streams weight bytes the memory wall
+already charged for.  Multi-tenant traffic is dominated by shared system
+prompts and few-shot preambles, so the cheapest prefill is the one that
+never runs: this module caches the KV a prefill produced, keyed by the
+token ids that produced it, and hands it back to any later request whose
+prompt starts with the same tokens.
+
+Structure
+---------
+A radix tree (path-compressed trie) over token ids.  Each non-root node
+owns one **segment**: the edge's token span plus
+
+* ``kv`` — the positional cache leaves for that span
+  (``kv_cache.POSITIONAL_LEAVES``: k / v and, under a quantized store,
+  their page scales), shape ``[L, span, ...]`` — sliceable at any
+  position, so pure-attention families may match partway into an edge;
+* ``state`` — an optional recurrent-state snapshot (rwkv / mamba leaves,
+  ``[L, ...]``) valid ONLY after consuming exactly the tokens up to this
+  node's end.  State-carrying families therefore match at node
+  boundaries that hold a snapshot, never mid-edge.
+
+Lifecycle (the engine's hit path): ``match`` walks the longest cached
+prefix → ``acquire`` pins every node on the path (refcount++) →
+``gather`` concatenates the path's spans into one splice payload →
+``SlotKVCache.splice_prefix`` writes it into the slot → the private tail
+prefills through the chunked-prefill seam → decode runs → ``release``
+unpins on finish/eviction.  ``insert`` files freshly prefilled KV back
+into the tree (walking existing nodes dedups shared spans; splits create
+the boundaries partial overlaps need).
+
+Eviction: segments are evicted leaf-first, zero-refcount only, in LRU
+order, when ``capacity_bytes`` would be exceeded — a pinned (in-use)
+segment is never dropped, and an interior node is implicitly pinned by
+its children.  Refcounts are plain host-side integers: under a sharded
+engine the segment ARRAYS are device-put like slot KV (heads on the
+'model' axis via ``distributed.sharding.plan_segment``) while the
+index/refcounts stay replication-safe host state — there is one engine
+process per mesh, so no cross-host count reconciliation is needed.
+
+The index stores tokens and bookkeeping on the host; only segment
+payloads live on device.  Everything is deterministic — same tokens,
+same params, same store format ⇒ identical segment bytes — which is what
+makes greedy decode token-identical with the cache on vs off.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "PrefixCache", "PrefixCacheConfig", "PrefixMatch", "prefix_cacheable",
+]
+
+
+def prefix_cacheable(cfg) -> bool:
+    """Whether a model family's KV is a pure function of the token prefix.
+
+    Encoder-conditioned and cross-attention families (whisper, llama-
+    vision) fold per-REQUEST modality features into the decoder pass, so
+    two requests with identical token prefixes do not share KV — token-
+    keyed reuse would be unsound.  The engine gates the prefix cache off
+    for them (DESIGN.md §12 records this as a design decision, not a
+    limitation of the index).
+    """
+    return cfg.encoder is None and cfg.cross_attn_every == 0
+
+
+@dataclass(frozen=True)
+class PrefixCacheConfig:
+    # Device bytes the segment store may hold; inserts evict LRU zero-ref
+    # segments to fit and are skipped (counted) when pinned segments leave
+    # no room.  None: unbounded (tests).
+    capacity_bytes: int | None = 64 * 2 ** 20
+    # Smallest prefix worth caching: segments shorter than this are noise
+    # (one splice + refcount churn to save a couple of GEMVs).
+    min_tokens: int = 2
+
+
+class _Node:
+    """One radix-tree edge and the KV segment it owns."""
+
+    __slots__ = ("tokens", "kv", "state", "children", "parent",
+                 "refcount", "last_used", "nbytes")
+
+    def __init__(self, tokens: np.ndarray, kv: dict, state: dict | None,
+                 parent: "_Node | None"):
+        self.tokens = np.asarray(tokens, np.int32)
+        self.kv = kv                  # {leaf: [L, span, ...]} on device
+        self.state = state            # {leaf: [L, ...]} snapshot or None
+        self.children: dict[int, _Node] = {}
+        self.parent = parent
+        self.refcount = 0
+        self.last_used = 0
+        self.nbytes = _payload_bytes(kv, state)
+
+    def recount_bytes(self) -> None:
+        self.nbytes = _payload_bytes(self.kv, self.state)
+
+
+def _payload_bytes(kv: dict, state: dict | None) -> int:
+    n = sum(leaf.nbytes for leaf in (kv or {}).values())
+    if state:
+        n += sum(leaf.nbytes for leaf in state.values())
+    return int(n)
+
+
+def _common_len(a: np.ndarray, b: np.ndarray) -> int:
+    n = min(len(a), len(b))
+    if n == 0:
+        return 0
+    neq = np.nonzero(a[:n] != b[:n])[0]
+    return int(neq[0]) if len(neq) else n
+
+
+@dataclass
+class PrefixMatch:
+    """A resolved longest-prefix match: the node path, the span of each
+    node actually used (only the last may be partial, pure-KV families
+    only), and the total matched length."""
+
+    length: int
+    nodes: list = field(default_factory=list)
+    spans: list = field(default_factory=list)
+
+
+class PrefixCache:
+    """Radix index + refcounted segment store (one per engine)."""
+
+    def __init__(self, config: PrefixCacheConfig | None = None, *,
+                 has_state: bool = False, placer=None):
+        self.config = config or PrefixCacheConfig()
+        # State-carrying families (rwkv / hymba) can only resume from a
+        # whole-state snapshot, so matches clamp to snapshot boundaries.
+        self.has_state = has_state
+        # Optional payload placement hook (sharded engine: device_put the
+        # segment leaves with plan_segment shardings).
+        self.placer = placer
+        self.root = _Node(np.zeros((0,), np.int32), {}, None, None)
+        self.root.nbytes = 0
+        self._tick = 0
+        self._bytes = 0
+        self._segments = 0
+        self.counters = {
+            "hits": 0, "misses": 0, "hit_tokens": 0, "inserted_tokens": 0,
+            "inserts": 0, "evictions": 0, "insert_skipped": 0,
+        }
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def bytes_used(self) -> int:
+        return self._bytes
+
+    @property
+    def n_segments(self) -> int:
+        return self._segments
+
+    def stats(self) -> dict:
+        c = self.counters
+        lookups = c["hits"] + c["misses"]
+        return {
+            **c,
+            "hit_rate": (c["hits"] / lookups) if lookups else 0.0,
+            "segments": self._segments,
+            "bytes": self._bytes,
+            "capacity_bytes": self.config.capacity_bytes,
+        }
+
+    def _walk(self):
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            if node is not self.root:
+                yield node
+
+    # -- match ---------------------------------------------------------------
+
+    def _match_path(self, tokens: np.ndarray) -> PrefixMatch:
+        # At least one tail token must remain: the tail prefill is what
+        # produces the logits the first sampled token comes from.
+        cap = len(tokens) - 1
+        m = PrefixMatch(0)
+        if cap <= 0:
+            return m
+        tokens = np.asarray(tokens, np.int32)
+        node, i = self.root, 0
+        while i < cap:
+            child = node.children.get(int(tokens[i]))
+            if child is None:
+                break
+            span = _common_len(child.tokens, tokens[i:cap])
+            if span == 0:
+                break
+            if span < len(child.tokens) and self.has_state:
+                # mid-edge cut: no snapshot there — state families stop at
+                # the previous boundary
+                break
+            m.nodes.append(child)
+            m.spans.append(span)
+            i += span
+            node = child
+            if span < len(child.tokens):
+                break
+        if self.has_state:
+            # resume needs the final node's snapshot; splits leave interior
+            # nodes with state=None, so back off to the deepest snapshot
+            while m.nodes and m.nodes[-1].state is None:
+                m.nodes.pop()
+                m.spans.pop()
+        m.length = int(sum(m.spans))
+        return m
+
+    def match_len(self, tokens) -> int:
+        """Longest cached-prefix length for ``tokens`` — a pure probe (no
+        stats, no LRU touch); the scheduler prices admission with this."""
+        return self._match_path(np.asarray(tokens, np.int32)).length
+
+    def match(self, tokens) -> PrefixMatch | None:
+        """Longest cached prefix of ``tokens``; None on a miss (or a match
+        shorter than ``min_tokens``).  Counts hit/miss and touches LRU."""
+        m = self._match_path(np.asarray(tokens, np.int32))
+        self._tick += 1
+        if m.length < self.config.min_tokens:
+            self.counters["misses"] += 1
+            return None
+        self.counters["hits"] += 1
+        self.counters["hit_tokens"] += m.length
+        for node in m.nodes:
+            node.last_used = self._tick
+        return m
+
+    # -- refcounts -----------------------------------------------------------
+
+    def acquire(self, m: PrefixMatch) -> None:
+        """Pin every segment on the match path while a slot references it."""
+        for node in m.nodes:
+            node.refcount += 1
+            node.last_used = self._tick
+
+    def release(self, m: PrefixMatch) -> None:
+        for node in m.nodes:
+            node.refcount -= 1
+            if node.refcount < 0:  # pragma: no cover - invariant
+                raise AssertionError(
+                    f"segment refcount went negative at {node.tokens[:8]}")
+
+    # -- splice payload ------------------------------------------------------
+
+    def gather(self, m: PrefixMatch) -> dict:
+        """Concatenate the match path's segments into one splice payload
+        (``SlotKVCache.splice_prefix`` format)."""
+        kv: dict = {}
+        if m.nodes:
+            for name in m.nodes[0].kv:
+                parts = [node.kv[name][:, :span]
+                         for node, span in zip(m.nodes, m.spans)]
+                kv[name] = (parts[0] if len(parts) == 1
+                            else jnp.concatenate(parts, axis=1))
+        state = m.nodes[-1].state if (m.nodes and self.has_state) else {}
+        return {"kv": kv, "state": state or {}}
+
+    # -- insert --------------------------------------------------------------
+
+    def insert(self, tokens, payload: dict) -> bool:
+        """File a prefilled stream's KV into the tree.
+
+        ``payload`` is ``SlotKVCache.extract_prefix`` output covering
+        exactly ``len(tokens)`` positions.  Walking existing nodes dedups
+        shared spans (their KV is identical by determinism — only token-
+        prefix-keyed families ever insert); partial overlaps split the
+        edge so the divergence point becomes a boundary.  Returns False
+        when capacity pressure from PINNED segments made room impossible
+        (counted, never an error).
+        """
+        tokens = np.asarray(tokens, np.int32)
+        T = len(tokens)
+        if T < self.config.min_tokens:
+            return False
+        kv, state = payload["kv"], payload["state"]
+        if self.placer is not None:
+            kv = self.placer(kv, kind="kv")
+            state = self.placer(state, kind="state")
+        self._tick += 1
+        node, i = self.root, 0
+        while i < T:
+            child = node.children.get(int(tokens[i]))
+            if child is None:
+                seg_kv = {name: leaf[:, i:T] for name, leaf in kv.items()}
+                seg_state = dict(state) if (self.has_state and state) else None
+                new = _Node(tokens[i:T], seg_kv, seg_state, node)
+                if not self._make_room(new.nbytes):
+                    self.counters["insert_skipped"] += 1
+                    return False
+                new.last_used = self._tick
+                node.children[int(tokens[i])] = new
+                self._bytes += new.nbytes
+                self._segments += 1
+                self.counters["inserts"] += 1
+                self.counters["inserted_tokens"] += T - i
+                return True
+            span = _common_len(child.tokens, tokens[i:T])
+            if span < len(child.tokens):
+                self._split(child, span)
+                child = node.children[int(tokens[i])]
+            child.last_used = self._tick
+            node = child
+            i += span
+        # the stream ends exactly at an existing boundary: attach the state
+        # snapshot if that boundary lacks one (an earlier split dropped it)
+        if self.has_state and state and node is not self.root \
+                and node.state is None:
+            extra = _payload_bytes({}, state)
+            if self._make_room(extra):
+                node.state = dict(state)
+                node.recount_bytes()
+                self._bytes += extra
+        return True
+
+    def _split(self, child: _Node, at: int) -> None:
+        """Split ``child``'s edge at ``at``: a new interior node takes the
+        leading span (state=None — no snapshot exists mid-edge), the old
+        node keeps the rest plus its children, snapshot, and refcount."""
+        assert 0 < at < len(child.tokens)
+        old_bytes = child.nbytes
+        top_kv = {n: leaf[:, :at] for n, leaf in child.kv.items()}
+        top = _Node(child.tokens[:at], top_kv, None, child.parent)
+        top.last_used = child.last_used
+        child.parent.children[int(child.tokens[0])] = top
+        rest = child.tokens[at:]
+        child.kv = {n: leaf[:, at:] for n, leaf in child.kv.items()}
+        child.tokens = rest
+        child.parent = top
+        child.recount_bytes()
+        top.children[int(rest[0])] = child
+        self._bytes += top.nbytes + child.nbytes - old_bytes
+        self._segments += 1
+
+    # -- eviction ------------------------------------------------------------
+
+    def _evictable(self) -> list:
+        """Zero-ref LEAF segments (an interior node is pinned by its
+        children — evicting it would orphan their token paths)."""
+        return [n for n in self._walk()
+                if not n.children and n.refcount == 0]
+
+    def _evict_one(self) -> bool:
+        victims = self._evictable()
+        if not victims:
+            return False
+        victim = min(victims, key=lambda n: (n.last_used, -n.nbytes))
+        victim.parent.children.pop(int(victim.tokens[0]))
+        self._bytes -= victim.nbytes
+        self._segments -= 1
+        self.counters["evictions"] += 1
+        return True
+
+    def _make_room(self, incoming: int) -> bool:
+        cap = self.config.capacity_bytes
+        if cap is None:
+            return True
+        while self._bytes + incoming > cap:
+            if not self._evict_one():
+                return False
+        return True
+
+    def evict_to(self, target_bytes: int) -> int:
+        """Shrink the store to ``target_bytes`` (memory-pressure hook);
+        returns segments evicted.  Pinned segments survive regardless."""
+        n = 0
+        while self._bytes > target_bytes and self._evict_one():
+            n += 1
+        return n

@@ -11,7 +11,11 @@ Policies
 * ``fcfs`` — strict arrival order, fill every free slot (throughput-first;
   the pre-PR-4 behavior).
 * ``sjf`` — shortest-prompt-first (stable on arrival order): minimizes
-  prefill padding waste and mean TTFT under mixed prompt lengths.
+  prefill padding waste and mean TTFT under mixed prompt lengths.  "Short"
+  means *prefill cost*, not raw prompt length: when the engine runs a
+  prefix cache it installs :attr:`Scheduler.prefill_cost` so a long prompt
+  whose prefix is cached (only the private tail prefills) prices — and
+  sorts — as the short job it actually is.
 * ``gemv_aware`` — shortest-prompt-first admission **capped so the number
   of concurrently decoding slots never exceeds ``gemv_batch_threshold``**.
   Above that threshold the GEMV dispatcher's batch gate falls back to the
@@ -102,6 +106,11 @@ class Scheduler:
 
     config: SchedulerConfig = field(default_factory=SchedulerConfig)
     queue: list = field(default_factory=list)
+    # Admission price of a request in prefill tokens (sjf / gemv_aware
+    # ordering).  None: len(r.prompt).  The engine overrides this with the
+    # prefix-cache tail length so cached prefixes price as near-zero
+    # prefill (ISSUE 8: admission must see the hit, not the prompt).
+    prefill_cost: object = None
     _seq: int = 0                     # arrival tiebreak for stable ordering
     # Router-imbalance estimate from dispatch feedback (None: use the
     # config's expert_skew prior).  Floor 1.0 — a router can't be more
@@ -110,6 +119,13 @@ class Scheduler:
 
     def __len__(self) -> int:
         return len(self.queue)
+
+    def _cost(self, req) -> int:
+        """Prefill tokens this request would actually run (see
+        :attr:`prefill_cost`)."""
+        if self.prefill_cost is not None:
+            return int(self.prefill_cost(req))
+        return len(req.prompt)
 
     def submit(self, req, now: float = 0.0) -> None:
         cfg = self.config
@@ -217,7 +233,7 @@ class Scheduler:
                 imm = preempting and self._imminent(r, now)
                 return (0 if imm else 1,
                         r.deadline if imm else 0.0,
-                        len(r.prompt), r.arrival_seq)
+                        self._cost(r), r.arrival_seq)
 
             order = sorted(self.queue, key=key)
         picked = order[:cap]

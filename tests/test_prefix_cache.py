@@ -1,0 +1,695 @@
+"""Shared-prefix KV reuse + quantized KV storage tests (DESIGN.md §12).
+
+Three layers:
+
+* the radix index as a pure data structure (synthetic payloads, hypothesis
+  properties: insert/match/evict round-trips, refcounts never negative,
+  splits/defrag preserve segment contents);
+* the SlotKVCache seam (extract/splice_prefix, compact carrying slot_meta
+  and unknown leaves — the satellite regression);
+* the engine end-to-end: greedy token identity with the prefix cache on vs
+  off (the load-bearing acceptance), prefill-token savings, readmission-
+  after-preemption routing through the matcher, the shared-prefix trace
+  document, and the quantized KV store's capacity/tolerance claims.
+
+Family sweeps and the (1, 2)-mesh identity run are ``slow``-marked
+(subprocess isolation for the mesh, same pattern as test_sharded_serving).
+"""
+
+import itertools
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, st
+
+from repro.configs.registry import ARCHS
+from repro.kernels.kv_quant import (
+    dequantize_page,
+    quantize_page,
+    stored_head_dim,
+    tree_bytes,
+)
+from repro.models import lm
+from repro.serving.engine import Engine, Request
+from repro.serving.kv_cache import POSITIONAL_LEAVES, SlotKVCache
+from repro.serving.prefix_cache import (
+    PrefixCache,
+    PrefixCacheConfig,
+    prefix_cacheable,
+)
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+KEY = jax.random.PRNGKey(0)
+MAX_LEN = 64
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CACHEABLE_ARCHS = ["olmo-1b", "gemma3-1b", "deepseek-moe-16b", "rwkv6-3b",
+                   "hymba-1.5b"]
+GATED_ARCHS = ["whisper-small", "llama-3.2-vision-11b"]
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return ARCHS["olmo-1b"].reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return lm.init_lm(KEY, cfg)
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 900) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=timeout,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+# --------------------------------------------------------------------------
+# Radix index as a pure structure (synthetic payloads)
+# --------------------------------------------------------------------------
+
+L, H, HD = 2, 2, 4
+
+
+def payload(tokens):
+    """Deterministic KV payload: position t's page encodes tokens[t], so
+    content equality checks catch any span mis-slice."""
+    t = jnp.asarray(np.asarray(tokens, np.float32))
+    k = jnp.broadcast_to(t[None, :, None, None], (L, len(tokens), H, HD))
+    return {"kv": {"k": k, "v": k + 0.5}, "state": {}}
+
+
+def state_payload(tokens):
+    p = payload(tokens)
+    p["state"] = {"s": jnp.full((L, 3), float(len(tokens)))}
+    return p
+
+
+def toks(*vals):
+    return np.asarray(vals, np.int32)
+
+
+def assert_gather_matches(pc, tokens, m):
+    got = pc.gather(m)
+    want = payload(tokens[:m.length])["kv"]
+    for name in want:
+        np.testing.assert_array_equal(np.asarray(got["kv"][name]),
+                                      np.asarray(want[name]))
+
+
+def test_radix_insert_match_roundtrip():
+    pc = PrefixCache(PrefixCacheConfig(capacity_bytes=None))
+    a = toks(*range(1, 13))
+    assert pc.insert(a, payload(a))
+    # +1 sentinel: at least one tail token must remain unmatched
+    m = pc.match(np.concatenate([a, toks(99)]))
+    assert m is not None and m.length == len(a)
+    assert_gather_matches(pc, np.concatenate([a, toks(99)]), m)
+    assert pc.stats()["hits"] == 1 and pc.stats()["segments"] == 1
+
+
+def test_radix_match_caps_below_full_prompt():
+    pc = PrefixCache(PrefixCacheConfig(capacity_bytes=None))
+    a = toks(*range(8))
+    pc.insert(a, payload(a))
+    m = pc.match(a)  # prompt fully cached: a tail token must remain
+    assert m is not None and m.length == len(a) - 1
+
+
+def test_radix_partial_edge_match_pure_kv():
+    pc = PrefixCache(PrefixCacheConfig(capacity_bytes=None))
+    a = toks(1, 2, 3, 4, 5, 6, 7, 8)
+    pc.insert(a, payload(a))
+    q = toks(1, 2, 3, 4, 40, 41)  # diverges mid-edge
+    m = pc.match(q)
+    assert m is not None and m.length == 4
+    assert_gather_matches(pc, q, m)
+
+
+def test_radix_split_preserves_contents():
+    pc = PrefixCache(PrefixCacheConfig(capacity_bytes=None))
+    ab = toks(1, 2, 3, 4, 10, 11)
+    ac = toks(1, 2, 3, 4, 20, 21)
+    pc.insert(ab, payload(ab))
+    pc.insert(ac, payload(ac))  # splits the shared [1,2,3,4] span
+    assert pc.stats()["segments"] == 3
+    for q in (ab, ac):
+        m = pc.match(np.concatenate([q, toks(99)]))
+        assert m is not None and m.length == len(q), q
+        assert_gather_matches(pc, np.concatenate([q, toks(99)]), m)
+
+
+def test_radix_min_tokens():
+    pc = PrefixCache(PrefixCacheConfig(capacity_bytes=None, min_tokens=4))
+    a = toks(1, 2, 3)
+    assert not pc.insert(a, payload(a))  # too short to file
+    b = toks(1, 2, 3, 4, 5)
+    pc.insert(b, payload(b))
+    assert pc.match(toks(1, 2, 3, 9)) is None  # 3 < min_tokens: miss
+    assert pc.stats()["misses"] == 1
+
+
+def test_radix_refcounts_pin_against_eviction():
+    seg = payload(toks(*range(10)))
+    seg_bytes = sum(v.nbytes for v in seg["kv"].values())
+    pc = PrefixCache(PrefixCacheConfig(capacity_bytes=int(seg_bytes * 1.5),
+                                       min_tokens=2))
+    a = toks(*range(10))
+    assert pc.insert(a, payload(a))
+    m = pc.match(np.concatenate([a, toks(99)]))
+    pc.acquire(m)
+    # capacity can't fit a second segment while the first is pinned
+    b = toks(*range(50, 60))
+    assert not pc.insert(b, payload(b))
+    assert pc.stats()["insert_skipped"] == 1
+    pc.release(m)
+    assert pc.insert(b, payload(b))  # unpinned: LRU eviction makes room
+    assert pc.stats()["evictions"] == 1
+    assert pc.match(np.concatenate([a, toks(99)])) is None  # a was evicted
+
+
+def test_radix_lru_eviction_order():
+    seg = payload(toks(*range(6)))
+    seg_bytes = sum(v.nbytes for v in seg["kv"].values())
+    pc = PrefixCache(PrefixCacheConfig(capacity_bytes=int(seg_bytes * 2.5),
+                                       min_tokens=2))
+    a, b = toks(*range(10, 16)), toks(*range(20, 26))
+    pc.insert(a, payload(a))
+    pc.insert(b, payload(b))
+    pc.match(np.concatenate([a, toks(99)]))  # touch a: b is now LRU
+    c = toks(*range(30, 36))
+    pc.insert(c, payload(c))  # evicts exactly one: the LRU (b)
+    assert pc.match(np.concatenate([a, toks(99)])) is not None
+    assert pc.match(np.concatenate([b, toks(99)])) is None
+
+
+def test_radix_release_below_zero_raises():
+    pc = PrefixCache(PrefixCacheConfig(capacity_bytes=None))
+    a = toks(*range(8))
+    pc.insert(a, payload(a))
+    m = pc.match(np.concatenate([a, toks(99)]))
+    pc.acquire(m)
+    pc.release(m)
+    with pytest.raises(AssertionError):
+        pc.release(m)
+
+
+def test_radix_state_families_match_only_at_snapshots():
+    pc = PrefixCache(PrefixCacheConfig(capacity_bytes=None),
+                     has_state=True)
+    a = toks(*range(8))
+    pc.insert(a, state_payload(a))
+    # mid-edge cut: no snapshot there -> no match at all
+    assert pc.match(toks(0, 1, 2, 3, 99)) is None
+    # exact edge boundary (with a tail left): snapshot available -> hit
+    m = pc.match(np.concatenate([a, toks(99)]))
+    assert m is not None and m.length == len(a)
+    g = pc.gather(m)
+    assert float(g["state"]["s"][0, 0]) == float(len(a))
+    # a split drops the top node's snapshot: boundary match retreats
+    b = np.concatenate([a[:5], toks(70, 71)])
+    pc.insert(b, state_payload(b))
+    assert pc.match(np.concatenate([a[:5], toks(99)])) is None
+    m2 = pc.match(np.concatenate([b, toks(99)]))  # b's own end has one
+    assert m2 is not None and m2.length == len(b)
+
+
+def test_radix_evict_to_respects_pins():
+    pc = PrefixCache(PrefixCacheConfig(capacity_bytes=None))
+    a, b = toks(*range(10, 18)), toks(*range(20, 28))
+    pc.insert(a, payload(a))
+    pc.insert(b, payload(b))
+    m = pc.match(np.concatenate([a, toks(99)]))
+    pc.acquire(m)
+    pc.evict_to(0)
+    assert pc.match(np.concatenate([a, toks(99)])) is not None  # pinned
+    assert pc.match(np.concatenate([b, toks(99)])) is None      # dropped
+
+
+# --------------------------------------------------------------------------
+# Hypothesis properties
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=15)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_property_insert_match_roundtrip(seed):
+    """Any mix of overlapping streams from a tiny alphabet: every inserted
+    stream matches back at full length with byte-identical KV."""
+    rng = np.random.default_rng(seed)
+    pc = PrefixCache(PrefixCacheConfig(capacity_bytes=None, min_tokens=2))
+    streams = []
+    for _ in range(rng.integers(2, 7)):
+        t = rng.integers(0, 3, rng.integers(2, 12)).astype(np.int32)
+        streams.append(t)
+        pc.insert(t, payload(t))
+    for t in streams:
+        q = np.concatenate([t, toks(99)])
+        m = pc.match(q)
+        assert m is not None and m.length == len(t), (t, m)
+        assert_gather_matches(pc, q, m)
+    # byte accounting stays consistent with the live tree
+    live = sum(n.nbytes for n in pc._walk())
+    assert pc.bytes_used == live
+
+
+@settings(max_examples=15)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_property_refcounts_and_eviction(seed):
+    """Random acquire/release/evict interleavings: refcounts never go
+    negative and eviction never drops a pinned segment."""
+    rng = np.random.default_rng(seed)
+    pc = PrefixCache(PrefixCacheConfig(capacity_bytes=None, min_tokens=2))
+    held = []
+    for step in range(rng.integers(5, 25)):
+        op = rng.integers(0, 4)
+        if op == 0:
+            t = rng.integers(0, 3, rng.integers(2, 10)).astype(np.int32)
+            pc.insert(t, payload(t))
+        elif op == 1 and pc.n_segments:
+            t = rng.integers(0, 3, rng.integers(2, 10)).astype(np.int32)
+            m = pc.match(np.concatenate([t, toks(99)]))
+            if m is not None:
+                pc.acquire(m)
+                held.append((m, {id(n) for n in m.nodes}))
+        elif op == 2 and held:
+            m, _ = held.pop(rng.integers(0, len(held)))
+            pc.release(m)
+        else:
+            pc.evict_to(rng.integers(0, max(pc.bytes_used, 1)))
+            pinned = set().union(*(ids for _, ids in held)) if held else set()
+            live = {id(n) for n in pc._walk()}
+            assert pinned <= live, "eviction dropped a pinned segment"
+    for n in pc._walk():
+        assert n.refcount >= 0
+    for m, _ in held:  # every held pin still releasable exactly once
+        pc.release(m)
+    assert all(n.refcount == 0 for n in pc._walk())
+
+
+@settings(max_examples=10)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_property_compact_preserves_segment_contents(seed):
+    """SlotKVCache defrag never corrupts what extract_prefix reads: after
+    random alloc/free/compact churn, every surviving slot's extracted
+    prefix equals its pre-compact extraction."""
+    cfg = ARCHS["olmo-1b"].reduced()  # stub @given can't take fixtures
+    rng = np.random.default_rng(seed)
+    kv = SlotKVCache(cfg, 4, 8)
+    slots = [kv.alloc() for _ in range(4)]
+    # distinct recognizable content per slot
+    sub = lm.init_cache(cfg, 4, 8, per_slot_pos=True)
+    sub = {k: (v if k == "pos"
+               else v + jnp.arange(4, dtype=v.dtype).reshape(
+                   (1, 4) + (1,) * (v.ndim - 2)))
+           for k, v in sub.items()}
+    kv.splice(sub, slots, [3, 4, 5, 6])
+    for s in rng.choice(4, rng.integers(1, 3), replace=False):
+        kv.free(int(s))
+    keep = list(kv.active_slots())
+    before = {s: kv.extract_prefix(s, 3) for s in keep}
+    moves = kv.compact()
+    for s in keep:
+        d = moves.get(s, s)
+        after = kv.extract_prefix(d, 3)
+        for part in ("kv", "state"):
+            for name, leaf in before[s][part].items():
+                np.testing.assert_array_equal(np.asarray(leaf),
+                                              np.asarray(after[part][name]))
+
+
+# --------------------------------------------------------------------------
+# SlotKVCache seam + compact metadata regressions (satellite 6)
+# --------------------------------------------------------------------------
+
+
+def test_compact_carries_unknown_slot_meta(cfg):
+    """REGRESSION: compact() used to silently drop per-slot metadata; now
+    the whole dict — including keys kv_cache doesn't recognize — moves
+    with its slot."""
+    kv = SlotKVCache(cfg, 4, 16)
+    for _ in range(4):
+        kv.alloc()
+    kv.slot_meta[3]["prefix_match"] = "segment-ref"
+    kv.slot_meta[3]["future_field"] = {"anything": 1}
+    kv.free(0)
+    moves = kv.compact()
+    assert moves == {3: 0}
+    assert kv.slot_meta[0] == {"prefix_match": "segment-ref",
+                               "future_field": {"anything": 1}}
+    assert 3 not in kv.slot_meta
+
+
+def test_mutations_carry_unknown_leaves(cfg):
+    """REGRESSION: splice/merge/defrag dispatch on leaf NDIM, so cache
+    layouts that grow new per-slot fields (1-D vectors or [L, B, ...]
+    leaves) ride through every mutation instead of being dropped."""
+    kv = SlotKVCache(cfg, 4, 16)
+    kv.cache["custom_vec"] = jnp.arange(4, dtype=jnp.float32)       # [B]
+    kv.cache["custom_state"] = jnp.arange(8, dtype=jnp.float32).reshape(
+        2, 4) * 10.0                                                # [L, B]
+    for _ in range(4):
+        kv.alloc()
+    kv.free(0)
+    kv.free(1)
+    moves = kv.compact()
+    assert moves == {3: 0, 2: 1}
+    np.testing.assert_array_equal(np.asarray(kv.cache["custom_vec"])[:2],
+                                  [3.0, 2.0])
+    np.testing.assert_array_equal(np.asarray(kv.cache["custom_state"])[:, :2],
+                                  [[30.0, 20.0], [70.0, 60.0]])
+
+
+def test_extract_splice_prefix_roundtrip(cfg):
+    kv = SlotKVCache(cfg, 4, 16)
+    s0 = kv.alloc()
+    sub = lm.init_cache(cfg, 1, 16, per_slot_pos=True)
+    sub = {k: v + (3 if k != "pos" else 0) for k, v in sub.items()}
+    kv.splice(sub, [s0], [6])
+    seg = kv.extract_prefix(s0, 6)
+    s1 = kv.alloc()
+    kv.splice_prefix(s1, seg, 6)
+    assert kv.kv_valid_len()[s1] == 6
+    for name, leaf in kv.cache.items():
+        if name == "pos" or leaf.ndim == 1:
+            continue
+        a, b = np.asarray(leaf[:, s0]), np.asarray(leaf[:, s1])
+        if name in POSITIONAL_LEAVES:
+            a, b = a[:, :6], b[:, :6]
+        np.testing.assert_array_equal(a, b, err_msg=name)
+
+
+# --------------------------------------------------------------------------
+# Engine end-to-end
+# --------------------------------------------------------------------------
+
+
+def _shared_prefix_requests(n=6, prefix_len=18, max_new=6):
+    shared = list(range(10, 10 + prefix_len))
+    return [Request(rid=i,
+                    prompt=np.asarray(shared + [100 + 7 * i, 40 + i],
+                                      np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _run_engine(cfg, params, reqs, **kw):
+    eng = Engine(cfg, params, batch_slots=4, max_len=MAX_LEN, **kw)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_drained()
+    return eng, {r.rid: list(r.generated) for r in done}
+
+
+def test_engine_prefix_cache_token_identity_and_savings(cfg, params):
+    """ACCEPTANCE: greedy decode is token-identical with the prefix cache
+    on vs off, while the on-run skips real prefill work."""
+    off_eng, off = _run_engine(cfg, params, _shared_prefix_requests())
+    on_eng, on = _run_engine(cfg, params, _shared_prefix_requests(),
+                             prefix_cache=True)
+    assert off == on
+    c = on_eng.metrics.counters
+    assert c["prefix_hits"] > 0
+    assert c["prefill_tokens_saved"] > 0
+    assert c["prefill_tokens"] < off_eng.metrics.counters["prefill_tokens"]
+    doc = on_eng.metrics.to_dict(include_steps=False)
+    assert doc["prefix_cache"]["hit_rate"] > 0
+    assert doc["prefix_cache"]["ttft_hit_ms"]["count"] == c["prefix_hits"]
+    assert on_eng.prefix.stats()["segments"] > 0
+
+
+def test_engine_prefix_cache_quantized_stores_identity(cfg, params):
+    """int8 / int4 KV stores: cache on/off identity still holds — the
+    page codec is deterministic, so a spliced segment is bit-identical to
+    re-prefilling under the same store."""
+    for store in ("int8", "int4"):
+        # n=6 > batch_slots so a second admission wave sees the segments
+        _, off = _run_engine(cfg, params, _shared_prefix_requests(n=6),
+                             kv_store=store)
+        on_eng, on = _run_engine(cfg, params, _shared_prefix_requests(n=6),
+                                 kv_store=store, prefix_cache=True)
+        assert off == on, store
+        assert on_eng.metrics.counters["prefix_hits"] > 0, store
+
+
+def test_engine_readmission_routes_through_prefix_matcher(cfg, params):
+    """SATELLITE fix: a preemption victim's computed KV is filed into the
+    prefix cache before its slot is freed, so readmission matches it and
+    re-prefills only the generated tail (the engine used to re-run the
+    whole stream's prefill)."""
+    clock = itertools.count()
+    eng = Engine(cfg, params, batch_slots=2, max_len=MAX_LEN,
+                 scheduler=Scheduler(SchedulerConfig(
+                     policy="gemv_aware", preempt_margin=5.0)),
+                 prefix_cache=True, clock=lambda c=clock: float(next(c)))
+    for i in range(2):
+        eng.submit(Request(rid=i, prompt=np.asarray(range(10, 30), np.int32),
+                           max_new_tokens=12))
+    for _ in range(3):
+        eng.step()
+    eng.submit(Request(rid=9, prompt=np.asarray(range(50, 60), np.int32),
+                       max_new_tokens=4, deadline=eng.clock() + 3.0))
+    done = eng.run_until_drained()
+    assert any(r.evictions > 0 for r in done), "no preemption happened"
+    c = eng.metrics.counters
+    assert c["prefix_hits"] > 0, "readmission did not hit the prefix cache"
+    assert c["prefill_tokens_saved"] > 0
+    # eviction still invisible to the token streams
+    victim = next(r for r in done if r.evictions > 0)
+    assert len(victim.generated) == 12
+
+
+def test_engine_prefix_gated_off_for_encoder_families():
+    for arch in GATED_ARCHS:
+        cfg_g = ARCHS[arch].reduced()
+        assert not prefix_cacheable(cfg_g)
+        params_g = lm.init_lm(KEY, cfg_g)
+        eng = Engine(cfg_g, params_g, batch_slots=2, max_len=32,
+                     prefix_cache=True)
+        assert eng.prefix is None  # silently uncached, not an error
+    assert prefix_cacheable(ARCHS["olmo-1b"].reduced())
+
+
+def test_scheduler_prefill_cost_orders_by_tail(cfg, params):
+    """sjf with the engine's prefill_cost hook sorts a long-but-cached
+    prompt ahead of a short uncached one."""
+    s = Scheduler(SchedulerConfig(policy="sjf"))
+    long_cached = Request(rid=0, prompt=np.arange(30, dtype=np.int32))
+    short_cold = Request(rid=1, prompt=np.arange(8, dtype=np.int32))
+    s.submit(long_cached, 0.0)
+    s.submit(short_cold, 0.0)
+    assert [r.rid for r in s.select(2, 0)] == [1, 0]  # plain sjf: length
+    s2 = Scheduler(SchedulerConfig(policy="sjf"))
+    s2.prefill_cost = lambda r: 2 if r.rid == 0 else len(r.prompt)
+    s2.submit(long_cached, 0.0)
+    s2.submit(short_cold, 0.0)
+    assert [r.rid for r in s2.select(2, 0)] == [0, 1]  # cached tail wins
+    # engine wires the hook automatically when the cache is on
+    eng = Engine(cfg, params, batch_slots=2, max_len=MAX_LEN,
+                 prefix_cache=True)
+    assert eng.scheduler.prefill_cost is not None
+
+
+def test_shared_prefix_trace_document(cfg, params):
+    from repro.serving.bench import TraceConfig, run_serve_trace
+
+    doc = run_serve_trace(
+        "olmo-1b", policies=("sjf",), smoke=True,
+        trace_kind="shared-prefix", prefix_cache=True,
+        trace_config=TraceConfig(n_requests=8, arrival_rate=0.8,
+                                 prompt_len_range=(2, 5),
+                                 max_new_range=(2, 3),
+                                 kind="shared-prefix", n_tenants=2,
+                                 prefix_len_range=(10, 14)),
+    )
+    assert doc["schema"] == 4
+    assert doc["trace"]["kind"] == "shared-prefix"
+    assert doc["prefix_cache"] is True
+    run = doc["runs"][0]
+    assert run["prefix_cache"]["hit_rate"] > 0
+    assert run["prefix_cache"]["prefill_tokens_saved"] > 0
+    assert run["prefix_index"]["segments"] > 0
+    json.dumps(doc)  # serializable end to end
+
+
+# --------------------------------------------------------------------------
+# Quantized KV store: codec, capacity, tolerance
+# --------------------------------------------------------------------------
+
+
+def test_kv_quant_page_roundtrip_bounds():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((3, 5, 2, 8)), jnp.float32)
+    for bits, qmax in ((8, 127.0), (4, 7.0)):
+        q, s = quantize_page(x, bits)
+        y = dequantize_page(q, s, hd=8, out_dtype=jnp.float32)
+        amax = np.abs(np.asarray(x)).max(axis=-1, keepdims=True)
+        bound = amax / (2 * qmax) + 1e-6
+        assert (np.abs(np.asarray(y) - np.asarray(x)) <= bound).all(), bits
+    # all-zero pages reconstruct exactly (scale pinned to 1.0)
+    q, s = quantize_page(jnp.zeros((2, 4)), 8)
+    assert float(jnp.max(jnp.abs(dequantize_page(
+        q, s, hd=4, out_dtype=jnp.float32)))) == 0.0
+    # int4 packs two lanes per byte
+    q4, _ = quantize_page(x, 4)
+    assert q4.shape[-1] == 4 and stored_head_dim("int4", 8) == 4
+
+
+def test_int8_kv_fits_double_the_slots(cfg):
+    """ACCEPTANCE: the int8 store's per-slot KV bytes (pages + scales) are
+    under half the fp store's — a fixed memory budget holds >= 2x slots."""
+    def kv_bytes(store):
+        cache = lm.init_cache(cfg, 1, MAX_LEN, per_slot_pos=True,
+                              kv_store=store)
+        return tree_bytes({n: v for n, v in cache.items()
+                           if n in POSITIONAL_LEAVES})
+
+    fp, i8, i4 = kv_bytes("fp"), kv_bytes("int8"), kv_bytes("int4")
+    assert i8 * 2 <= fp, (i8, fp)
+    assert i4 < i8  # int4 packs two lanes per byte on top
+
+
+def test_int8_kv_decode_tolerance(cfg, params):
+    """int8 KV perturbs decode logits by at most the documented tolerance
+    (DESIGN.md §12: measured max |Δlogit| ≈ 0.01-0.02 on reduced configs;
+    asserted at 0.06 for headroom)."""
+    prompt = np.arange(7, 19, dtype=np.int32)
+
+    def decode_logits(store):
+        cache = lm.init_cache(cfg, 1, 32, kv_store=store)
+        logits, cache, _ = lm.forward(params, cfg,
+                                      jnp.asarray(prompt[None]), cache=cache)
+        outs = [np.asarray(logits[0, -1])]
+        tok = int(jnp.argmax(logits[0, -1]))
+        for _ in range(4):  # teacher-forced on the fp greedy stream
+            logits, cache, _ = lm.forward(params, cfg,
+                                          jnp.asarray([[tok]]), cache=cache)
+            outs.append(np.asarray(logits[0, -1]))
+            tok = int(jnp.argmax(logits[0, -1]))
+        return np.stack(outs)
+
+    ref = decode_logits("fp")
+    assert np.abs(decode_logits("int8") - ref).max() < 0.06
+    # int4 is flag-gated and documented loose: sanity-bound only
+    assert np.isfinite(decode_logits("int4")).all()
+
+
+@pytest.mark.slow
+def test_all_families_prefix_identity_and_int8_tolerance():
+    """Family sweep (single-host): greedy identity with the cache on vs
+    off for every cacheable family (state families via chunk-boundary
+    checkpoints), gated families run unchanged, and int8 KV stays inside
+    the per-family logit tolerance (DESIGN.md §12 table)."""
+    int8_tol = {"olmo-1b": 0.06, "gemma3-1b": 0.06,
+                "deepseek-moe-16b": 0.08, "rwkv6-3b": 1e-6,
+                "hymba-1.5b": 0.06, "whisper-small": 0.06,
+                "llama-3.2-vision-11b": 0.06}
+    for arch in CACHEABLE_ARCHS + GATED_ARCHS:
+        cfg_a = ARCHS[arch].reduced()
+        params_a = lm.init_lm(KEY, cfg_a)
+        # n=6 > batch_slots so a second admission wave can hit the cache
+        reqs = lambda: _shared_prefix_requests(n=6, prefix_len=16,
+                                               max_new=4)
+        chunk = 8 if (cfg_a.family in ("ssm", "hybrid")) else None
+        _, off = _run_engine(cfg_a, params_a, reqs(), prefill_chunk=chunk)
+        on_eng, on = _run_engine(cfg_a, params_a, reqs(),
+                                 prefill_chunk=chunk, prefix_cache=True)
+        assert off == on, arch
+        if arch in CACHEABLE_ARCHS:
+            assert on_eng.metrics.counters["prefix_hits"] > 0, arch
+        # int8 tolerance: engine greedy streams under int8 KV vs fp differ
+        # only where logit gaps are inside the quantization perturbation —
+        # assert the direct logit bound instead of token equality
+        prompt = np.arange(7, 15, dtype=np.int32)
+        extra = {}
+        if cfg_a.encoder is not None:
+            rng = np.random.default_rng(0)
+            extra["frames"] = jnp.asarray(rng.standard_normal(
+                (1, cfg_a.encoder.n_frames, cfg_a.encoder.d_model),
+                dtype=np.float32))
+        if cfg_a.cross_attn_every > 0:
+            rng = np.random.default_rng(0)
+            extra["vision"] = jnp.asarray(rng.standard_normal(
+                (1, cfg_a.vision_tokens, cfg_a.d_model), dtype=np.float32))
+
+        def logits_for(store):
+            cache = lm.init_cache(cfg_a, 1, 32, kv_store=store)
+            logits, cache, _ = lm.forward(
+                params_a, cfg_a, jnp.asarray(prompt[None]), cache=cache,
+                **extra)
+            out = [np.asarray(logits[0, -1])]
+            tok = int(jnp.argmax(logits[0, -1]))
+            for _ in range(3):
+                logits, cache, _ = lm.forward(
+                    params_a, cfg_a, jnp.asarray([[tok]]), cache=cache,
+                    **extra)
+                out.append(np.asarray(logits[0, -1]))
+                tok = int(jnp.argmax(logits[0, -1]))
+            return np.stack(out)
+
+        diff = float(np.abs(logits_for("int8") - logits_for("fp")).max())
+        assert diff < int8_tol[arch], (arch, diff)
+
+
+@pytest.mark.slow
+def test_mesh_prefix_cache_token_identity():
+    """(1, 2) mesh: the sharded engine with the prefix cache (fp and int8
+    stores) decodes token-identically to cache-off, with hits recorded —
+    segments place on the mesh via plan_segment, splices stay shard-local."""
+    r = run_sub("""
+    import json
+    import jax, numpy as np
+    from repro.configs.registry import ARCHS
+    from repro.launch.mesh import make_mesh
+    from repro.models import lm
+    from repro.serving.engine import Engine, Request
+
+    def reqs():
+        # 6 requests > 4 slots: the second admission wave hits the cache
+        shared = list(range(10, 26))
+        return [Request(rid=i, prompt=np.asarray(
+            shared + [100 + 7 * i, 40 + i], np.int32), max_new_tokens=4)
+            for i in range(6)]
+
+    def run(cfg, params, mesh, **kw):
+        eng = Engine(cfg, params, batch_slots=4, max_len=64, mesh=mesh,
+                     **kw)
+        for r in reqs():
+            eng.submit(r)
+        done = eng.run_until_drained()
+        return eng, {r.rid: list(r.generated) for r in done}
+
+    results = {}
+    cfg = ARCHS["olmo-1b"].reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    mesh = make_mesh((1, 2), ("data", "model"))
+    for store in ("fp", "int8"):
+        _, off = run(cfg, params, mesh, kv_store=store)
+        eng, on = run(cfg, params, mesh, kv_store=store, prefix_cache=True)
+        results[store] = {
+            "identical": off == on,
+            "hits": eng.metrics.counters["prefix_hits"],
+            "saved": eng.metrics.counters["prefill_tokens_saved"],
+        }
+    print(json.dumps(results))
+    """, devices=2, timeout=1200)
+    for store, v in r.items():
+        assert v["identical"], store
+        assert v["hits"] > 0 and v["saved"] > 0, store

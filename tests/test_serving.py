@@ -280,7 +280,7 @@ def test_metrics_document_schema():
     m.record_step(clk(), step_s=0.1, decode_s=0.08, decode_batch=2,
                   n_active=2, queue_depth=1)
     doc = m.to_dict()
-    assert doc["schema"] == 2
+    assert doc["schema"] == 3
     assert doc["ttft_ms"]["p50"] == pytest.approx(250.0)
     assert doc["per_token_ms"]["count"] == 1
     assert doc["counters"]["tokens_out"] == 3
@@ -780,7 +780,7 @@ def test_serve_bench_document(tmp_path, cfg, params):
     import json
 
     assert json.load(open(out)) == doc
-    assert doc["schema"] == 3
+    assert doc["schema"] == 4
     assert doc["mesh"] is None  # single-host run: no mesh record
     runs = {r["policy"]: r for r in doc["runs"]}
     assert runs["fcfs"]["completed"] == 6

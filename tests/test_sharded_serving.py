@@ -264,7 +264,7 @@ def test_sharded_engine_2x2_mesh_token_identity():
 
 @pytest.mark.slow
 def test_serve_bench_mesh_document():
-    """serve_bench --mesh: schema-3 document records the mesh and per-shard
+    """serve_bench --mesh: schema-4 document records the mesh and per-shard
     dispatch stats for every run."""
     r = run_sub("""
     import json
@@ -287,7 +287,7 @@ def test_serve_bench_mesh_document():
         "completed": [r["completed"] for r in doc["runs"]],
     }))
     """)
-    assert r["schema"] == 3
+    assert r["schema"] == 4
     assert r["mesh"] == {"data": 1, "model": 4}
     assert r["run_mesh"] == {"data": 1, "model": 4}
     assert r["axes"], "no per-shard stats in the mesh run"

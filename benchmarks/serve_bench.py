@@ -19,6 +19,8 @@ performance; the dispatch-mix and scheduling behavior are real.
     PYTHONPATH=src python benchmarks/serve_bench.py \\
         --trace shared-prefix --prefix-cache --smoke   # §12 hit-rate leg
     PYTHONPATH=src python benchmarks/serve_bench.py --kv-store int8
+    PYTHONPATH=src python benchmarks/serve_bench.py \\
+        --smoke --trace-out TRACE.json     # Perfetto flight recording
 """
 
 from __future__ import annotations
@@ -116,6 +118,16 @@ def main(argv=None) -> int:
                     help="tiny trace + slot count (CI leg)")
     ap.add_argument("--json", metavar="OUT", default=None,
                     help="write the schema-versioned comparison document")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="flight-record the last policy run: write a "
+                         "Perfetto-loadable Chrome trace to PATH and the "
+                         "schema-1 summary (phase breakdowns + dispatch "
+                         "drift report) next to it")
+    ap.add_argument("--trace-timing", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="time each dispatch decision (block_until_ready) "
+                         "for the predicted-vs-measured drift report; "
+                         "default: on when --trace-out is set")
     args = ap.parse_args(argv)
 
     policies = POLICIES if args.policy == "all" else (args.policy,)
@@ -134,12 +146,18 @@ def main(argv=None) -> int:
         prefill_chunk=args.prefill_chunk,
         trace_kind=args.trace, prefix_cache=args.prefix_cache,
         kv_store=args.kv_store,
-        trace_config=tcfg, out=args.json,
+        trace_config=tcfg,
+        trace_out=args.trace_out, trace_timing=args.trace_timing,
+        out=args.json,
     )
     for run in doc["runs"]:
         print_run(run)
     if args.json:
         print(f"wrote {len(doc['runs'])} runs -> {args.json}")
+    ft = doc.get("flight_trace")
+    if ft:
+        print(f"flight trace ({ft['policy']}) -> {ft['path']} "
+              f"(summary: {ft['summary']})")
     return 0
 
 

@@ -103,19 +103,8 @@ class MeasurementRecord:
 
     @property
     def robust_us(self) -> float:
-        """Median with median/MAD outlier rejection.
-
-        Trials more than 3 scaled-MADs from the median are dropped (a GC
-        pause or scheduler hiccup must not drag a constant), then the
-        median of the survivors is the record's one number.
-        """
-        a = sorted(self.trials_us)
-        med = _median(a)
-        mad = _median(sorted(abs(t - med) for t in a))
-        if mad <= 0:
-            return med
-        keep = [t for t in a if abs(t - med) <= 3 * 1.4826 * mad]
-        return _median(keep) if keep else med
+        """Median with median/MAD outlier rejection (see :func:`robust_us`)."""
+        return robust_us(self.trials_us)
 
     def to_json(self) -> dict:
         return {
@@ -132,6 +121,24 @@ def _median(a: list[float]) -> float:
     if n == 0:
         return float("nan")
     return a[n // 2] if n % 2 else 0.5 * (a[n // 2 - 1] + a[n // 2])
+
+
+def robust_us(trials_us) -> float:
+    """Median with median/MAD outlier rejection.
+
+    Trials more than 3 scaled-MADs from the median are dropped (a GC
+    pause or scheduler hiccup must not drag a constant), then the median
+    of the survivors is the one number.  Shared by the calibration fitter
+    and the observability drift report
+    (:meth:`repro.observability.trace.Tracer.drift_report`).
+    """
+    a = sorted(trials_us)
+    med = _median(a)
+    mad = _median(sorted(abs(t - med) for t in a))
+    if mad <= 0:
+        return med
+    keep = [t for t in a if abs(t - med) <= 3 * 1.4826 * mad]
+    return _median(keep) if keep else med
 
 
 def _time_trials(thunk, trials: int) -> tuple[float, ...]:

@@ -509,6 +509,23 @@ def entry_to_program_plan(entry: dict) -> ProgramPlan:
     return ProgramPlan(mode=entry["mode"], n_launches=entry["n_launches"])
 
 
+def synthesize_gemv(key: "GemvKey") -> tuple[jnp.ndarray, PackedWeights]:
+    """Random ``(x, packed weights)`` matching a single-GEMV key.
+
+    Shared by the autotuner and the dispatch trace-timing hook — neither
+    may time the caller's arrays (they may be tracers mid-``jit``)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(
+        rng.standard_normal((key.batch, key.K)).astype(np.float32)
+    ).astype(key.dtype)
+    w = rng.standard_normal((key.M, key.K)).astype(np.float32)
+    if key.bits < 16:
+        pw = quantize_weight(w, bits=key.bits, block=key.block)
+    else:
+        pw = pack_weight(jnp.asarray(w).astype(key.dtype))
+    return x, pw
+
+
 def _synthesize_program(key: ProgramKey) -> GemvProgram:
     """Build a program with random data matching a key — the autotuner must
     never time the caller's arrays (they may be tracers mid-``jit``)."""
@@ -989,15 +1006,7 @@ class GemvBackend:
             policy.interpret if policy.interpret is not None
             else self.default_interpret()
         )
-        rng = np.random.default_rng(0)
-        x = jnp.asarray(
-            rng.standard_normal((key.batch, key.K)).astype(np.float32)
-        ).astype(key.dtype)
-        w = rng.standard_normal((key.M, key.K)).astype(np.float32)
-        if key.bits < 16:
-            pw = quantize_weight(w, bits=key.bits, block=key.block)
-        else:
-            pw = pack_weight(jnp.asarray(w).astype(key.dtype))
+        x, pw = synthesize_gemv(key)
         best: tuple[float, str, GemvPlan | None] | None = None
         for kernel, plan in self.autotune_candidates(key, pw, policy):
             try:

@@ -58,10 +58,10 @@ New code should go through ``get_backend(...)`` / the backend methods.
 
 from __future__ import annotations
 
+import copy
 import dataclasses
-import sys
 import threading
-import warnings
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -91,6 +91,8 @@ from repro.kernels.ops import (
     pack_weight,
 )
 from repro.kernels.tpu_plan import TPUGemvPlan
+from repro.observability.log import reset_warn_once, warn_once
+from repro.observability.trace import current_tracer as _current_tracer
 
 __all__ = [
     "DispatchPolicy", "DEFAULT_POLICY", "GemvKey", "GemvPlan",
@@ -156,9 +158,6 @@ _DISPATCH_COUNTERS: dict = {
     # repro.calibration and loaded from the table's `calibration` section.
     "cost_model_source": {"seed": 0, "calibrated": 0},
 }
-# Backend:kind pairs whose capability-gate degradation already warned
-# (warn once per process, not once per shape — the counter keeps counting).
-_FALLBACK_WARNED: set[str] = set()
 _AUTOTUNE_TABLE = AutotuneTable()
 
 
@@ -177,20 +176,15 @@ def dispatch_stats() -> dict:
     decisions from ``matmul_fallback`` to ``gemv_path`` (serving/metrics
     snapshots this per engine step).  Reset by :func:`clear_plan_cache`.
     """
+    # Deep-copy the whole counter tree in ONE lock hold: every section of
+    # the returned snapshot is from the same instant, and no returned
+    # container aliases live state a concurrent dispatch could mutate
+    # under a reader (ServingMetrics.expert_balance and dispatch_delta
+    # walk the snapshot lock-free — they must be able to).
     with _LOCK:
         return {
             "plan_cache": dict(_CACHE_STATS),
-            "kernel_picks": dict(_DISPATCH_COUNTERS["kernel_picks"]),
-            "program_modes": dict(_DISPATCH_COUNTERS["program_modes"]),
-            "gemv_path": _DISPATCH_COUNTERS["gemv_path"],
-            "matmul_fallback": _DISPATCH_COUNTERS["matmul_fallback"],
-            "sharded_axes": dict(_DISPATCH_COUNTERS["sharded_axes"]),
-            "shard_picks": dict(_DISPATCH_COUNTERS["shard_picks"]),
-            "program_fallbacks": dict(
-                _DISPATCH_COUNTERS["program_fallbacks"]),
-            "expert_load": dict(_DISPATCH_COUNTERS["expert_load"]),
-            "cost_model_source": dict(
-                _DISPATCH_COUNTERS["cost_model_source"]),
+            **copy.deepcopy(_DISPATCH_COUNTERS),
         }
 
 
@@ -207,16 +201,13 @@ def record_program_fallback(backend_name: str, kind: str) -> None:
     with _LOCK:
         pf = _DISPATCH_COUNTERS["program_fallbacks"]
         pf[tag] = pf.get(tag, 0) + 1
-        first = tag not in _FALLBACK_WARNED
-        if first:
-            _FALLBACK_WARNED.add(tag)
-    if first:
-        warnings.warn(
-            f"backend {backend_name!r} cannot lower its native {kind} "
-            f"program kernel here; degrading to the portable executor "
-            f"(counted in dispatch_stats()['program_fallbacks'])",
-            RuntimeWarning, stacklevel=3,
-        )
+    warn_once(
+        f"program_fallback:{tag}",
+        f"backend {backend_name!r} cannot lower its native {kind} "
+        f"program kernel here; degrading to the portable executor "
+        f"(counted in dispatch_stats()['program_fallbacks'])",
+        category=RuntimeWarning, depth=2,
+    )
 
 
 def record_expert_load(*, routed_tokens: int, experts: int,
@@ -287,7 +278,8 @@ def clear_plan_cache() -> None:
             "max_tokens": 0, "padded_slots": 0}
         _DISPATCH_COUNTERS["cost_model_source"] = {"seed": 0,
                                                    "calibrated": 0}
-        _FALLBACK_WARNED.clear()
+    # fallback warnings live as long as the decisions they describe
+    reset_warn_once("program_fallback:")
 
 
 def clear_autotune_table() -> None:
@@ -296,13 +288,8 @@ def clear_autotune_table() -> None:
     _AUTOTUNE_TABLE.clear()
     for name in available_backends():
         get_backend(name).reset_calibration()
-    with _LOCK:
-        _CALIBRATION_WARNED.clear()
-
-
-# Backends whose `calibration` table entry failed validation and already
-# warned (once per backend — the entry won't get better between misses).
-_CALIBRATION_WARNED: set[str] = set()
+    # a reloaded table's entry may differ — let a bad one warn again
+    reset_warn_once("calibration:")
 
 
 def _maybe_apply_calibration(backend) -> str:
@@ -322,18 +309,143 @@ def _maybe_apply_calibration(backend) -> str:
     try:
         cm = backend.seed_cost_model.with_constants(**entry["constants"])
     except (TypeError, ValueError) as e:
-        with _LOCK:
-            first = backend.name not in _CALIBRATION_WARNED
-            _CALIBRATION_WARNED.add(backend.name)
-        if first:
-            warnings.warn(
-                f"ignoring invalid calibration entry for backend "
-                f"{backend.name!r}: {e}", RuntimeWarning, stacklevel=3,
-            )
+        # once per backend — the entry won't get better between misses
+        warn_once(
+            f"calibration:{backend.name}",
+            f"ignoring invalid calibration entry for backend "
+            f"{backend.name!r}: {e}", category=RuntimeWarning, depth=2,
+        )
         return backend.cost_model_source
     if backend.cost_model != cm:
         backend.apply_calibration(cm)
     return "calibrated"
+
+
+# ---------------------------------------------------------------------------
+# Dispatch attribution (DESIGN.md §13): price (and optionally time) each
+# fresh decision into the installed tracer.  Hot-path cost when no tracer
+# is installed: one module-global read + `is None` — and only on plan-cache
+# MISSES; the cached decode path never reaches these at all.
+# ---------------------------------------------------------------------------
+
+# Re-entrancy guard for --trace-timing: timing a program decision traces
+# its executor, which may plan nested single-GEMV decisions — those still
+# *record* (cheap, predicted-only) but must not recursively re-time.
+_TIMING_TLS = threading.local()
+
+
+def _trace_timing_active(tr) -> bool:
+    return tr.timing and not getattr(_TIMING_TLS, "active", False)
+
+
+def _time_trials_us(make_thunk, trials: int = 3) -> tuple[float, ...] | None:
+    """Jitted warmup + per-trial ``block_until_ready`` times (µs).
+
+    Mirrors the calibration measurement protocol (measure.py): compile and
+    first-touch land in the warmup, each trial syncs.  Returns None when
+    the decision cannot execute stand-alone here (e.g. a CUDA-only kernel
+    decision resolved on a CPU host) — attribution then stays
+    predicted-only rather than failing the dispatch.
+
+    Dispatch decisions mostly resolve at jit-trace time (the engine's step
+    functions are jitted), where a plain ``jax.jit(...)(x)`` call would be
+    staged into the ambient trace as one more equation — yielding tracers,
+    not timeable arrays.  ``ensure_compile_time_eval`` escapes to eager
+    evaluation for the synthesized concrete inputs, so the measurement
+    runs (and syncs) for real even mid-trace.
+    """
+    import jax
+
+    _TIMING_TLS.active = True
+    try:
+        with jax.ensure_compile_time_eval():
+            thunk = make_thunk()
+            thunk().block_until_ready()
+            out = []
+            for _ in range(trials):
+                t0 = time.perf_counter()
+                thunk().block_until_ready()
+                out.append((time.perf_counter() - t0) * 1e6)
+            return tuple(out)
+    except Exception:
+        return None
+    finally:
+        _TIMING_TLS.active = False
+
+
+def _trace_gemv_decision(tr, backend, key: GemvKey, policy: DispatchPolicy,
+                         kernel: str, plan, source: str) -> None:
+    """Record one fresh single-GEMV decision with the installed tracer."""
+    import jax
+
+    x_bytes = jnp.dtype(key.dtype).itemsize
+    try:
+        predicted = backend.estimate_cost_us(
+            kernel, key.M, key.K, key.batch, bits=key.bits,
+            x_bytes=x_bytes, plan=plan)
+    except Exception:
+        predicted = float("nan")
+    trials = None
+    if _trace_timing_active(tr):
+        from repro.kernels.backends.base import synthesize_gemv
+
+        interpret = (policy.interpret if policy.interpret is not None
+                     else backend.default_interpret())
+
+        def make_thunk():
+            # synthesized inputs (the caller's arrays may be tracers
+            # mid-jit), jitted with the activation as an argument so XLA
+            # cannot fold the GEMV into a constant
+            x, pw = synthesize_gemv(key)
+            fn = jax.jit(lambda xx: backend.execute(
+                kernel, xx, pw, plan, interpret))
+            return lambda: fn(x)
+
+        trials = _time_trials_us(make_thunk)
+    tr.record_dispatch(
+        backend=backend.name, kind="single", kernel=kernel,
+        shape=key.table_key(), predicted_us=predicted, source=source,
+        trials_us=trials, batch=key.batch,
+        gate=("matmul_fallback" if key.batch > policy.batch_threshold
+              else "gemv_path"))
+
+
+def _trace_program_decision(tr, backend, key: ProgramKey,
+                            policy: DispatchPolicy, pplan: ProgramPlan,
+                            source: str) -> None:
+    """Record one fresh program decision (mode = the "kernel")."""
+    import jax
+
+    x_bytes = jnp.dtype(key.dtype).itemsize
+    try:
+        predicted = backend.estimate_program_cost_us(
+            key, mode=pplan.mode, x_bytes=x_bytes)
+    except Exception:
+        predicted = float("nan")
+    trials = None
+    if _trace_timing_active(tr):
+        from repro.kernels.backends.base import _synthesize_program
+
+        interpret = (policy.interpret if policy.interpret is not None
+                     else backend.default_interpret())
+
+        def make_thunk():
+            program = _synthesize_program(key)
+            if program.counts is not None:
+                fn = jax.jit(lambda xx, cc: backend.execute_program(
+                    dataclasses.replace(program, x=xx, counts=cc),
+                    pplan, policy, interpret))
+                return lambda: fn(program.x, program.counts)
+            fn = jax.jit(lambda xx: backend.execute_program(
+                dataclasses.replace(program, x=xx), pplan, policy,
+                interpret))
+            return lambda: fn(program.x)
+
+        trials = _time_trials_us(make_thunk)
+    tr.record_dispatch(
+        backend=backend.name, kind=key.kind, kernel=pplan.mode,
+        shape=key.table_key(), predicted_us=predicted, source=source,
+        trials_us=trials, batch=key.batch)
 
 
 def load_autotune_table(path: str) -> dict[str, dict[str, dict]]:
@@ -486,6 +598,10 @@ def _resolve(backend, key: GemvKey,
         _count_decision(backend.name, key.batch, policy, kernel=kernel,
                         shard_axis=shard_axis, shard_pick=shard_pick,
                         source=source)
+        tracer = _current_tracer()
+        if tracer is not None:
+            _trace_gemv_decision(tracer, backend, key, policy, kernel,
+                                 plan, source)
     return kernel, plan
 
 
@@ -672,6 +788,10 @@ def _resolve_program(backend, key: ProgramKey,
         _count_decision(backend.name, key.batch, policy, mode=pplan.mode,
                         shard_axis=shard_axis, shard_pick=shard_pick,
                         source=source)
+        tracer = _current_tracer()
+        if tracer is not None:
+            _trace_program_decision(tracer, backend, key, policy, pplan,
+                                    source)
     return pplan
 
 
@@ -832,24 +952,17 @@ _DEPRECATED_CONSTANTS = {
 # step pre-PR-2), and a warning per step floods logs without adding signal.
 # Keyed on (symbol, caller file, caller line) so distinct sites — and
 # distinct constants read from one line — each still get their one warning.
-_WARNED_SITES: set[tuple[str, str, int]] = set()
-
-
 def _warn_deprecated_once(name: str, message: str, *, depth: int) -> None:
     """Warn for ``name`` unless this caller site already was warned.
 
     ``depth`` is the ``sys._getframe`` hop count from this helper to the
     *user's* frame (1 = our direct caller, 2 = its caller, ...); the same
     frame feeds ``stacklevel`` so the warning points at the deprecated
-    use, not this helper.
+    use, not this helper.  Delegates to the shared per-site
+    :func:`repro.observability.log.warn_once` memo (one extra frame).
     """
-    frame = sys._getframe(depth)
-    site = (name, frame.f_code.co_filename, frame.f_lineno)
-    with _LOCK:
-        if site in _WARNED_SITES:
-            return
-        _WARNED_SITES.add(site)
-    warnings.warn(message, DeprecationWarning, stacklevel=depth + 1)
+    warn_once(f"deprecated:{name}", message, category=DeprecationWarning,
+              depth=depth + 1, per_site=True)
 
 
 def __getattr__(name: str):

@@ -1,0 +1,28 @@
+"""Observability: flight recorder, Perfetto export, structured warn-once.
+
+The serving/dispatch layers attribute *where a request's latency went*
+(queued / prefill / decode / preempted, per request) and *how well the
+cost model priced each dispatch decision* (predicted vs measured µs per
+kernel) through one low-overhead :class:`~repro.observability.trace.Tracer`
+(DESIGN.md §13).  Nothing in this package imports jax or the kernel
+layer at module scope — a tracer is importable (and a no-op check is
+affordable) everywhere.
+"""
+
+from repro.observability.log import reset_warn_once, warn_once  # noqa: F401
+from repro.observability.trace import (  # noqa: F401
+    SCHEMA_VERSION,
+    DispatchRecord,
+    Event,
+    Span,
+    Tracer,
+    current_tracer,
+    install_tracer,
+    uninstall_tracer,
+)
+
+__all__ = [
+    "SCHEMA_VERSION", "Tracer", "Span", "Event", "DispatchRecord",
+    "install_tracer", "uninstall_tracer", "current_tracer",
+    "warn_once", "reset_warn_once",
+]

@@ -1,0 +1,157 @@
+"""Trace export: Chrome trace-event JSON (Perfetto) + schema-1 summary.
+
+Two artifacts per flight recording (DESIGN.md §13):
+
+* :func:`chrome_trace` — the Chrome trace-event format Perfetto loads
+  directly (https://ui.perfetto.dev → "Open trace file").  Layout:
+  one **process**, with the engine's own spans (prefill waves, chunks,
+  decode steps) on the ``engine`` thread track, one thread track **per
+  KV slot** carrying that slot's prefill/decode residency, per-request
+  **async spans** (``b``/``e`` events keyed by request id — each request
+  renders as one bar with its phases nested inside), and **counter
+  tracks** for the per-step gauges (queue depth, active slots, decode
+  batch).
+* :func:`summary` — a schema-versioned JSON document for machines: every
+  finished request's phase breakdown (time-in-queue / prefill / decode /
+  preempted, ms), the dispatch drift report (predicted-vs-measured per
+  kernel), gauge summaries, and ring-buffer drop counts.  The CI
+  ``trace-smoke`` leg asserts on this document, not on the Perfetto one.
+
+Timestamps are the tracer's µs monotonic clock — already the unit the
+trace-event format wants.
+"""
+
+from __future__ import annotations
+
+import json
+
+from repro.observability.trace import SCHEMA_VERSION, Tracer
+
+_PID = 1
+_ENGINE_TID = 0
+_REQUESTS_TID = 1
+_SLOT_TID_BASE = 10
+
+
+def _track_tid(track: str) -> int:
+    if track == "engine":
+        return _ENGINE_TID
+    if track == "requests":
+        return _REQUESTS_TID
+    if track.startswith("slot"):
+        return _SLOT_TID_BASE + int(track[4:])
+    return _REQUESTS_TID
+
+
+def chrome_trace(tracer: Tracer) -> dict:
+    """Render the tracer's buffers as a Chrome trace-event document."""
+    events: list[dict] = [
+        {"ph": "M", "pid": _PID, "name": "process_name",
+         "args": {"name": "repro serving engine"}},
+        {"ph": "M", "pid": _PID, "tid": _ENGINE_TID, "name": "thread_name",
+         "args": {"name": "engine"}},
+        {"ph": "M", "pid": _PID, "tid": _REQUESTS_TID, "name": "thread_name",
+         "args": {"name": "requests"}},
+    ]
+    named_slots: set[int] = set()
+    with tracer._lock:
+        spans = list(tracer.spans)
+        points = list(tracer.events)
+        counters = list(tracer.counters)
+    for s in spans:
+        tid = _track_tid(s.track)
+        if s.track.startswith("slot") and tid not in named_slots:
+            named_slots.add(tid)
+            events.append({"ph": "M", "pid": _PID, "tid": tid,
+                           "name": "thread_name",
+                           "args": {"name": s.track}})
+        if s.cat in ("request", "phase") and s.rid is not None:
+            # async pair keyed by rid: phases nest inside the request bar
+            common = {"cat": "request", "id": s.rid, "pid": _PID,
+                      "tid": _REQUESTS_TID, "name": s.name}
+            events.append({**common, "ph": "b", "ts": s.start_us,
+                           "args": dict(s.attrs)})
+            events.append({**common, "ph": "e",
+                           "ts": s.start_us + s.dur_us})
+            if not s.track.startswith("slot"):
+                continue
+            # on-slot phases additionally render as residency on the
+            # slot's own track (fall through to the complete event)
+        events.append({"ph": "X", "cat": s.cat, "name": s.name,
+                       "pid": _PID, "tid": tid, "ts": s.start_us,
+                       "dur": max(s.dur_us, 0.0),
+                       "args": {**s.attrs,
+                                **({"rid": s.rid}
+                                   if s.rid is not None else {})}})
+    for e in points:
+        events.append({"ph": "i", "s": "p", "cat": e.cat, "name": e.name,
+                       "pid": _PID, "tid": _ENGINE_TID, "ts": e.ts_us,
+                       "args": dict(e.attrs)})
+    for c in counters:
+        events.append({"ph": "C", "pid": _PID, "name": c.name,
+                       "ts": c.ts_us, "args": {c.name: c.value}})
+    return {"traceEvents": events, "displayTimeUnit": "ms",
+            "otherData": {"schema": SCHEMA_VERSION}}
+
+
+def summary(tracer: Tracer, extra: dict | None = None) -> dict:
+    """The schema-1 machine-readable run summary."""
+    with tracer._lock:
+        requests = [dict(r) for r in tracer.requests]
+        counters = list(tracer.counters)
+        n_spans = len(tracer.spans)
+        n_events = len(tracer.events)
+        dropped = dict(tracer.dropped)
+    reqs = []
+    for r in requests:
+        phases_ms = {k: v / 1e3 for k, v in r["phases"].items()}
+        reqs.append({
+            "rid": r["rid"], "outcome": r["outcome"],
+            "submit_ms": r["submit_us"] / 1e3,
+            "total_ms": r["total_us"] / 1e3,
+            "phases_ms": phases_ms,
+            "preemptions": r["preemptions"],
+            "attrs": r["attrs"],
+        })
+    gauge: dict[str, dict] = {}
+    for c in counters:
+        g = gauge.setdefault(c.name, {"n": 0, "last": 0.0, "max": 0.0})
+        g["n"] += 1
+        g["last"] = c.value
+        g["max"] = max(g["max"], c.value)
+    doc = {
+        "schema": SCHEMA_VERSION,
+        "requests": reqs,
+        "open_requests": list(tracer.open_requests),
+        "drift": tracer.drift_report(),
+        "gauges": gauge,
+        "n_spans": n_spans,
+        "n_events": n_events,
+        "dropped": dropped,
+    }
+    if extra:
+        doc.update(extra)
+    return doc
+
+
+def summary_path(trace_path: str) -> str:
+    """``TRACE.json`` -> ``TRACE.summary.json`` (the derived side file
+    ``serve_bench --trace-out`` writes next to the Perfetto trace)."""
+    if trace_path.endswith(".json"):
+        return trace_path[: -len(".json")] + ".summary.json"
+    return trace_path + ".summary.json"
+
+
+def write_chrome_trace(tracer: Tracer, path: str) -> dict:
+    doc = chrome_trace(tracer)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return doc
+
+
+def write_summary(tracer: Tracer, path: str,
+                  extra: dict | None = None) -> dict:
+    doc = summary(tracer, extra)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    return doc

@@ -1,0 +1,71 @@
+"""Structured warn-once: one memoized warning per key, mirrored to traces.
+
+The repo grew three independent warn-once mechanisms (dispatch deprecation
+shims keyed per call site, program-fallback degradations keyed per
+backend:kind, malformed calibration entries keyed per backend), each with
+its own memo set and reset path.  This module is the one implementation
+behind all of them:
+
+* ``warn_once(key, message)`` — warn through :mod:`warnings` the first
+  time ``key`` is seen, silently no-op after;
+* ``per_site=True`` — memoize on ``(key, caller file, caller line)``
+  instead, for shims on hot paths where *distinct* call sites each
+  deserve their one warning (the PR-2 deprecation-shim contract);
+* when a tracer is installed (:func:`~repro.observability.trace
+  .current_tracer`), the first warn also lands in the trace as a
+  structured ``warn_once`` event — a flight recording shows *which*
+  degradations fired during the run, not just aggregate counters.
+
+Callers that tie warning lifetime to a cache (``clear_plan_cache`` /
+``clear_autotune_table``) reset their namespace with
+``reset_warn_once(prefix)`` — keys are namespaced by convention
+(``"program_fallback:gpu:ragged"``, ``"calibration:tpu"``,
+``"deprecated:HBM_BW"``).
+"""
+
+from __future__ import annotations
+
+import sys
+import threading
+import warnings
+
+from repro.observability.trace import current_tracer
+
+_LOCK = threading.Lock()
+_WARNED: set[tuple] = set()
+
+
+def warn_once(key: str, message: str, *, category=RuntimeWarning,
+              depth: int = 1, per_site: bool = False) -> bool:
+    """Warn for ``key`` unless it already warned; returns True on first.
+
+    ``depth`` is the ``sys._getframe`` hop count from this helper to the
+    frame the warning should point at (1 = our direct caller, 2 = its
+    caller, ...); it feeds both the per-site memo key and ``stacklevel``.
+    """
+    if per_site:
+        f = sys._getframe(depth)
+        memo = (key, f.f_code.co_filename, f.f_lineno)
+    else:
+        memo = (key,)
+    with _LOCK:
+        if memo in _WARNED:
+            return False
+        _WARNED.add(memo)
+    tracer = current_tracer()
+    if tracer is not None:
+        tracer.event("warn_once", cat="log", key=key,
+                     category=category.__name__, message=message)
+    warnings.warn(message, category, stacklevel=depth + 1)
+    return True
+
+
+def reset_warn_once(prefix: str | None = None) -> None:
+    """Forget warned keys (all, or only those starting with ``prefix``) so
+    the next occurrence warns again — the cache-clear reset hook."""
+    with _LOCK:
+        if prefix is None:
+            _WARNED.clear()
+            return
+        for memo in [m for m in _WARNED if str(m[0]).startswith(prefix)]:
+            _WARNED.discard(memo)

@@ -43,6 +43,9 @@ import numpy as np
 # ``kind`` / tenant-mixture fields, per-run docs carry ``kv_store`` and
 # (with the prefix cache on) the ``prefix_index`` segment-store stats plus
 # the metrics doc's ``prefix_cache`` section (metrics schema v3).
+# (Tracing is additive, not a schema bump: ``trace_out`` adds the optional
+# ``flight_trace`` pointer section; the trace/summary artifacts carry
+# their own schema, repro.observability.SCHEMA_VERSION.)
 SCHEMA_VERSION = 4
 
 TRACE_KINDS = ("uniform", "shared-prefix")
@@ -132,11 +135,18 @@ def run_policy(cfg, params, policy: str, trace: list[dict], *,
                gemv_backend: str | None = None, max_queue: int = 0,
                mesh=None, prefill_chunk: int | None = None,
                prefix_cache=False, kv_store: str = "fp",
-               max_iters: int = 5000) -> dict:
+               tracer=None, max_iters: int = 5000) -> dict:
     """Serve one trace under one scheduler policy; returns the metrics doc
     (per-step snapshots dropped — aggregates only) tagged with the run
     configuration.  ``mesh`` runs the sharded engine (DESIGN.md §9): the
-    run's dispatch counters then include the per-shard sections."""
+    run's dispatch counters then include the per-shard sections.
+
+    ``tracer`` installs a flight recorder (``repro.observability``) for
+    this run: the engine records per-request span timelines and the
+    dispatcher records per-decision attribution.  The tracer is
+    uninstalled before returning, so a traced run never leaks dispatch
+    recording into later runs in the same process.
+    """
     from repro.kernels import dispatch
     from repro.serving.engine import Engine, Request
     from repro.serving.scheduler import QueueFull
@@ -147,7 +157,7 @@ def run_policy(cfg, params, policy: str, trace: list[dict], *,
         gemv_batch_threshold=gemv_batch_threshold,
         gemv_backend=gemv_backend, scheduler=policy, max_queue=max_queue,
         mesh=mesh, prefill_chunk=prefill_chunk,
-        prefix_cache=prefix_cache, kv_store=kv_store,
+        prefix_cache=prefix_cache, kv_store=kv_store, tracer=tracer,
     )
     pending = [
         Request(rid=i, prompt=t["prompt"],
@@ -158,21 +168,27 @@ def run_policy(cfg, params, policy: str, trace: list[dict], *,
     arrivals = [t["arrival_step"] for t in trace]
     done = []
     retry: list = []
-    for step_i in range(max_iters):
-        due = retry
-        retry = []
-        while pending and arrivals[0] <= step_i:
-            due.append(pending.pop(0))
-            arrivals.pop(0)
-        for req in due:
-            try:
-                eng.submit(req)
-            except QueueFull:
-                retry.append(req)  # backpressure: retry next step
-        done.extend(eng.step())
-        if (not pending and not retry and not eng.active
-                and not eng.scheduler.queue):
-            break
+    try:
+        for step_i in range(max_iters):
+            due = retry
+            retry = []
+            while pending and arrivals[0] <= step_i:
+                due.append(pending.pop(0))
+                arrivals.pop(0)
+            for req in due:
+                try:
+                    eng.submit(req)
+                except QueueFull:
+                    retry.append(req)  # backpressure: retry next step
+            done.extend(eng.step())
+            if (not pending and not retry and not eng.active
+                    and not eng.scheduler.queue):
+                break
+    finally:
+        if tracer is not None:
+            from repro.observability.trace import uninstall_tracer
+
+            uninstall_tracer(tracer)
     doc = eng.metrics.to_dict(include_steps=False)
     doc.update(
         policy=policy,
@@ -204,6 +220,8 @@ def run_serve_trace(
     prefix_cache=False,
     kv_store: str = "fp",
     trace_config: TraceConfig | None = None,
+    trace_out: str | None = None,
+    trace_timing: bool | None = None,
     out: str | None = None,
 ) -> dict:
     """Serve one synthetic trace under each policy; returns (and optionally
@@ -226,6 +244,17 @@ def run_serve_trace(
     carries the hit-rate / prefill-tokens-saved / TTFT-split evidence the
     ``prefix-cache-smoke`` CI leg asserts.  ``kv_store`` selects the KV
     storage format (fp / int8 / int4) for every run.
+
+    ``trace_out=PATH`` flight-records the **last** policy run (one
+    artifact per bench; the plan cache is cleared per run so the traced
+    run re-plans and every dispatch decision lands in the record) and
+    writes a Perfetto-loadable Chrome trace to ``PATH`` plus a schema-1
+    summary JSON (per-request phase breakdowns + the predicted-vs-
+    measured drift report) next to it (``export.summary_path``).
+    ``trace_timing`` adds ``block_until_ready`` measurement to each
+    dispatch decision; it defaults to ON when ``trace_out`` is set so the
+    drift report prices kernels with both predicted and measured µs out
+    of the box — pass ``False`` to record predicted-only.
     """
     from repro.configs.registry import get_config
     from repro.models import lm
@@ -246,14 +275,21 @@ def run_serve_trace(
     tcfg = TraceConfig(**{**tcfg.__dict__, "seed": seed})
     rng = np.random.default_rng(tcfg.seed)
     trace = build_trace(tcfg, cfg.vocab, rng)
+    tracer = None
+    if trace_out:
+        from repro.observability.trace import Tracer
+
+        timing = True if trace_timing is None else bool(trace_timing)
+        tracer = Tracer(timing=timing)
     runs = [
         run_policy(cfg, params, policy, trace, batch_slots=batch_slots,
                    max_len=max_len,
                    gemv_batch_threshold=gemv_batch_threshold,
                    gemv_backend=gemv_backend, mesh=mesh,
                    prefill_chunk=prefill_chunk,
-                   prefix_cache=prefix_cache, kv_store=kv_store)
-        for policy in policies
+                   prefix_cache=prefix_cache, kv_store=kv_store,
+                   tracer=(tracer if i == len(policies) - 1 else None))
+        for i, policy in enumerate(policies)
     ]
     doc = {
         "schema": SCHEMA_VERSION,
@@ -280,6 +316,21 @@ def run_serve_trace(
         "kv_store": kv_store,
         "runs": runs,
     }
+    if tracer is not None:
+        from repro.observability import export
+
+        export.write_chrome_trace(tracer, trace_out)
+        spath = export.summary_path(trace_out)
+        export.write_summary(
+            tracer, spath,
+            extra={"arch": arch, "policy": policies[-1],
+                   "run": runs[-1] if runs else None})
+        doc["flight_trace"] = {
+            "path": trace_out,
+            "summary": spath,
+            "policy": policies[-1],
+            "timing": tracer.timing,
+        }
     if out:
         with open(out, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)

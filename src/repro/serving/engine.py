@@ -185,12 +185,21 @@ class Engine:
                  prefill_chunk: int | None = None,
                  prefix_cache=None,
                  kv_store: str = "fp",
+                 tracer=None,
                  clock=time.monotonic):
         self.cfg = cfg
         self.slots = batch_slots
         self.max_len = max_len
         self.clock = clock
         self.mesh = mesh
+        # Flight recorder (DESIGN.md §13): per-request phase spans, engine
+        # spans, per-step gauges.  Installing it process-wide is what arms
+        # the dispatch attribution hook in kernels/dispatch.py.
+        self.tracer = tracer
+        if tracer is not None:
+            from repro.observability.trace import install_tracer
+
+            install_tracer(tracer)
         self.prefill_chunk = prefill_chunk
         self.kv_store = validate_kv_store(kv_store)
         model_shards = 1
@@ -250,6 +259,8 @@ class Engine:
                              else 0),
                 moe_top_k=(cfg.moe.top_k if cfg.moe is not None else 1),
             ))
+        if tracer is not None:
+            self.scheduler.tracer = tracer
         self.metrics = metrics or ServingMetrics(clock=clock)
         self.kv = SlotKVCache(cfg, batch_slots, max_len, mesh=mesh,
                               kv_store=kv_store)
@@ -278,6 +289,7 @@ class Engine:
             # gemv_aware sort by the TAIL the request would actually run.
             self.scheduler.prefill_cost = self._prefill_cost
         self.active: dict[int, Request] = {}   # slot -> request
+        self._defrag_moves = 0                 # per-step defrag move count
         # slot -> [request, tokens spliced so far] (chunked prefill in
         # flight: the slot is alloc'd but not yet decoding)
         self._prefilling: dict[int, list] = {}
@@ -381,7 +393,13 @@ class Engine:
     def _prefix_match(self, r: Request):
         """Admission-time lookup; records hit/miss metrics and pins the
         request's first-admission outcome for the TTFT split."""
+        tr = self.tracer
+        t0 = tr.now_us() if tr is not None else 0.0
         m = self.prefix.match(self._pending_tokens(r))
+        if tr is not None:
+            tr.add_span("prefix_match", t0, tr.now_us(), rid=r.rid,
+                        hit=m is not None,
+                        matched=m.length if m is not None else 0)
         if r.prefix_hit is None:
             r.prefix_hit = m is not None
         self.metrics.prefix_lookup(m is not None,
@@ -399,6 +417,9 @@ class Engine:
         self.kv.slot_meta[slot]["prefix_match"] = m
         self.kv.splice_prefix(slot, self.prefix.gather(m), m.length)
         self._prefilling[slot] = [r, m.length]
+        if self.tracer is not None:
+            self.tracer.request_annotate(r.rid, slot=slot, prefix_hit=True,
+                                         prefix_tokens=m.length)
 
     def _prefix_insert(self, slot: int, tokens: np.ndarray) -> None:
         """File a slot's freshly prefilled KV into the radix index."""
@@ -465,17 +486,27 @@ class Engine:
             self.scheduler.submit(req, self.clock())
         except QueueFull:
             self.metrics.request_rejected()
+            if self.tracer is not None:
+                self.tracer.event("reject", cat="request", rid=req.rid,
+                                  reason="queue_full")
             raise
         self.metrics.request_submitted()
+        if self.tracer is not None:
+            # opens the request span; the request is now in its
+            # ``queued`` phase until admission
+            self.tracer.request_submit(req.rid, prompt_len=len(req.prompt))
 
     def step(self) -> list[Request]:
         """One engine iteration: expire + (maybe preempt) + admit + chunked
         prefill advance + one decode step.  Returns requests completed this
         step."""
         t0 = self.clock()
+        tr = self.tracer
         expired = self.scheduler.expire(t0)
         for r in expired:
             r.expired = True
+            if tr is not None:
+                tr.request_finish(r.rid, outcome="expired")
         self.expired.extend(expired)
         if expired:
             self.metrics.requests_expired(len(expired))
@@ -494,6 +525,11 @@ class Engine:
             for r in admitted:
                 r.admit_seq = self._admit_seq
                 self._admit_seq += 1
+                if tr is not None:
+                    # queued -> prefill (readmitted victims transition
+                    # preempted -> prefill through the same call)
+                    tr.request_phase(r.rid, "prefill",
+                                     admit_seq=r.admit_seq)
             misses = admitted
             if self.prefix is not None:
                 # prefix hits splice their cached segments and join the
@@ -519,11 +555,15 @@ class Engine:
             for r in chunked:
                 # alloc now (the admission decision spent this slot); the
                 # first chunk splices in the advance pass below
-                self._prefilling[self.kv.alloc()] = [r, 0]
+                slot = self.kv.alloc()
+                self._prefilling[slot] = [r, 0]
+                if tr is not None:
+                    tr.request_annotate(r.rid, slot=slot)
         if self._prefilling:
             finished.extend(self._advance_chunked())
         # an instant finish (eos / max_new_tokens=1 at prefill) can punch a
         # hole in the active prefix; decode needs it contiguous
+        self._defrag_moves = 0
         self._compact()
         decode_batch, decode_s = 0, 0.0
         if self.active:
@@ -536,6 +576,11 @@ class Engine:
             decode_batch=decode_batch, n_active=self.kv.n_active,
             queue_depth=len(self.scheduler),
         )
+        if tr is not None:
+            # per-step gauges -> counter tracks in the exported trace
+            tr.counter("queue_depth", len(self.scheduler))
+            tr.counter("active_slots", self.kv.n_active)
+            tr.counter("decode_batch", decode_batch)
         return finished
 
     def run_until_drained(self, max_iters: int = 1000) -> list[Request]:
@@ -592,6 +637,11 @@ class Engine:
         r.evictions += 1
         self.scheduler.requeue(r)
         self.metrics.request_evicted()
+        if self.tracer is not None:
+            # decode/prefill -> preempted; readmission re-enters prefill
+            self.tracer.request_phase(r.rid, "preempted",
+                                      evicted_from=slot,
+                                      evictions=r.evictions)
 
     def _prefill(self, admitted: list[Request]) -> list[Request]:
         # Recurrent state (rwkv / parallel mamba) must never see pad
@@ -608,7 +658,12 @@ class Engine:
         return finished
 
     def _prefill_wave(self, wave: list[Request]) -> list[Request]:
+        tr = self.tracer
+        wave_t0 = tr.now_us() if tr is not None else 0.0
         slots = [self.kv.alloc() for _ in wave]
+        if tr is not None:
+            for r, slot in zip(wave, slots):
+                tr.request_annotate(r.rid, slot=slot)
         toks = [self._pending_tokens(r) for r in wave]
         lengths = [len(t) for t in toks]
         Lmax = max(lengths)
@@ -643,6 +698,9 @@ class Engine:
             if self._activate(r, slot, tok, now):
                 finished.append(r)
         self.metrics.prefill_wave(len(wave), sum(lengths))
+        if tr is not None:
+            tr.add_span("prefill_wave", wave_t0, tr.now_us(),
+                        requests=len(wave), tokens=sum(lengths))
         return finished
 
     def _advance_chunked(self) -> list[Request]:
@@ -654,7 +712,9 @@ class Engine:
         # prefix-hit tails ride this seam even when chunking is off
         # (prefill_chunk=None): one un-split chunk covers the whole tail
         chunk_limit = self.prefill_chunk or self.max_len
+        tr = self.tracer
         for slot in sorted(self._prefilling):
+            chunk_t0 = tr.now_us() if tr is not None else 0.0
             req, consumed = self._prefilling[slot]
             toks = self._pending_tokens(req)
             chunk = toks[consumed:consumed + chunk_limit]
@@ -684,6 +744,10 @@ class Engine:
             self.kv.splice(sub, [slot], [consumed + c])
             self._prefilling[slot][1] = consumed + c
             self.metrics.prefill_chunk(c)
+            if tr is not None:
+                tr.add_span("prefill_chunk", chunk_t0, tr.now_us(),
+                            track=f"slot{slot}", rid=req.rid, slot=slot,
+                            tokens=c, consumed=consumed + c)
             if consumed + c < len(toks):
                 # State-carrying families can only resume from a snapshot,
                 # and edge SPLITS can't create one mid-edge — so chunk
@@ -709,6 +773,9 @@ class Engine:
         r.slot = slot
         self.active[slot] = r
         self.last_tok = self.last_tok.at[slot, 0].set(tok)
+        if self.tracer is not None:
+            # prefill -> decode at the first sampled token
+            self.tracer.request_phase(r.rid, "decode", slot=slot)
         self.metrics.first_token(r, now)
         self.metrics.tokens_generated(1)
         if self._should_finish(r, tok):
@@ -718,6 +785,8 @@ class Engine:
 
     def _decode(self) -> tuple[list[Request], int, float]:
         t0 = self.clock()
+        tr = self.tracer
+        step_t0 = tr.now_us() if tr is not None else 0.0
         n = self.kv.n_active  # compact() keeps alloc'd slots a prefix
         b = min(_next_pow2(n), self.slots)
         if self.gemv_policy is not None:
@@ -756,6 +825,10 @@ class Engine:
             if self._should_finish(r, tok):
                 self._finish(r, slot, now)
                 finished.append(r)
+        if tr is not None:
+            tr.add_span("decode_step", step_t0, tr.now_us(), bucket=b,
+                        active=n, defrag_moves=self._defrag_moves,
+                        finished=len(finished))
         return finished, b, decode_s
 
     def _sample(self, r: Request, logits_row: np.ndarray) -> int:
@@ -783,18 +856,31 @@ class Engine:
         self.kv.free(slot)
         del self.active[slot]
         self._rngs.pop(r.rid, None)
+        if self.tracer is not None:
+            self.tracer.request_finish(r.rid, outcome="finished",
+                                       tokens=len(r.generated),
+                                       evictions=r.evictions)
 
     def _compact(self) -> None:
         """Defrag active slots to a contiguous prefix; re-point per-slot
         side state (request map, chunked-prefill map, last tokens,
         modality rows)."""
+        tr = self.tracer
         for src, dst in self.kv.compact().items():
+            self._defrag_moves += 1
             if src in self.active:
                 r = self.active.pop(src)
                 r.slot = dst
                 self.active[dst] = r
             else:
                 self._prefilling[dst] = self._prefilling.pop(src)
+            if tr is not None:
+                moved = (self.active.get(dst)
+                         or self._prefilling.get(dst, [None])[0])
+                tr.event("defrag_move", src=src, dst=dst,
+                         rid=moved.rid if moved is not None else None)
+                if moved is not None:
+                    tr.request_annotate(moved.rid, slot=dst)
             self.last_tok = self.last_tok.at[dst].set(self.last_tok[src])
             # SWAP modality rows (not copy): the in-flight request keeps
             # its features at dst, and the freed src slot inherits dst's

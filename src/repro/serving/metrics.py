@@ -19,7 +19,9 @@ relies on this to show the scheduler's batch shaping moving the mix).
 
 Everything exports as one schema-versioned JSON document
 (:meth:`ServingMetrics.to_dict` / :meth:`to_json`).  Laptop-scale design:
-histograms keep raw samples and report exact percentiles.
+histograms keep raw samples and report exact percentiles up to a bounded
+reservoir cap (see :class:`Histogram`); per-step snapshots are bounded by
+``MAX_STEP_RECORDS`` with aggregates keeping full fidelity.
 """
 
 from __future__ import annotations
@@ -45,18 +47,50 @@ MAX_STEP_RECORDS = 4096
 
 
 class Histogram:
-    """Raw-sample histogram with exact percentiles (laptop scale)."""
+    """Bounded-memory histogram: exact percentiles up to ``max_samples``.
 
-    def __init__(self, name: str = ""):
+    Below the cap every sample is kept raw and percentiles are EXACT (the
+    documented laptop-scale behavior — the default cap of 65536 covers
+    every bench/CI run this repo performs).  Past the cap, reservoir
+    sampling (Vitter's Algorithm R, deterministic seed) keeps a uniform
+    sample of the full stream: ``count``/``mean``/``max`` stay exact
+    (tracked as scalars), percentiles degrade to unbiased estimates, and
+    memory stays O(max_samples) no matter how long the run
+    (``summary()["sampled"]`` marks the estimated regime).
+    """
+
+    DEFAULT_MAX_SAMPLES = 65536
+
+    def __init__(self, name: str = "", max_samples: int | None = None):
         self.name = name
+        self.max_samples = (self.DEFAULT_MAX_SAMPLES if max_samples is None
+                            else int(max_samples))
+        assert self.max_samples > 0
         self.samples: list[float] = []
+        self._n = 0                 # total recorded, >= len(samples)
+        self._sum = 0.0
+        self._max = float("-inf")
+        self._rng = np.random.default_rng(0)
 
     def record(self, value: float) -> None:
-        self.samples.append(float(value))
+        v = float(value)
+        self._n += 1
+        self._sum += v
+        if v > self._max:
+            self._max = v
+        if len(self.samples) < self.max_samples:
+            self.samples.append(v)
+        else:
+            # Algorithm R: sample i (1-based self._n) replaces a reservoir
+            # slot with probability max_samples / n — uniform over stream.
+            j = int(self._rng.integers(self._n))
+            if j < self.max_samples:
+                self.samples[j] = v
 
     @property
     def count(self) -> int:
-        return len(self.samples)
+        """Total values recorded (exact, even past the reservoir cap)."""
+        return self._n
 
     def percentile(self, p: float) -> float:
         if not self.samples:
@@ -64,17 +98,20 @@ class Histogram:
         return float(np.percentile(np.asarray(self.samples), p))
 
     def summary(self) -> dict:
-        if not self.samples:
+        if not self._n:
             return {"count": 0}
         a = np.asarray(self.samples)
-        return {
-            "count": int(a.size),
-            "mean": float(a.mean()),
+        out = {
+            "count": self._n,
+            "mean": self._sum / self._n,
             "p50": float(np.percentile(a, 50)),
             "p90": float(np.percentile(a, 90)),
             "p99": float(np.percentile(a, 99)),
-            "max": float(a.max()),
+            "max": self._max,
         }
+        if self._n > a.size:
+            out["sampled"] = int(a.size)
+        return out
 
 
 def _dispatch_snapshot() -> dict:

@@ -361,6 +361,15 @@ class PrefixCache:
         self._bytes -= victim.nbytes
         self._segments -= 1
         self.counters["evictions"] += 1
+        from repro.observability.trace import current_tracer
+
+        tr = current_tracer()
+        if tr is not None:
+            # capacity churn is a first-class trace signal: a flight
+            # recording of a regressed run shows WHEN the radix store
+            # started thrashing, not just the final eviction total
+            tr.event("prefix_evict", cat="prefix_cache",
+                     bytes=victim.nbytes, tokens=len(victim.tokens))
         return True
 
     def _make_room(self, incoming: int) -> bool:

@@ -111,6 +111,11 @@ class Scheduler:
     # prefix-cache tail length so cached prefixes price as near-zero
     # prefill (ISSUE 8: admission must see the hit, not the prompt).
     prefill_cost: object = None
+    # Optional flight recorder (repro.observability.trace.Tracer).  The
+    # engine installs its tracer here so queue-side transitions the engine
+    # never sees directly (a preempted victim re-entering the waiting
+    # queue, deadline expiry scans) land in the trace as events.
+    tracer: object = None
     _seq: int = 0                     # arrival tiebreak for stable ordering
     # Router-imbalance estimate from dispatch feedback (None: use the
     # config's expert_skew prior).  Floor 1.0 — a router can't be more
@@ -149,6 +154,9 @@ class Scheduler:
         ties still resolve by original arrival).
         """
         self.queue.append(req)
+        if self.tracer is not None:
+            self.tracer.event("requeue", cat="scheduler", rid=req.rid,
+                              evictions=getattr(req, "evictions", 0))
 
     def expire(self, now: float) -> list:
         """Remove (and return) queued requests whose deadline has passed.

@@ -1,0 +1,583 @@
+"""Observability subsystem tests (DESIGN.md §13): the flight-recorder
+phase machine (durations partition request lifetime exactly), bounded ring
+buffers, dispatch attribution + the drift report, the unified warn-once
+helper, Perfetto/summary export, the Histogram reservoir cap, per-step
+snapshot truncation fidelity, and the dispatch_stats snapshot under
+concurrent dispatch."""
+
+import json
+import threading
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.kernels import dispatch
+from repro.kernels.dispatch import DispatchPolicy
+from repro.models import lm
+from repro.observability import export
+from repro.observability.log import reset_warn_once, warn_once
+from repro.observability.trace import (
+    Tracer,
+    current_tracer,
+    install_tracer,
+    uninstall_tracer,
+)
+from repro.serving.engine import Engine, Request
+from repro.serving.metrics import (
+    MAX_STEP_RECORDS,
+    Histogram,
+    ServingMetrics,
+)
+from repro.serving.scheduler import SchedulerConfig
+
+INTERP = DispatchPolicy(interpret=True)
+MAX_LEN = 64
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return ARCHS["olmo-1b"].reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return lm.init_lm(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(autouse=True)
+def _clean_tracer_slot():
+    """No test may leak an installed tracer (or warned keys) into the next
+    — the slot is process-global on purpose (the dispatch hook's discovery
+    point), so tests must clean it up themselves."""
+    uninstall_tracer()
+    yield
+    uninstall_tracer()
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _prompts(cfg, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, L).astype(np.int32) for L in lengths]
+
+
+# --------------------------------------------------------------------------
+# Tracer: request phase machine
+# --------------------------------------------------------------------------
+
+
+def test_phase_machine_durations_partition_exactly():
+    clk = FakeClock()
+    tr = Tracer(clock=clk)
+    tr.request_submit(0, prompt_len=7)
+    clk.advance(0.010)                      # 10ms queued
+    tr.request_phase(0, "prefill", slot=2)
+    clk.advance(0.005)                      # 5ms prefill
+    tr.request_phase(0, "decode")
+    clk.advance(0.020)                      # 20ms decode
+    tr.request_finish(0, outcome="finished", tokens=4)
+    assert tr.open_requests == ()
+    (rec,) = tr.requests
+    assert rec["outcome"] == "finished"
+    assert rec["phases"] == pytest.approx(
+        {"queued": 10e3, "prefill": 5e3, "decode": 20e3})
+    # the acceptance bound is 1%; the machine gives exact partition
+    assert sum(rec["phases"].values()) == pytest.approx(rec["total_us"])
+    # phase spans + the request umbrella span were emitted
+    names = [s.name for s in tr.spans]
+    assert names == ["queued", "prefill", "decode", "request 0"]
+    # on-slot phases land on the slot track, off-slot on the request track
+    tracks = {s.name: s.track for s in tr.spans}
+    assert tracks["queued"] == "requests"
+    assert tracks["prefill"] == "slot2"
+    assert tracks["decode"] == "slot2"
+
+
+def test_phase_machine_preemption_reentry():
+    clk = FakeClock()
+    tr = Tracer(clock=clk)
+    tr.request_submit(1)
+    tr.request_phase(1, "prefill", slot=0)
+    clk.advance(0.004)
+    tr.request_phase(1, "decode")
+    clk.advance(0.002)
+    tr.request_phase(1, "preempted")        # evicted: slot cleared
+    clk.advance(0.003)
+    tr.request_phase(1, "prefill", slot=3)  # readmitted elsewhere
+    clk.advance(0.006)
+    tr.request_phase(1, "decode")
+    clk.advance(0.001)
+    tr.request_finish(1)
+    (rec,) = tr.requests
+    assert rec["preemptions"] == 1
+    # re-entered phases ACCUMULATE (one bucket per phase name)
+    assert rec["phases"]["prefill"] == pytest.approx(10e3)
+    assert rec["phases"]["decode"] == pytest.approx(3e3)
+    assert rec["phases"]["preempted"] == pytest.approx(3e3)
+    assert sum(rec["phases"].values()) == pytest.approx(rec["total_us"])
+    # the preempted span renders off-slot (the request holds no slot then)
+    preempted = [s for s in tr.spans if s.name == "preempted"]
+    assert [s.track for s in preempted] == ["requests"]
+
+
+def test_phase_machine_ignores_unknown_rids():
+    tr = Tracer()
+    tr.request_phase(99, "decode")
+    tr.request_annotate(99, slot=1)
+    tr.request_finish(99)
+    assert not tr.requests and not tr.spans
+
+
+def test_ring_buffers_bounded_with_drop_counts():
+    tr = Tracer(max_events=4, max_spans=3)
+    for i in range(10):
+        tr.event(f"e{i}")
+    for i in range(7):
+        tr.add_span(f"s{i}", 0.0, 1.0)
+    assert len(tr.events) == 4 and tr.dropped["events"] == 6
+    assert len(tr.spans) == 3 and tr.dropped["spans"] == 4
+    # ring semantics: the OLDEST entries were dropped
+    assert [e.name for e in tr.events] == ["e6", "e7", "e8", "e9"]
+
+
+def test_span_contextmanager_records_body_attrs():
+    clk = FakeClock()
+    tr = Tracer(clock=clk)
+    with tr.span("compact", track="engine") as attrs:
+        clk.advance(0.001)
+        attrs["moves"] = 3
+    (s,) = tr.spans
+    assert s.name == "compact" and s.attrs["moves"] == 3
+    assert s.dur_us == pytest.approx(1e3)
+
+
+def test_install_uninstall_semantics():
+    a, b = Tracer(), Tracer()
+    assert current_tracer() is None
+    assert install_tracer(a) is None
+    assert current_tracer() is a
+    assert install_tracer(b) is a           # returns the displaced tracer
+    # guarded uninstall: a no longer holds the slot, so no-op
+    assert uninstall_tracer(a) is None
+    assert current_tracer() is b
+    assert uninstall_tracer(b) is b
+    assert current_tracer() is None
+
+
+# --------------------------------------------------------------------------
+# Drift report
+# --------------------------------------------------------------------------
+
+
+def test_drift_report_groups_and_flags_stale():
+    tr = Tracer()
+    # calibrated-and-accurate kernel: ratio ~= 1.0 -> not stale
+    for p in (100.0, 110.0, 90.0):
+        tr.record_dispatch(backend="tpu", kind="single", kernel="pim",
+                           shape="s", predicted_us=p, source="calibrated",
+                           trials_us=(p, p, p))
+    # stale kernel: predicts 10x what it measures
+    tr.record_dispatch(backend="tpu", kind="single", kernel="splitk",
+                       shape="s", predicted_us=500.0, source="seed",
+                       trials_us=(50.0, 50.0, 50.0))
+    # untimed record: contributes count + predicted price only
+    tr.record_dispatch(backend="cpu", kind="fused", kernel="fused",
+                       shape="s", predicted_us=7.0, source="seed")
+    rep = tr.drift_report()
+    assert rep["n_dispatches"] == 5 and rep["n_timed"] == 4
+    pim = rep["kernels"]["tpu:pim"]
+    assert pim["n"] == 3 and not pim["stale"]
+    assert pim["pred_over_measured"]["p50"] == pytest.approx(1.0)
+    assert pim["cost_model_source"] == ["calibrated"]
+    splitk = rep["kernels"]["tpu:splitk"]
+    assert splitk["stale"]
+    assert splitk["pred_over_measured"]["p50"] == pytest.approx(10.0)
+    assert rep["stale_kernels"] == ["tpu:splitk"]
+    fused = rep["kernels"]["cpu:fused"]
+    assert fused["n"] == 1 and "pred_over_measured" not in fused
+
+
+def test_measured_us_is_outlier_robust():
+    from repro.calibration.measure import robust_us
+
+    tr = Tracer()
+    # one 50x outlier trial (GC pause / thermal blip) must not move the
+    # measurement: median/MAD rejection is the calibration-layer contract
+    tr.record_dispatch(backend="tpu", kind="single", kernel="pim",
+                       shape="s", predicted_us=100.0, source="seed",
+                       trials_us=(99.0, 100.0, 101.0, 5000.0))
+    (rec,) = tr.dispatches
+    assert rec.measured_us == pytest.approx(100.0)
+    assert robust_us((99.0, 100.0, 101.0, 5000.0)) == pytest.approx(100.0)
+
+
+# --------------------------------------------------------------------------
+# warn_once (the unified helper behind deprecations / fallbacks /
+# calibration warnings)
+# --------------------------------------------------------------------------
+
+
+def test_warn_once_per_key_and_prefix_reset():
+    reset_warn_once("t9:")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert warn_once("t9:a", "first a") is True
+        assert warn_once("t9:a", "again a") is False
+        assert warn_once("t9:b", "first b", category=DeprecationWarning)
+    assert [str(w.message) for w in rec] == ["first a", "first b"]
+    assert rec[1].category is DeprecationWarning
+    reset_warn_once("t9:a")                 # re-arm ONLY the a namespace
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert warn_once("t9:a", "a again") is True
+        assert warn_once("t9:b", "b again") is False
+    assert [str(w.message) for w in rec] == ["a again"]
+    reset_warn_once("t9:")
+
+
+def test_warn_once_per_site_memoizes_on_call_site():
+    reset_warn_once("t9site")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for _ in range(3):                   # one site, looped: one warning
+            warn_once("t9site", "looped", per_site=True)
+        warn_once("t9site", "other site", per_site=True)  # distinct line
+    assert [str(w.message) for w in rec] == ["looped", "other site"]
+    reset_warn_once("t9site")
+
+
+def test_warn_once_mirrors_to_installed_tracer():
+    reset_warn_once("t9ev:")
+    tr = Tracer()
+    install_tracer(tr)
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            warn_once("t9ev:x", "degraded", category=RuntimeWarning)
+            warn_once("t9ev:x", "degraded")  # memoized: no second event
+    finally:
+        uninstall_tracer(tr)
+        reset_warn_once("t9ev:")
+    evs = [e for e in tr.events if e.name == "warn_once"]
+    assert len(evs) == 1
+    assert evs[0].cat == "log"
+    assert evs[0].attrs["key"] == "t9ev:x"
+    assert evs[0].attrs["category"] == "RuntimeWarning"
+
+
+# --------------------------------------------------------------------------
+# Histogram reservoir cap (satellite: bounded metrics memory)
+# --------------------------------------------------------------------------
+
+
+def test_histogram_reservoir_bounds_memory_keeps_exact_scalars():
+    h = Histogram("t", max_samples=128)
+    n = 10_000
+    for v in range(1, n + 1):
+        h.record(float(v))
+    assert h.count == n
+    assert len(h.samples) == 128            # memory bounded at the cap
+    s = h.summary()
+    assert s["count"] == n
+    assert s["mean"] == pytest.approx((n + 1) / 2)   # exact scalar
+    assert s["max"] == float(n)                      # exact scalar
+    assert s["sampled"] == 128              # marks the estimated regime
+    # the reservoir is a uniform sample of the whole stream, so the
+    # median estimate must sit near the true median (loose bound: the
+    # point is it sees the full stream, not just the first/last 128)
+    assert abs(s["p50"] - n / 2) < n * 0.25
+
+
+def test_histogram_below_cap_stays_exact():
+    h = Histogram("t", max_samples=100)
+    for v in range(1, 101):                 # exactly at the cap
+        h.record(float(v))
+    s = h.summary()
+    assert "sampled" not in s               # still the exact regime
+    assert s["p50"] == pytest.approx(50.5)
+    assert len(h.samples) == 100
+
+
+# --------------------------------------------------------------------------
+# MAX_STEP_RECORDS truncation (satellite: aggregates keep full fidelity)
+# --------------------------------------------------------------------------
+
+
+def test_step_records_truncate_but_aggregates_keep_fidelity():
+    clk = FakeClock()
+    m = ServingMetrics(clock=clk)
+    n = MAX_STEP_RECORDS + 500
+    for i in range(n):
+        clk.advance(0.001)
+        m.record_step(clk(), step_s=0.001, decode_batch=2,
+                      n_active=2, queue_depth=0, decode_s=0.0005)
+    assert len(m.steps) == MAX_STEP_RECORDS        # bounded
+    # the oldest snapshots were the ones dropped
+    assert m.steps[0]["t"] == pytest.approx(0.501, abs=1e-6)
+    # aggregates saw every step
+    assert m.counters["engine_steps"] == n
+    assert m.counters["decode_steps"] == n
+    assert m.step_ms.count == n
+    assert m.per_token_ms.count == n
+    doc = m.to_dict(include_steps=False)
+    assert "steps" not in doc
+    assert doc["step_ms"]["count"] == n
+    assert doc["counters"]["engine_steps"] == n
+
+
+# --------------------------------------------------------------------------
+# Dispatch attribution hook
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture
+def _fresh_plan_cache():
+    dispatch.clear_plan_cache()
+    yield
+    dispatch.clear_plan_cache()
+
+
+def _run_one_dispatch(M=512, K=256):
+    rng = np.random.default_rng(3)
+    w = rng.standard_normal((M, K)).astype(np.float32)
+    x = rng.standard_normal((1, K)).astype(np.float32)
+    import jax.numpy as jnp
+
+    dispatch.dispatch_gemv(jnp.asarray(x), jnp.asarray(w), policy=INTERP)
+
+
+def test_dispatch_hook_noop_without_tracer(_fresh_plan_cache):
+    assert current_tracer() is None
+    _run_one_dispatch()                     # must not record anywhere
+
+
+def test_dispatch_hook_records_fresh_decisions(_fresh_plan_cache):
+    tr = Tracer(timing=False)
+    install_tracer(tr)
+    try:
+        _run_one_dispatch()
+        _run_one_dispatch()                 # plan-cache HIT: no new record
+    finally:
+        uninstall_tracer(tr)
+    assert len(tr.dispatches) == 1          # one record per cache miss
+    (rec,) = tr.dispatches
+    assert rec.kind == "single"
+    assert rec.source in ("seed", "calibrated")
+    assert rec.shape                         # the GemvKey table key
+    assert rec.trials_us is None             # timing off: predicted-only
+    rep = tr.drift_report()
+    assert rep["n_dispatches"] == 1 and rep["n_timed"] == 0
+
+
+def test_dispatch_hook_timing_yields_drift_pairs(_fresh_plan_cache):
+    tr = Tracer(timing=True)
+    install_tracer(tr)
+    try:
+        _run_one_dispatch()
+    finally:
+        uninstall_tracer(tr)
+    (rec,) = tr.dispatches
+    assert rec.trials_us and len(rec.trials_us) >= 3
+    assert rec.measured_us > 0
+    rep = tr.drift_report()
+    assert rep["n_timed"] >= 1
+    (entry,) = rep["kernels"].values()
+    assert entry["measured_us_p50"] > 0
+    assert "pred_over_measured" in entry and "stale" in entry
+
+
+def test_dispatch_stats_snapshot_is_deep_and_race_free(_fresh_plan_cache):
+    """dispatch_stats must return a consistent deep snapshot while other
+    threads mutate the shared counters (the lock-free-reader bug)."""
+    stop = threading.Event()
+    errors: list = []
+
+    def writer(i):
+        try:
+            while not stop.is_set():
+                dispatch._count_decision(
+                    "cpu", 1, INTERP, kernel=f"k{i}", source="seed")
+                dispatch.record_expert_load(
+                    routed_tokens=8, experts=4, max_tokens=3,
+                    padded_slots=0)
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    def reader():
+        try:
+            for _ in range(300):
+                snap = dispatch.dispatch_stats()
+                # every section materialized, no partial/aliased state
+                assert "plan_cache" in snap
+                assert "kernel_picks" in snap
+                el = snap["expert_load"]
+                # routed/max move together under the lock: a torn read
+                # would let max_tokens outrun routed_tokens * ratio
+                assert el["max_tokens"] * 8 <= el["routed_tokens"] * 3 + 24
+                # mutating the snapshot must not touch live counters
+                snap["kernel_picks"]["poison"] = 10**9
+                el["routed_tokens"] = -1
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    writers = [threading.Thread(target=writer, args=(i,)) for i in range(3)]
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    for t in writers + readers:
+        t.start()
+    for t in readers:
+        t.join()
+    stop.set()
+    for t in writers:
+        t.join()
+    assert not errors
+    assert "poison" not in dispatch.dispatch_stats()["kernel_picks"]
+
+
+# --------------------------------------------------------------------------
+# Export: Chrome trace events + summary document
+# --------------------------------------------------------------------------
+
+
+def _traced_fake_run():
+    clk = FakeClock()
+    tr = Tracer(clock=clk)
+    tr.request_submit(0)
+    clk.advance(0.002)
+    tr.request_phase(0, "prefill", slot=0)
+    clk.advance(0.003)
+    tr.request_phase(0, "decode")
+    clk.advance(0.004)
+    tr.counter("queue_depth", 1)
+    tr.event("defrag_move", src=2, dst=1)
+    tr.request_finish(0)
+    return tr
+
+
+def test_chrome_trace_event_structure():
+    doc = export.chrome_trace(_traced_fake_run())
+    json.loads(json.dumps(doc))             # serializable as-is
+    evs = doc["traceEvents"]
+    assert doc["otherData"]["schema"] == 1
+    by_ph = {}
+    for e in evs:
+        by_ph.setdefault(e["ph"], []).append(e)
+    # every async begin has a matching end with the same (name, id)
+    bkeys = sorted((e["name"], e["id"]) for e in by_ph["b"])
+    ekeys = sorted((e["name"], e["id"]) for e in by_ph["e"])
+    assert bkeys == ekeys and len(bkeys) == 4   # 3 phases + request bar
+    # on-slot phases ALSO render as complete events on the slot track
+    slot_x = [e for e in by_ph["X"] if e["tid"] >= 10]
+    assert sorted(e["name"] for e in slot_x) == ["decode", "prefill"]
+    # slot thread got a thread_name metadata record
+    names = {(m.get("tid"), m["args"]["name"]) for m in by_ph["M"]}
+    assert (10, "slot0") in names
+    assert by_ph["C"][0]["args"] == {"queue_depth": 1.0}
+    # instants: the submit marker plus the explicit defrag event
+    assert {e["name"] for e in by_ph["i"]} == {"submit", "defrag_move"}
+
+
+def test_summary_document_and_path():
+    doc = export.summary(_traced_fake_run(), extra={"policy": "fcfs"})
+    assert doc["schema"] == 1
+    (r,) = doc["requests"]
+    assert r["outcome"] == "finished"
+    assert sum(r["phases_ms"].values()) == pytest.approx(r["total_ms"])
+    assert doc["drift"]["n_dispatches"] == 0
+    assert doc["gauges"]["queue_depth"]["n"] == 1
+    assert doc["policy"] == "fcfs"
+    assert export.summary_path("/x/TRACE.json") == "/x/TRACE.summary.json"
+    assert export.summary_path("/x/t") == "/x/t.summary.json"
+
+
+# --------------------------------------------------------------------------
+# Engine integration: complete span trees end-to-end
+# --------------------------------------------------------------------------
+
+
+def test_engine_traced_run_complete_span_trees(cfg, params, tmp_path):
+    tr = Tracer()                           # timing off: keep the test fast
+    eng = Engine(cfg, params, batch_slots=2, max_len=MAX_LEN,
+                 scheduler="fcfs", tracer=tr)
+    try:
+        for i, p in enumerate(_prompts(cfg, [5, 7, 4], seed=21)):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=3))
+        done = eng.run_until_drained()
+    finally:
+        uninstall_tracer(tr)
+    assert len(done) == 3
+    assert tr.open_requests == ()
+    assert len(tr.requests) == 3
+    for rec in tr.requests:
+        assert rec["outcome"] == "finished"
+        # complete tree: queued -> prefill -> decode, durations partition
+        # the lifetime (the ISSUE 9 acceptance bound is 1%)
+        assert set(rec["phases"]) == {"queued", "prefill", "decode"}
+        assert sum(rec["phases"].values()) == pytest.approx(
+            rec["total_us"], rel=0.01)
+        assert rec["attrs"]["slot"] in (0, 1)
+    # engine-level spans and gauges were recorded
+    span_names = {s.name for s in tr.spans}
+    assert {"prefill_wave", "decode_step"} <= span_names
+    gauges = {c.name for c in tr.counters}
+    assert {"queue_depth", "active_slots", "decode_batch"} <= gauges
+    # dispatch attribution rode along (fresh engine = fresh plans)
+    assert len(tr.dispatches) >= 1
+    # and the whole thing exports to loadable artifacts
+    tpath = tmp_path / "TRACE.json"
+    export.write_chrome_trace(tr, str(tpath))
+    loaded = json.loads(tpath.read_text())
+    assert any(e["ph"] == "C" for e in loaded["traceEvents"])
+    spath = export.summary_path(str(tpath))
+    export.write_summary(tr, spath)
+    assert json.loads(open(spath).read())["schema"] == 1
+
+
+def test_engine_traced_preemption_records_phase(cfg, params):
+    """Mirror of test_engine_preempts_youngest_for_imminent_deadline with
+    the flight recorder on: the victim's record must carry the preempted
+    phase and the re-prefill, and still partition its lifetime."""
+    clk = FakeClock()
+    tr = Tracer()
+    eng = Engine(cfg, params, batch_slots=2, max_len=MAX_LEN, clock=clk,
+                 scheduler=SchedulerConfig(policy="gemv_aware",
+                                           gemv_batch_threshold=4,
+                                           preempt_margin=5.0),
+                 tracer=tr)
+    try:
+        prompts = _prompts(cfg, [5, 6, 4], seed=12)
+        old = Request(rid=0, prompt=prompts[0], max_new_tokens=10)
+        young = Request(rid=1, prompt=prompts[1], max_new_tokens=10)
+        eng.submit(old)
+        eng.submit(young)
+        eng.step()
+        eng.step()
+        urgent = Request(rid=2, prompt=prompts[2], max_new_tokens=3,
+                         deadline=clk() + 3.0)
+        eng.submit(urgent)
+        eng.run_until_drained()
+    finally:
+        uninstall_tracer(tr)
+    assert young.evictions == 1
+    recs = {r["rid"]: r for r in tr.requests}
+    victim = recs[1]
+    assert victim["preemptions"] == 1
+    assert victim["phases"]["preempted"] > 0
+    assert sum(victim["phases"].values()) == pytest.approx(
+        victim["total_us"], rel=0.01)
+    # the scheduler's requeue event landed in the trace too
+    assert any(e.name == "requeue" and e.attrs["rid"] == 1
+               for e in tr.events)
+    # untouched requests still have plain trees
+    assert set(recs[0]["phases"]) == {"queued", "prefill", "decode"}

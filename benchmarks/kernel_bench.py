@@ -51,7 +51,11 @@ from repro.kernels.dispatch import DispatchPolicy
 # 4: measured dispatch rows gain predicted_us/<kern> +
 #    pred_over_measured/<kern> (every bench run doubles as a model-error
 #    probe) and cost_model_source (seed vs calibrated; DESIGN.md §11).
-SCHEMA_VERSION = 4
+# 5: + "pipeline_rows" — depth-1 vs depth-2 staged variants of the
+#    streaming Pallas kernels (the pipeline_depth plan knob, DESIGN.md
+#    §14): modeled + measured head-to-head per registry shape, with the
+#    bit-identity check (max_abs_diff) as the correctness column.
+SCHEMA_VERSION = 5
 
 SHAPES = [
     # (name, M, K, B)  — decode-path GEMVs from the assigned archs
@@ -239,6 +243,88 @@ def program_rows(backend_name: str = "tpu") -> list[dict]:
     return rows
 
 
+def pipeline_rows(backend_name: str = "tpu",
+                  measure: bool = True) -> list[dict]:
+    """Depth-1 vs depth-2 staged kernel comparison per registry shape.
+
+    ``pipeline_depth`` folds d K-blocks into one grid step (one wider
+    BlockSpec stream, d accumulating sub-tile dots), trading VMEM for
+    fewer per-program overheads — the double-buffering the autotuner
+    measures head-to-head (``backends/tpu.py::PIPELINE_DEPTHS``).  Rows
+    carry the modeled latency at both depths and, for shapes small enough
+    to interpret, measured wall clock plus ``max_abs_diff`` between the
+    depth-1 and depth-2 outputs — the staging is bit-identical by
+    construction, so the column must read 0.  TPU-plan concept: other
+    backends return no rows.
+    """
+    if backend_name != "tpu":
+        return []
+    from repro.kernels.tpu_plan import (
+        plan_splitk, plan_tpu_gemv, valid_splitk_degree,
+        with_pipeline_depth,
+    )
+
+    backend = get_backend("tpu")
+    rng = np.random.default_rng(0)
+    rows = []
+    for name, M, K, B in registry_gemv_shapes():
+        if not ops.pallas_applicable(M, K):
+            continue
+        base_plans = {"pim": plan_tpu_gemv(M, K, B)}
+        deg = valid_splitk_degree(K)
+        if deg is not None:
+            base_plans["splitk"] = plan_splitk(M, K, B, degree=deg)
+        small = M * K * 4 <= 256 * 2**20
+        pw = None
+        if measure and small:
+            w = rng.standard_normal((M, K)).astype(np.float32)
+            x = rng.standard_normal((B, K)).astype(np.float32)
+            pw = ops.pack_weight(jnp.asarray(w))
+            xj = jnp.asarray(x)
+        for kern, base in base_plans.items():
+            deep = with_pipeline_depth(base, 2, batch=B)
+            if deep is None:
+                continue  # n_k odd or VMEM budget: depth 2 not plannable
+            row = {
+                "shape": name, "kernel": kern, "M": M, "K": K, "B": B,
+                "backend": backend_name,
+                "model_us/depth1": backend.estimate_cost_us(
+                    kern, M, K, B, plan=base),
+                "model_us/depth2": backend.estimate_cost_us(
+                    kern, M, K, B, plan=deep),
+            }
+            if pw is not None:
+                outs = {}
+                for depth, plan in ((1, base), (2, deep)):
+                    row[f"measured_us/depth{depth}"] = dispatch.time_gemv_us(
+                        lambda plan=plan: backend.execute(
+                            kern, xj, pw, plan, interpret=True),
+                        reps=2,
+                    )
+                    outs[depth] = np.asarray(
+                        backend.execute(kern, xj, pw, plan, interpret=True))
+                row["max_abs_diff"] = float(
+                    np.abs(outs[1] - outs[2]).max())
+            rows.append(row)
+    return rows
+
+
+def print_pipeline_table(rows: list[dict]) -> None:
+    for r in rows:
+        line = (
+            f"pipeline/{r['shape']} [{r['M']}x{r['K']} B={r['B']}] "
+            f"{r['kernel']} model d1={r['model_us/depth1']:.1f}us "
+            f"d2={r['model_us/depth2']:.1f}us"
+        )
+        if "measured_us/depth1" in r:
+            line += (
+                f" | measured d1={r['measured_us/depth1']:.0f}us "
+                f"d2={r['measured_us/depth2']:.0f}us "
+                f"max_abs_diff={r['max_abs_diff']:.1g}"
+            )
+        print(line)
+
+
 MOE_ARCHS = ("deepseek-moe-16b", "grok-1-314b")
 MOE_DECODE_BATCH = 8  # decode tokens per step (one per active slot)
 
@@ -383,6 +469,10 @@ def main(argv=None) -> int:
                     help="GemvBackend whose cost model/kernels to compare")
     ap.add_argument("--no-measure", action="store_true",
                     help="skip measured wall clock (model only)")
+    ap.add_argument("--pipeline-depth", action="store_true",
+                    help="also print the depth-1 vs depth-2 staged-kernel "
+                         "sweep (pipeline_depth plan knob, DESIGN.md §14); "
+                         "the rows are always in the --json document")
     ap.add_argument("--json", metavar="OUT", default=None,
                     help="write the dispatcher rows as JSON records")
     ap.add_argument("--calibrate", action="store_true",
@@ -416,13 +506,20 @@ def main(argv=None) -> int:
     print_program_table(prog_rows)
     m_rows = moe_rows(backend_name=args.backend)
     print_moe_table(m_rows)
+    p_rows = []
+    if args.pipeline_depth or args.json:
+        p_rows = pipeline_rows(backend_name=args.backend,
+                               measure=not args.no_measure)
+    if args.pipeline_depth:
+        print_pipeline_table(p_rows)
     if args.json:
         doc = {"schema": SCHEMA_VERSION, "rows": rows,
-               "program_rows": prog_rows, "moe_rows": m_rows}
+               "program_rows": prog_rows, "moe_rows": m_rows,
+               "pipeline_rows": p_rows}
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
         print(f"wrote {len(rows)} + {len(prog_rows)} + {len(m_rows)} "
-              f"records -> {args.json}")
+              f"+ {len(p_rows)} records -> {args.json}")
     return 0
 
 

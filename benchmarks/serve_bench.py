@@ -102,6 +102,16 @@ def main(argv=None) -> int:
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="split prompts longer than this many tokens into "
                          "one-chunk-per-step prefill splices")
+    ap.add_argument("--async-prefill", action="store_true",
+                    help="overlapped serving (DESIGN.md §14): prefill "
+                         "chunks chain on an in-flight sub-cache and "
+                         "splice once at harvest, hidden behind decode; "
+                         "with --trace-out the summary reports the "
+                         "measured hidden_fraction")
+    ap.add_argument("--overlap-collectives", action="store_true",
+                    help="defer each decode layer's FFN all-reduce to the "
+                         "next layer's entry (sharded decode overlap; "
+                         "bit-identical tokens)")
     ap.add_argument("--trace", default="uniform",
                     choices=("uniform", "shared-prefix"),
                     help="trace shape: uniform i.i.d. prompts, or the "
@@ -144,6 +154,8 @@ def main(argv=None) -> int:
         gemv_backend=args.backend,
         mesh_shape=parse_mesh(args.mesh) if args.mesh else None,
         prefill_chunk=args.prefill_chunk,
+        async_prefill=args.async_prefill,
+        overlap_collectives=args.overlap_collectives,
         trace_kind=args.trace, prefix_cache=args.prefix_cache,
         kv_store=args.kv_store,
         trace_config=tcfg,
@@ -156,8 +168,10 @@ def main(argv=None) -> int:
         print(f"wrote {len(doc['runs'])} runs -> {args.json}")
     ft = doc.get("flight_trace")
     if ft:
+        hf = ft.get("hidden_fraction")
+        hf_tag = f" hidden_fraction={hf:.3f}" if hf is not None else ""
         print(f"flight trace ({ft['policy']}) -> {ft['path']} "
-              f"(summary: {ft['summary']})")
+              f"(summary: {ft['summary']}){hf_tag}")
     return 0
 
 

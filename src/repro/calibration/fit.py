@@ -34,9 +34,15 @@ from repro.kernels.backends import CostModel, get_backend
 from repro.calibration.measure import MeasurementRecord
 
 # Continuous terms the regression may move.  ``min_parallel_blocks`` is
-# structural (core/SM/bank count) and never fitted.
+# structural (core/SM/bank count) and never fitted.  The collective terms
+# (ring all-reduce bandwidth + launch, CostModel.collective_us) only show
+# up in sharded-placement pricing — on a collective-free sweep no record's
+# prediction depends on them, so coordinate descent (which accepts only
+# strict improvements) leaves them at the 0.0 seed sentinel and
+# uncalibrated selections stay bit-identical.
 FIT_TERMS = ("bandwidth_gbps", "gemv_efficiency", "launch_us",
-             "program_us", "elem_ns", "splitk_reduce_factor")
+             "program_us", "elem_ns", "splitk_reduce_factor",
+             "collective_gbps", "collective_launch_us")
 
 # Per-term bounds, as (lo(seed), hi(seed)).  Bandwidth may move two orders
 # of magnitude either way (an interpret-mode "TPU" on a CPU host is that
@@ -48,6 +54,8 @@ _BOUNDS = {
     "program_us": lambda s: (0.0, 1e4),
     "elem_ns": lambda s: (0.0, 1e3),
     "splitk_reduce_factor": lambda s: (0.0, 16.0),
+    "collective_gbps": lambda s: (0.0, 1e4),
+    "collective_launch_us": lambda s: (0.0, 1e5),
 }
 
 # Multiplicative probe grid around the current value, plus an absolute
@@ -59,6 +67,8 @@ _ABS_LADDER = {
     "program_us": (0.0, 0.01, 0.1, 0.5, 2.0, 10.0, 100.0),
     "elem_ns": (0.0, 1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0),
     "splitk_reduce_factor": (0.0, 0.5, 1.0, 2.0, 4.0, 8.0),
+    "collective_gbps": (0.0, 1.0, 10.0, 50.0, 100.0, 400.0, 1600.0),
+    "collective_launch_us": (0.0, 0.5, 2.0, 10.0, 50.0, 200.0),
 }
 
 

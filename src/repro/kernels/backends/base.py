@@ -81,10 +81,35 @@ class CostModel:
     # outputs is written then re-read by the reduce (factor 2.0); fitted
     # values absorb cache residency of the partials.
     splitk_reduce_factor: float = 2.0
+    # Cross-shard all-reduce terms (ring model): per-link interconnect
+    # bandwidth and a fixed launch/sync overhead per collective.  0.0 is a
+    # deliberate sentinel — "no measured interconnect": collective_us()
+    # then prices every placement at 0, so the sharded dispatcher keeps
+    # its static M-before-K preference and seed selections stay
+    # bit-identical until calibration fits a real value.
+    collective_gbps: float = 0.0
+    collective_launch_us: float = 0.0
 
     @property
     def bandwidth_bps(self) -> float:
         return self.bandwidth_gbps * 1e9
+
+    def collective_us(self, nbytes: float, shards: int) -> float:
+        """Modeled latency of an all-reduce of ``nbytes`` over ``shards``.
+
+        Ring all-reduce wire traffic: each chip sends and receives
+        ``2 * (shards - 1) / shards * nbytes`` (reduce-scatter +
+        all-gather), so the time is that volume over the per-link
+        bandwidth plus one launch.  Returns 0 when there is nothing to
+        reduce (``shards <= 1``) or no fitted interconnect bandwidth (the
+        0.0 sentinel) — the term must never perturb selections it has no
+        measurement for.
+        """
+        if shards <= 1 or nbytes <= 0 or self.collective_gbps <= 0:
+            return 0.0
+        wire = 2.0 * (shards - 1) / shards * float(nbytes)
+        return (wire / (self.collective_gbps * 1e9) * 1e6
+                + self.collective_launch_us)
 
     def constants(self) -> dict:
         """All fields as a plain JSON-able dict (calibration artifacts)."""
@@ -120,7 +145,8 @@ class CostModel:
             raise ValueError(f"gemv_efficiency must be in (0, 1], got "
                              f"{cm.gemv_efficiency}")
         if min(cm.launch_us, cm.program_us, cm.elem_ns,
-               cm.splitk_reduce_factor) < 0:
+               cm.splitk_reduce_factor, cm.collective_gbps,
+               cm.collective_launch_us) < 0:
             raise ValueError("overhead constants must be >= 0")
         return cm
 
@@ -193,6 +219,13 @@ class DispatchPolicy:
     # actually solves.  Execution still traces the full-shape op; GSPMD
     # splits it along the axis the placement chose.
     model_shards: int = 1
+    # Deferred decode collectives (DESIGN.md §14): when True, decode-mode
+    # layer scans thread each layer's unconstrained FFN output through the
+    # carry and constrain (replicate) it at the NEXT layer's entry, so a
+    # K-sharded FFN's all-reduce can overlap the following layer's
+    # attention/dispatch instead of serializing before it.  Bit-identical
+    # token streams either way (same f32 add order); default off.
+    overlap_collectives: bool = False
 
 
 DEFAULT_POLICY = DispatchPolicy()
@@ -583,6 +616,7 @@ def entry_to_plan(entry: dict) -> tuple[str, GemvPlan | None]:
         m_blk=entry["m_blk"], k_blk=entry["k_blk"], n_m=entry["n_m"],
         n_k=entry["n_k"], vmem_bytes=entry.get("vmem_bytes", 0),
         split_k=entry.get("split_k", 1),
+        pipeline_depth=entry.get("pipeline_depth", 1),
     )
 
 
@@ -593,6 +627,7 @@ def plan_to_entry(kernel: str, plan: GemvPlan | None,
         entry.update(
             m_blk=plan.m_blk, k_blk=plan.k_blk, n_m=plan.n_m, n_k=plan.n_k,
             vmem_bytes=plan.vmem_bytes, split_k=plan.split_k,
+            pipeline_depth=plan.pipeline_depth,
         )
     return entry
 

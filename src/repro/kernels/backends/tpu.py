@@ -43,7 +43,21 @@ from repro.kernels.ops import (
 from repro.kernels.pim_gemv import pim_gemv
 from repro.kernels.quant_gemv import quant4_gemv, quant_gemv
 from repro.kernels.splitk_gemv import splitk_gemv
-from repro.kernels.tpu_plan import plan_splitk, plan_tpu_gemv, valid_splitk_degree
+from repro.kernels.tpu_plan import (
+    plan_splitk,
+    plan_tpu_gemv,
+    valid_splitk_degree,
+    with_pipeline_depth,
+)
+
+# Staging depths the autotuner measures for the pim/splitk kernels.  Depth 1
+# is the analytical cost model's pick; deeper stagings only ever win by
+# *measurement* (autotune), never by model — the model cannot see the
+# HBM-prefetch overlap the staging buys, so pricing it would be invented
+# precision.  Depth 2 doubles the resident W/x stream per grid step
+# (csl-experiments double-buffering); deeper than 2 trades VMEM for little
+# additional overlap on these bandwidth-bound shapes.
+PIPELINE_DEPTHS = (2,)
 
 
 class TpuBackend(GemvBackend):
@@ -91,7 +105,9 @@ class TpuBackend(GemvBackend):
             return io / (cm.bandwidth_bps * cm.gemv_efficiency) * 1e6 + elem
         assert plan is not None, kernel
         degree = plan.split_k if kernel == "splitk" else 1
-        n_programs = degree * plan.n_m * plan.n_k
+        # Staged plans fold pipeline_depth K-blocks into one grid step, so
+        # fewer per-program overheads are paid (the point of the staging).
+        n_programs = degree * plan.n_m * (plan.n_k // plan.pipeline_depth)
         occupancy = min(1.0, (degree * plan.n_m) / cm.min_parallel_blocks)
         t = io / (cm.bandwidth_bps * occupancy) * 1e6
         t += cm.launch_us + cm.program_us * n_programs
@@ -126,11 +142,25 @@ class TpuBackend(GemvBackend):
     def autotune_candidates(self, key: GemvKey, pw: PackedWeights,
                             policy: DispatchPolicy):
         cands = self.candidate_plans(key.M, key.K, key.batch, key.bits)
-        return [
+        cands = [
             (k, _align_plan_to_block(p, key.M, key.K, key.batch, pw)
              if k in ("quant", "quant4") else p)
             for k, p in cands
         ]
+        w_bytes = 2 if key.bits == 16 else 1
+        # Staged (pipeline_depth > 1) variants of the streaming kernels:
+        # measured head-to-head against their depth-1 twins; only a timing
+        # win puts one in the table (see PIPELINE_DEPTHS).
+        staged = []
+        for kernel, plan in cands:
+            if kernel not in ("pim", "splitk") or plan is None:
+                continue
+            for depth in PIPELINE_DEPTHS:
+                deep = with_pipeline_depth(plan, depth, batch=key.batch,
+                                           w_bytes=w_bytes)
+                if deep is not None and deep is not plan:
+                    staged.append((kernel, deep))
+        return cands + staged
 
     # -- selection ----------------------------------------------------------
 

@@ -100,7 +100,7 @@ __all__ = [
     "dispatch_gemv", "dispatch_dense", "as_packed", "from_transposed",
     "dispatch_program", "dispatch_fused", "dispatch_grouped",
     "dispatch_ragged", "dispatch_prepacked",
-    "record_program_fallback", "record_expert_load",
+    "record_program_fallback", "record_expert_load", "record_overlap",
     "plan_cache_stats", "clear_plan_cache", "dispatch_stats",
     "load_autotune_table", "save_autotune_table", "clear_autotune_table",
     "autotune_table",
@@ -157,6 +157,16 @@ _DISPATCH_COUNTERS: dict = {
     # hand-seeded class constants, "calibrated" = constants fitted by
     # repro.calibration and loaded from the table's `calibration` section.
     "cost_model_source": {"seed": 0, "calibrated": 0},
+    # Overlap telemetry (DESIGN.md §14): the engine's async-prefill
+    # dispatches and the model's deferred (awaited-one-layer-late)
+    # collectives, recorded via record_overlap.  ``inflight`` is a gauge
+    # (issued - awaited at this instant); everything else is monotonic so
+    # serving metrics can delta it per step.
+    "overlap": {
+        "async_prefill": {"issued": 0, "awaited": 0, "inflight": 0,
+                          "max_inflight": 0},
+        "deferred": {"collectives": 0},
+    },
 }
 _AUTOTUNE_TABLE = AutotuneTable()
 
@@ -228,6 +238,34 @@ def record_expert_load(*, routed_tokens: int, experts: int,
         el["padded_slots"] += int(padded_slots)
 
 
+def record_overlap(kind: str, *, issued: int = 0, awaited: int = 0,
+                   deferred_collectives: int = 0) -> None:
+    """Accumulate overlap telemetry from the engine / model layers.
+
+    ``kind="async_prefill"``: the serving engine issued (``issued``) or
+    harvested (``awaited``) that many non-blocking prefill-chunk
+    dispatches; the inflight gauge and its high-water mark are maintained
+    here so every ``dispatch_stats()`` snapshot satisfies
+    ``inflight == issued - awaited`` — the invariant the threaded stress
+    test pins.  ``kind="deferred"``: the sharded decode path deferred
+    ``deferred_collectives`` split-K all-reduces by one layer
+    (models/lm.py, DispatchPolicy.overlap_collectives).  Counted under
+    the same single lock as every other dispatch counter.
+    """
+    with _LOCK:
+        ov = _DISPATCH_COUNTERS["overlap"]
+        if kind == "async_prefill":
+            ap = ov["async_prefill"]
+            ap["issued"] += int(issued)
+            ap["awaited"] += int(awaited)
+            ap["inflight"] = ap["issued"] - ap["awaited"]
+            ap["max_inflight"] = max(ap["max_inflight"], ap["inflight"])
+        elif kind == "deferred":
+            ov["deferred"]["collectives"] += int(deferred_collectives)
+        else:
+            raise ValueError(f"unknown overlap kind {kind!r}")
+
+
 def _count_decision(backend_name: str, key_batch: int,
                     policy: DispatchPolicy, *, kernel: str | None = None,
                     mode: str | None = None,
@@ -278,6 +316,11 @@ def clear_plan_cache() -> None:
             "max_tokens": 0, "padded_slots": 0}
         _DISPATCH_COUNTERS["cost_model_source"] = {"seed": 0,
                                                    "calibrated": 0}
+        _DISPATCH_COUNTERS["overlap"] = {
+            "async_prefill": {"issued": 0, "awaited": 0, "inflight": 0,
+                              "max_inflight": 0},
+            "deferred": {"collectives": 0},
+        }
     # fallback warnings live as long as the decisions they describe
     reset_warn_once("program_fallback:")
 
@@ -515,16 +558,58 @@ def from_transposed(w_t: jnp.ndarray) -> PackedWeights:
 # ---------------------------------------------------------------------------
 
 
-def _shard_gemv_key(key: GemvKey,
-                    policy: DispatchPolicy) -> tuple[GemvKey, ShardedPlan]:
+def _priced_placement(backend, key: GemvKey,
+                      policy: DispatchPolicy) -> ShardedPlan:
+    """Price row (M) vs split-K (K) placement by communication.
+
+    Only reached when BOTH axes divide evenly and the backend's CostModel
+    carries a fitted ``collective_gbps`` (the 0.0 seed sentinel keeps the
+    static M-before-K preference, so uncalibrated selections are
+    bit-identical).  Each candidate is priced as the per-shard GEMV the
+    chip would solve plus, for the K placement, the modeled all-reduce of
+    the f32-width partial output (``CostModel.collective_us``) — the
+    shard-aware tie-break the PR 5 follow-up called for.
+    """
+    n = policy.model_shards
+    x_bytes = jnp.dtype(key.dtype).itemsize
+
+    def cost(axis: str) -> float:
+        sp = ShardedPlan(axis=axis, n_shards=n)
+        Ms, Ks = sp.shard_shape(key.M, key.K)
+        kernel, plan = backend.select_kernel(
+            Ms, Ks, key.batch, bits=key.bits, block=key.block,
+            x_bytes=x_bytes, policy=policy)
+        t = backend.estimate_cost_us(kernel, Ms, Ks, key.batch,
+                                     bits=key.bits, x_bytes=x_bytes,
+                                     plan=plan)
+        if axis == "K":
+            t += backend.cost_model.collective_us(
+                key.batch * key.M * x_bytes, n)
+        return t
+
+    axis = "M" if cost("M") <= cost("K") else "K"
+    return ShardedPlan(axis=axis, n_shards=n)
+
+
+def _shard_gemv_key(key: GemvKey, policy: DispatchPolicy,
+                    backend=None) -> tuple[GemvKey, ShardedPlan]:
     """Per-shard selection key under the mesh 'model' axis (DESIGN.md §9).
 
     Applies Algorithm 1's even-distribution test to (M, K): row placement
     divides M, the split-K fallback divides K, otherwise the weight is
     replicated and the full shape stands.  Only the *selection inputs*
     shrink — execution traces the full-shape op and GSPMD splits it.
+    When both axes divide AND the backend has a fitted collective term,
+    the M-vs-K choice is priced instead of static
+    (:func:`_priced_placement`).
     """
-    sp = ShardedPlan.place(key.M, key.K, policy.model_shards)
+    n = policy.model_shards
+    if (backend is not None and n > 1
+            and backend.cost_model.collective_gbps > 0
+            and key.M % n == 0 and key.K % n == 0):
+        sp = _priced_placement(backend, key, policy)
+    else:
+        sp = ShardedPlan.place(key.M, key.K, n)
     Ms, Ks = sp.shard_shape(key.M, key.K)
     if (Ms, Ks) == (key.M, key.K):
         return key, sp
@@ -565,7 +650,7 @@ def _resolve(backend, key: GemvKey,
         shard_axis = shard_pick = None
         sel_key = key
         if policy.model_shards > 1 and policy.kernel == "auto":
-            sel_key, sp = _shard_gemv_key(key, policy)
+            sel_key, sp = _shard_gemv_key(key, policy, backend)
             shard_axis = sp.axis
         tuned = policy.kernel == "auto" and policy.use_pallas
         if tuned and policy.autotune:
@@ -680,8 +765,8 @@ def dispatch_dense(
 # ---------------------------------------------------------------------------
 
 
-def _shard_program_key(key: ProgramKey,
-                       policy: DispatchPolicy) -> tuple[ProgramKey, str]:
+def _shard_program_key(key: ProgramKey, policy: DispatchPolicy,
+                       backend=None) -> tuple[ProgramKey, str]:
     """Per-shard program key under the mesh 'model' axis.
 
     The even-distribution test walks the program's placement preferences
@@ -689,8 +774,10 @@ def _shard_program_key(key: ProgramKey,
     (experts divide the axis — each chip owns whole experts), row
     placement for fused ones (every member's M divides — each chip owns
     whole output rows of the concatenated weight), split-K as the shared
-    fallback.  Returns the (possibly shrunk) selection key and the axis
-    label recorded in ``dispatch_stats()["sharded_axes"]``.
+    fallback.  As in :func:`_shard_gemv_key`, a fitted collective term
+    turns the static M-before-K preference into a priced comparison on
+    the concatenated shape.  Returns the (possibly shrunk) selection key
+    and the axis label recorded in ``dispatch_stats()["sharded_axes"]``.
     """
     n = policy.model_shards
     if n <= 1:
@@ -705,10 +792,19 @@ def _shard_program_key(key: ProgramKey,
                     key, group=key.group // n,
                     tokens=max(key.tokens // n, 1)), "E"
             return dataclasses.replace(key, group=key.group // n), "E"
-    if all(m % n == 0 for m in key.Ms):
+    m_ok = all(m % n == 0 for m in key.Ms)
+    k_ok = key.K % n == 0
+    if (m_ok and k_ok and backend is not None
+            and backend.cost_model.collective_gbps > 0):
+        gkey = GemvKey(M=key.total_M, K=key.K, batch=key.batch,
+                       bits=key.bits, block=key.block, dtype=key.dtype,
+                       backend=key.backend)
+        if _priced_placement(backend, gkey, policy).axis == "K":
+            return dataclasses.replace(key, K=key.K // n), "K"
+    if m_ok:
         return dataclasses.replace(
             key, Ms=tuple(m // n for m in key.Ms)), "M"
-    if key.K % n == 0:
+    if k_ok:
         return dataclasses.replace(key, K=key.K // n), "K"
     return key, "replicated"
 
@@ -748,7 +844,7 @@ def _resolve_program(backend, key: ProgramKey,
         shard_axis = shard_pick = None
         sel_key = key
         if policy.model_shards > 1 and policy.kernel == "auto":
-            sel_key, shard_axis = _shard_program_key(key, policy)
+            sel_key, shard_axis = _shard_program_key(key, policy, backend)
         tuned = (policy.kernel == "auto" and policy.use_pallas
                  and policy.fuse_programs)
         if tuned and policy.autotune:

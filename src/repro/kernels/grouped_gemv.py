@@ -59,18 +59,23 @@ def _pow2_divisor(n: int, cap: int, floor: int) -> int:
     return best if best else n
 
 
-def plan_grouped_gemv(M: int, K: int) -> GemvPlan:
+def plan_grouped_gemv(M: int, K: int, *, pipeline_depth: int = 1) -> GemvPlan:
     """Tile plan for the grouped/ragged kernels (per-expert ``[K, M]``).
 
     Expert matrices are smaller than fused dense stacks (reduced configs
     go down to M=128, K=64), so the floors sit at ``MIN_DOT_DIM`` rather
     than triton_gemv's 64/256 — a degenerate 1-block grid on tiny shapes
-    still exercises the kernel.
+    still exercises the kernel.  ``pipeline_depth > 1`` unrolls the
+    kernels' K walk by that factor (depth independent loads in flight per
+    loop step); it is kept only when the walk splits evenly.
     """
     m_blk = _pow2_divisor(M, cap=512, floor=MIN_DOT_DIM)
     k_blk = _pow2_divisor(K, cap=1024, floor=MIN_DOT_DIM)
+    n_k = K // k_blk
+    depth = pipeline_depth if (pipeline_depth >= 1
+                               and n_k % pipeline_depth == 0) else 1
     return GemvPlan(m_blk=m_blk, k_blk=k_blk, n_m=M // m_blk,
-                    n_k=K // k_blk, vmem_bytes=0, split_k=1)
+                    n_k=n_k, vmem_bytes=0, split_k=1, pipeline_depth=depth)
 
 
 def counts_to_offsets(counts: jnp.ndarray) -> jnp.ndarray:
@@ -83,21 +88,31 @@ def counts_to_offsets(counts: jnp.ndarray) -> jnp.ndarray:
     return jnp.concatenate([z, jnp.cumsum(counts.astype(jnp.int32))])
 
 
-def _grouped_kernel(xs_ref, w_ref, out_ref, *, n_k: int, k_blk: int):
-    """One (expert, m-block) cell: ``[C, K] @ [K, m_blk]`` K-walk."""
+def _grouped_kernel(xs_ref, w_ref, out_ref, *, n_k: int, k_blk: int,
+                    depth: int = 1):
+    """One (expert, m-block) cell: ``[C, K] @ [K, m_blk]`` K-walk.
+
+    ``depth`` unrolls the walk: each loop step loads/dots ``depth``
+    consecutive k-blocks, giving the memory pipeline that many
+    independent streams in flight per trip.  Left-to-right accumulation
+    keeps the result bit-identical to the depth-1 walk.
+    """
     C = xs_ref.shape[1]
     Cp = max(MIN_DOT_DIM, -(-C // MIN_DOT_DIM) * MIN_DOT_DIM)
     acc0 = jnp.zeros((Cp, out_ref.shape[2]), jnp.float32)
 
     def body(ki, acc):
-        xk = pl.load(xs_ref, (pl.dslice(0, 1), slice(None),
-                              pl.dslice(ki * k_blk, k_blk)))[0]
-        wk = pl.load(w_ref, (pl.dslice(0, 1), pl.dslice(ki * k_blk, k_blk),
-                             slice(None)))[0]
-        xp = jnp.zeros((Cp, k_blk), xk.dtype).at[:C].set(xk)
-        return acc + jnp.dot(xp, wk, preferred_element_type=jnp.float32)
+        for j in range(depth):
+            kk = (ki * depth + j) * k_blk
+            xk = pl.load(xs_ref, (pl.dslice(0, 1), slice(None),
+                                  pl.dslice(kk, k_blk)))[0]
+            wk = pl.load(w_ref, (pl.dslice(0, 1), pl.dslice(kk, k_blk),
+                                 slice(None)))[0]
+            xp = jnp.zeros((Cp, k_blk), xk.dtype).at[:C].set(xk)
+            acc = acc + jnp.dot(xp, wk, preferred_element_type=jnp.float32)
+        return acc
 
-    acc = jax.lax.fori_loop(0, n_k, body, acc0)
+    acc = jax.lax.fori_loop(0, n_k // depth, body, acc0)
     pl.store(out_ref, (pl.dslice(0, 1), slice(None), slice(None)),
              acc[None, :C].astype(out_ref.dtype))
 
@@ -116,8 +131,9 @@ def grouped_gemv(xs: jnp.ndarray, w_t: jnp.ndarray, *, plan: GemvPlan,
     M = w_t.shape[2]
     assert plan.m_blk * plan.n_m == M and plan.k_blk * plan.n_k == K, (
         plan, (M, K))
-    kernel = functools.partial(_grouped_kernel,
-                               n_k=plan.n_k, k_blk=plan.k_blk)
+    assert plan.n_k % plan.pipeline_depth == 0, plan
+    kernel = functools.partial(_grouped_kernel, n_k=plan.n_k,
+                               k_blk=plan.k_blk, depth=plan.pipeline_depth)
     return pl.pallas_call(
         kernel,
         grid=(E, plan.n_m),
@@ -133,7 +149,7 @@ def grouped_gemv(xs: jnp.ndarray, w_t: jnp.ndarray, *, plan: GemvPlan,
 
 
 def _ragged_kernel(offs_ref, x_ref, w_ref, out_ref, *, n_k: int,
-                   k_blk: int):
+                   k_blk: int, depth: int = 1):
     """One (expert, m-block) cell of the ragged GEMV.
 
     Computes the full-``T`` dot against this expert's weight tile and
@@ -151,13 +167,17 @@ def _ragged_kernel(offs_ref, x_ref, w_ref, out_ref, *, n_k: int,
     acc0 = jnp.zeros((Tp, m_blk), jnp.float32)
 
     def body(ki, acc):
-        xk = pl.load(x_ref, (slice(None), pl.dslice(ki * k_blk, k_blk)))
-        wk = pl.load(w_ref, (pl.dslice(0, 1), pl.dslice(ki * k_blk, k_blk),
-                             slice(None)))[0]
-        xp = jnp.zeros((Tp, k_blk), xk.dtype).at[:T].set(xk)
-        return acc + jnp.dot(xp, wk, preferred_element_type=jnp.float32)
+        # Depth-unrolled K walk — see _grouped_kernel.
+        for j in range(depth):
+            kk = (ki * depth + j) * k_blk
+            xk = pl.load(x_ref, (slice(None), pl.dslice(kk, k_blk)))
+            wk = pl.load(w_ref, (pl.dslice(0, 1), pl.dslice(kk, k_blk),
+                                 slice(None)))[0]
+            xp = jnp.zeros((Tp, k_blk), xk.dtype).at[:T].set(xk)
+            acc = acc + jnp.dot(xp, wk, preferred_element_type=jnp.float32)
+        return acc
 
-    acc = jax.lax.fori_loop(0, n_k, body, acc0)
+    acc = jax.lax.fori_loop(0, n_k // depth, body, acc0)
     rows = jax.lax.broadcasted_iota(jnp.int32, (T, m_blk), 0)
     mine = (rows >= start) & (rows < end)
     # Offsets are a cumsum, so the per-expert masks partition
@@ -189,8 +209,9 @@ def ragged_gemv(x: jnp.ndarray, offsets: jnp.ndarray, w_t: jnp.ndarray, *,
     M = w_t.shape[2]
     assert plan.m_blk * plan.n_m == M and plan.k_blk * plan.n_k == K, (
         plan, (M, K))
-    kernel = functools.partial(_ragged_kernel,
-                               n_k=plan.n_k, k_blk=plan.k_blk)
+    assert plan.n_k % plan.pipeline_depth == 0, plan
+    kernel = functools.partial(_ragged_kernel, n_k=plan.n_k,
+                               k_blk=plan.k_blk, depth=plan.pipeline_depth)
     return pl.pallas_call(
         kernel,
         grid=(E, plan.n_m),

@@ -225,6 +225,8 @@ def _align_plan_to_block(
         if k_blk <= 0:
             k_blk = K
             break
+    # k_blk changed, so the staged K walk may no longer split evenly;
+    # the quant kernels are unstaged anyway — reset the depth.
     return TPUGemvPlan(
         m_blk=plan.m_blk, k_blk=k_blk, n_m=M // plan.m_blk,
         n_k=K // k_blk, vmem_bytes=plan.vmem_bytes, split_k=1,

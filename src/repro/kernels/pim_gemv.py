@@ -31,20 +31,31 @@ from repro.kernels._compat import compiler_params
 from repro.kernels.tpu_plan import TPUGemvPlan
 
 
-def _gemv_kernel(x_ref, w_ref, out_ref, acc_ref, *, n_k: int):
+def _gemv_kernel(x_ref, w_ref, out_ref, acc_ref, *,
+                 n_steps: int, depth: int, k_blk: int):
     ki = pl.program_id(1)
 
     @pl.when(ki == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jax.lax.dot_general(
-        x_ref[...], w_ref[...],
-        dimension_numbers=(((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
+    # The grid block spans ``depth`` K sub-tiles; rotating through them here
+    # (an unrolled Python loop — static slices, one dot per sub-tile) keeps
+    # the kernel busy long enough for the Pallas grid pipeline to stream the
+    # NEXT megablock's W/x from HBM behind the compute.  The sub-tiles are
+    # accumulated left-to-right into the same resident f32 scratch, so the
+    # f32 add order — and therefore the output — is identical at any depth.
+    x = x_ref[...]
+    w = w_ref[...]
+    for j in range(depth):
+        acc_ref[...] += jax.lax.dot_general(
+            x[:, j * k_blk:(j + 1) * k_blk],
+            w[j * k_blk:(j + 1) * k_blk, :],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
 
-    @pl.when(ki == n_k - 1)
+    @pl.when(ki == n_steps - 1)
     def _flush():
         out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
@@ -62,14 +73,18 @@ def pim_gemv(
     K2, M = w_t.shape
     assert K == K2, (x.shape, w_t.shape)
     assert M % plan.m_blk == 0 and K % plan.k_blk == 0, (plan, M, K)
+    depth = plan.pipeline_depth
+    assert depth >= 1 and plan.n_k % depth == 0, (plan, depth)
+    k_mega = plan.k_blk * depth            # K columns staged per grid step
 
-    grid = (plan.n_m, plan.n_k)
+    grid = (plan.n_m, plan.n_k // depth)
     return pl.pallas_call(
-        functools.partial(_gemv_kernel, n_k=plan.n_k),
+        functools.partial(_gemv_kernel, n_steps=plan.n_k // depth,
+                          depth=depth, k_blk=plan.k_blk),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((B, plan.k_blk), lambda mi, ki: (0, ki)),
-            pl.BlockSpec((plan.k_blk, plan.m_blk), lambda mi, ki: (ki, mi)),
+            pl.BlockSpec((B, k_mega), lambda mi, ki: (0, ki)),
+            pl.BlockSpec((k_mega, plan.m_blk), lambda mi, ki: (ki, mi)),
         ],
         out_specs=pl.BlockSpec((B, plan.m_blk), lambda mi, ki: (0, mi)),
         out_shape=jax.ShapeDtypeStruct((B, M), x.dtype),

@@ -20,20 +20,29 @@ from repro.kernels._compat import compiler_params
 from repro.kernels.tpu_plan import TPUGemvPlan
 
 
-def _splitk_kernel(x_ref, w_ref, out_ref, acc_ref, *, n_k: int):
+def _splitk_kernel(x_ref, w_ref, out_ref, acc_ref, *,
+                   n_steps: int, depth: int, k_blk: int):
     ki = pl.program_id(2)  # K walk WITHIN one split part
 
     @pl.when(ki == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[0] += jax.lax.dot_general(
-        x_ref[0], w_ref[0],
-        dimension_numbers=(((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
+    # Staged K walk (see pim_gemv._gemv_kernel): the block spans ``depth``
+    # sub-tiles, unrolled here so the grid pipeline streams the next
+    # megablock while this one computes.  Left-to-right accumulation keeps
+    # the partials bit-identical to the depth-1 kernel.
+    x = x_ref[0]
+    w = w_ref[0]
+    for j in range(depth):
+        acc_ref[0] += jax.lax.dot_general(
+            x[:, j * k_blk:(j + 1) * k_blk],
+            w[j * k_blk:(j + 1) * k_blk, :],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
 
-    @pl.when(ki == n_k - 1)
+    @pl.when(ki == n_steps - 1)
     def _flush():
         out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
@@ -55,18 +64,22 @@ def splitk_gemv(
     kp = K // deg
     assert kp % plan.k_blk == 0 and M % plan.m_blk == 0, (plan, kp, M)
     n_k = kp // plan.k_blk
+    depth = plan.pipeline_depth
+    assert depth >= 1 and n_k % depth == 0, (plan, n_k, depth)
+    k_mega = plan.k_blk * depth
 
-    grid = (deg, plan.n_m, n_k)
+    grid = (deg, plan.n_m, n_k // depth)
     partials = pl.pallas_call(
-        functools.partial(_splitk_kernel, n_k=n_k),
+        functools.partial(_splitk_kernel, n_steps=n_k // depth,
+                          depth=depth, k_blk=plan.k_blk),
         grid=grid,
         in_specs=[
             pl.BlockSpec(
-                (1, B, plan.k_blk),
+                (1, B, k_mega),
                 lambda si, mi, ki: (si, 0, ki),
             ),
             pl.BlockSpec(
-                (1, plan.k_blk, plan.m_blk),
+                (1, k_mega, plan.m_blk),
                 lambda si, mi, ki: (si, ki, mi),
             ),
         ],

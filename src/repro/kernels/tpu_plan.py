@@ -37,18 +37,26 @@ class TPUGemvPlan:
     vmem_bytes: int
     # split-K degree for the k-parallel variant (0 = output-stationary)
     split_k: int = 1
+    # K-stream staging depth: the kernel's grid block spans
+    # ``k_blk * pipeline_depth`` columns and the kernel walks the
+    # ``pipeline_depth`` sub-tiles itself, so the Pallas grid pipeline
+    # streams megablock N+1 from HBM while the kernel is still rotating
+    # through megablock N's sub-tiles (csl-experiments' double-buffered
+    # broadcast, SNIPPETS.md §2–3).  Depth 1 is exactly the unstaged
+    # kernel; the accumulation order is identical at every depth.
+    pipeline_depth: int = 1
 
     @property
     def grid(self) -> tuple[int, int]:
-        return (self.n_m, self.n_k)
+        return (self.n_m, self.n_k // self.pipeline_depth)
 
 
 def _fits(
     m_blk: int, k_blk: int, batch: int, w_bytes: int, x_bytes: int,
-    budget: int,
+    budget: int, depth: int = 1,
 ) -> tuple[bool, int]:
-    w = m_blk * k_blk * w_bytes * 2          # double-buffered W stream
-    x = batch * k_blk * x_bytes * 2
+    w = m_blk * k_blk * depth * w_bytes * 2  # double-buffered W stream
+    x = batch * k_blk * depth * x_bytes * 2
     acc = batch * m_blk * 4                  # f32 accumulator scratch
     out = batch * m_blk * x_bytes * 2
     total = w + x + acc + out
@@ -65,15 +73,22 @@ def plan_tpu_gemv(
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     max_m_blk: int = 2048,
     max_k_blk: int = 2048,
+    pipeline_depth: int = 1,
 ) -> TPUGemvPlan:
     """Algorithm-1 analogue for BlockSpec selection.
 
     Sweep m_blk from tall to short (lane-aligned), then pick the largest
     k_blk that divides K and fits VMEM. Falls back to the full dimension when
     smaller than one lane/sublane group (ragged edges are padded by ops.py).
+    ``pipeline_depth > 1`` sizes the VMEM working set for the staged K
+    stream (``k_blk * depth`` columns resident) and requires the K walk to
+    split evenly into depth-sized megablocks.
     """
     if M <= 0 or K <= 0:
         raise ValueError("M and K must be positive")
+    if pipeline_depth < 1:
+        raise ValueError(f"pipeline_depth must be >= 1, got {pipeline_depth}")
+    d = pipeline_depth
 
     # --- m_blk sweep: tallest lane-aligned block that divides M and fits ---
     m_cands = []
@@ -93,23 +108,26 @@ def plan_tpu_gemv(
         k = min(max_k_blk, K)
         k = max(SUBLANES, (k // SUBLANES) * SUBLANES) if K >= SUBLANES else K
         while k > SUBLANES:
-            ok, total = _fits(m_blk, k, batch, w_bytes, x_bytes, vmem_budget)
-            if K % k == 0 and ok:
+            ok, total = _fits(m_blk, k, batch, w_bytes, x_bytes, vmem_budget,
+                              d)
+            if K % (k * d) == 0 and ok:
                 return TPUGemvPlan(
                     m_blk=m_blk, k_blk=k,
                     n_m=M // m_blk, n_k=K // k, vmem_bytes=total,
+                    pipeline_depth=d,
                 )
             k -= SUBLANES
         ok, total = _fits(m_blk, min(K, SUBLANES), batch, w_bytes, x_bytes,
-                          vmem_budget)
-        if ok and K % min(K, SUBLANES) == 0:
+                          vmem_budget, d)
+        if ok and K % (min(K, SUBLANES) * d) == 0:
             kb = min(K, SUBLANES)
             return TPUGemvPlan(
                 m_blk=m_blk, k_blk=kb, n_m=M // m_blk, n_k=K // kb,
-                vmem_bytes=total,
+                vmem_bytes=total, pipeline_depth=d,
             )
 
-    # Last resort: whole matrix in one block (tiny GEMVs).
+    # Last resort: whole matrix in one block (tiny GEMVs; depth collapses
+    # to 1 — a single K block leaves nothing to stage ahead).
     _, total = _fits(M, K, batch, w_bytes, x_bytes, vmem_budget)
     return TPUGemvPlan(m_blk=M, k_blk=K, n_m=1, n_k=1, vmem_bytes=total)
 
@@ -141,4 +159,30 @@ def plan_splitk(
     return TPUGemvPlan(
         m_blk=base.m_blk, k_blk=base.k_blk, n_m=base.n_m,
         n_k=base.n_k, vmem_bytes=base.vmem_bytes, split_k=degree,
+        pipeline_depth=base.pipeline_depth,
+    )
+
+
+def with_pipeline_depth(plan: TPUGemvPlan, depth: int, *, batch: int = 1,
+                        w_bytes: int = 2, x_bytes: int = 2,
+                        vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                        ) -> TPUGemvPlan | None:
+    """``plan`` restaged at ``depth``, or None when it cannot be.
+
+    A depth-d restaging is valid only when the K walk splits into whole
+    megablocks (``n_k % depth == 0``) and the widened ``k_blk * depth``
+    working set still fits VMEM — the same two feasibility rules
+    :func:`plan_tpu_gemv` applies when planning at depth directly.
+    """
+    if depth == plan.pipeline_depth:
+        return plan
+    if depth < 1 or plan.n_k % depth != 0:
+        return None
+    ok, total = _fits(plan.m_blk, plan.k_blk, batch, w_bytes, x_bytes,
+                      vmem_budget, depth)
+    if not ok:
+        return None
+    return TPUGemvPlan(
+        m_blk=plan.m_blk, k_blk=plan.k_blk, n_m=plan.n_m, n_k=plan.n_k,
+        vmem_bytes=total, split_k=plan.split_k, pipeline_depth=depth,
     )

@@ -323,14 +323,22 @@ def init_mlp(key, cfg: ModelConfig, dtype, d_ff: int | None = None) -> Params:
 
 
 def apply_mlp(
-    p: Params, x: jnp.ndarray, cfg: ModelConfig, gemv=None
+    p: Params, x: jnp.ndarray, cfg: ModelConfig, gemv=None,
+    *, defer_output: bool = False,
 ) -> jnp.ndarray:
     """FFN. With a ``gemv`` DispatchPolicy and a single-token input (decode
     step), the projections route through the unified GEMV dispatcher —
     the paper's per-shape placement decision at the decode hot path.  The
     gate and up projections share the input vector, so under a
     program-fusing policy they dispatch as ONE fused GEMV program (one
-    launch, one IV broadcast) instead of two."""
+    launch, one IV broadcast) instead of two.
+
+    ``defer_output=True`` returns the down projection WITHOUT its final
+    replicated sharding constraint: the caller (models/lm.py deferred-
+    collective decode, DESIGN.md §14) constrains it one layer later, so
+    GSPMD is free to overlap the split-K partial-sum all-reduce with the
+    next layer's row-placed GEMVs.  Purely a scheduling change — the value
+    is identical (a constraint is a numeric identity)."""
     decode_gemv = gemv is not None and x.shape[1] == 1
     if decode_gemv:
         from repro.kernels.dispatch import dispatch_dense, dispatch_fused
@@ -367,8 +375,10 @@ def apply_mlp(
         gate = constrain(g2.reshape(B, S, -1), ("batch", None, "model"))
         up = constrain(u2.reshape(B, S, -1), ("batch", None, "model"))
         act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
-        return constrain(mm(act(gate) * up, p["w_down"]),
-                         ("batch", None, None))
+        down = mm(act(gate) * up, p["w_down"])
+        if defer_output:
+            return down
+        return constrain(down, ("batch", None, None))
 
     up = mm(x, p["w_up"])
     if cfg.act == "silu":
@@ -506,9 +516,12 @@ def _moe_ragged_decode(p, x, cfg, gemv, top_i, top_p):
 
 
 def apply_moe(
-    p: Params, x: jnp.ndarray, cfg: ModelConfig, gemv=None
+    p: Params, x: jnp.ndarray, cfg: ModelConfig, gemv=None,
+    *, defer_output: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """x: [B, S, d] -> (y, aux_loss).
+    """x: [B, S, d] -> (y, aux_loss).  ``defer_output`` as in
+    :func:`apply_mlp`: skip the final replicated constraint so the caller
+    can await the cross-shard combine one layer later.
 
     With a ``gemv`` DispatchPolicy and a single-token input (decode step),
     the expert FFNs run as GEMV programs through the unified dispatcher,
@@ -560,9 +573,11 @@ def apply_moe(
                     and expert_shape != "einsum")
     if use_programs and expert_shape == "ragged":
         y = _moe_ragged_decode(p, x, cfg, gemv, top_i, top_p)
-        y = constrain(y, ("batch", None, None))
+        if not defer_output:
+            y = constrain(y, ("batch", None, None))
         if e.n_shared:
-            y = y + apply_mlp(p["shared"], x, cfg, gemv=gemv)
+            y = y + apply_mlp(p["shared"], x, cfg, gemv=gemv,
+                              defer_output=defer_output)
         return y, aux
 
     # ---- per-sequence dispatch ----
@@ -629,8 +644,10 @@ def apply_moe(
 
     # ---- combine (back to batch-sharded tokens) ----
     y = jax.vmap(lambda oc, pl: _combine_chunk(oc, pl, S))(out, plan)
-    y = constrain(y, ("batch", None, None))
+    if not defer_output:
+        y = constrain(y, ("batch", None, None))
 
     if e.n_shared:
-        y = y + apply_mlp(p["shared"], x, cfg, gemv=gemv)
+        y = y + apply_mlp(p["shared"], x, cfg, gemv=gemv,
+                          defer_output=defer_output)
     return y, aux

@@ -293,8 +293,18 @@ def prepack_decode_params(params: Params, cfg: ModelConfig,
 def _self_block(
     p: Params, x, cfg: ModelConfig, positions, window,
     cache_kv, cache_pos, mamba_state=None, gemv=None, cache_scales=None,
+    defer_ff=False,
 ):
-    """attention (+ parallel mamba) + FFN/MoE with pre-norms."""
+    """attention (+ parallel mamba) + FFN/MoE with pre-norms.
+
+    Returns ``(x, new_kv, new_state, aux, ff)``.  Normally ``x`` already
+    includes the FFN residual and ``ff`` is None.  With ``defer_ff=True``
+    (the deferred-collective decode path, DESIGN.md §14) ``x`` is the
+    post-attention residual only and ``ff`` is the FFN output WITHOUT its
+    replicated constraint — the caller adds and constrains it one layer
+    later, so the FFN's cross-shard all-reduce can overlap the next
+    layer's compute.
+    """
     aux = jnp.zeros((), jnp.float32)
     h = L.apply_norm(p["ln1"], x, cfg)
     attn_out, new_kv = L.apply_attention(
@@ -314,11 +324,15 @@ def _self_block(
     x = x + attn_out
     h = L.apply_norm(p["ln2"], x, cfg)
     if cfg.moe is not None:
-        ff, aux = L.apply_moe(p["moe"], h, cfg, gemv=gemv)
+        ff, aux = L.apply_moe(p["moe"], h, cfg, gemv=gemv,
+                              defer_output=defer_ff)
     else:
-        ff = L.apply_mlp(p["mlp"], h, cfg, gemv=gemv)
+        ff = L.apply_mlp(p["mlp"], h, cfg, gemv=gemv,
+                         defer_output=defer_ff)
+    if defer_ff:
+        return x, new_kv, new_state, aux, ff
     x = x + ff
-    return x, new_kv, new_state, aux
+    return x, new_kv, new_state, aux, None
 
 
 def _rwkv_block(p: Params, x, cfg: ModelConfig, cache_l):
@@ -477,11 +491,38 @@ def forward(
 
 def _forward_flat(params, cfg, x, positions, ctx, cache, is_global, remat,
                   gemv=None):
-    """Uniform scan over layers (everything except grouped VLM)."""
+    """Uniform scan over layers (everything except grouped VLM).
+
+    Deferred collectives (DESIGN.md §14): with
+    ``gemv.overlap_collectives`` on a decode step, the carry additionally
+    threads the previous layer's UNCONSTRAINED FFN output; it is added and
+    constrained at the next layer's entry (and flushed once after the
+    scan) instead of at the producing layer's exit.  The f32 add sequence
+    is exactly ``((x + ff_{n-1}) + attn_n) + ...`` either way — identical
+    values, but the replication point for layer n's FFN all-reduce moves
+    past layer n+1's dispatch, so GSPMD may overlap them.  Gated off for
+    the rwkv family (no FFN residual of this shape) and whisper (the
+    cross-attention consumes the completed layer output).
+    """
     decode = cache is not None
+    defer = (decode and ctx is None and cfg.family != "ssm"
+             and gemv is not None
+             and getattr(gemv, "overlap_collectives", False))
+    if defer and getattr(gemv, "model_shards", 1) > 1:
+        from repro.kernels.dispatch import record_overlap
+
+        # Trace-time telemetry (like every dispatch decision counter):
+        # each layer's FFN combine is awaited one layer late.
+        record_overlap("deferred", deferred_collectives=cfg.n_layers)
 
     def step(carry, pl, flag_global, cache_l):
-        x, aux = carry
+        if defer:
+            x, pending, aux = carry
+            # Await layer n-1's FFN here: the add is the same f32 add the
+            # undeferred path did at the producer, one step later.
+            x = constrain(x + pending, ("batch", None, None))
+        else:
+            x, aux = carry
         if cfg.family == "ssm":
             x, new_cache_l = _rwkv_block(pl, x, cfg, cache_l)
             return (x, aux), (new_cache_l if decode else {})
@@ -495,9 +536,10 @@ def _forward_flat(params, cfg, x, positions, ctx, cache, is_global, remat,
         mamba_state = None
         if cfg.parallel_ssm and decode:
             mamba_state = (cache_l["mamba_conv"], cache_l["mamba_h"])
-        x, new_kv, new_state, aux_l = _self_block(
+        x, new_kv, new_state, aux_l, ff = _self_block(
             pl, x, cfg, positions, window, cache_kv, cache_pos,
             mamba_state=mamba_state, gemv=gemv, cache_scales=cache_scales,
+            defer_ff=defer,
         )
         if ctx is not None and "cross" in pl:  # whisper decoder
             h = L.apply_norm(pl["ln_cross"], x, cfg)
@@ -510,15 +552,29 @@ def _forward_flat(params, cfg, x, positions, ctx, cache, is_global, remat,
                     new_cache_l["k_scale"] = new_kv[2]
                     new_cache_l["v_scale"] = new_kv[3]
             new_cache_l.update(new_state)
+        if defer:
+            return (x, ff, aux + aux_l), new_cache_l
         x = constrain(x, ("batch", None, None))
         return (x, aux + aux_l), new_cache_l
+
+    def init_carry():
+        if defer:
+            return (x, jnp.zeros_like(x), jnp.zeros((), jnp.float32))
+        return (x, jnp.zeros((), jnp.float32))
+
+    def flush(carry):
+        """Final carry -> (x, aux); awaits the last layer's deferred FFN."""
+        if defer:
+            xc, pending, aux = carry
+            return constrain(xc + pending, ("batch", None, None)), aux
+        return carry
 
     if cfg.unroll_layers:
         # Python loop (dry-run roofline mode): every layer appears in the
         # HLO so cost_analysis counts are exact, unlike scan whose body is
         # counted once regardless of trip count (see EXPERIMENTS.md §Roofline
         # methodology).
-        carry = (x, jnp.zeros((), jnp.float32))
+        carry = init_carry()
         new_layers = []
         stepc = jax.checkpoint(step, static_argnums=()) if remat else step
         for i in range(cfg.n_layers):
@@ -531,7 +587,7 @@ def _forward_flat(params, cfg, x, positions, ctx, cache, is_global, remat,
             )
             carry, nc = stepc(carry, pl, is_global[i], cache_l)
             new_layers.append(nc)
-        x, aux = carry
+        x, aux = flush(carry)
         if decode:
             stacked = jax.tree.map(
                 lambda *ls: jnp.stack(ls), *new_layers
@@ -544,10 +600,11 @@ def _forward_flat(params, cfg, x, positions, ctx, cache, is_global, remat,
         body = lambda c, xs: step(c, xs[0], xs[1], xs[2])
         if remat:
             body = jax.checkpoint(body)
-        (x, aux), new_cache_stacked = jax.lax.scan(
-            body, (x, jnp.zeros((), jnp.float32)),
+        carry, new_cache_stacked = jax.lax.scan(
+            body, init_carry(),
             (params["layers"], is_global, cache_xs),
         )
+        x, aux = flush(carry)
         return x, new_cache_stacked, aux
 
     body = lambda c, xs: step(c, xs[0], xs[1], None)
@@ -576,7 +633,7 @@ def _forward_grouped(params, cfg, x, positions, ctx, cache, remat,
 
     def layer_step(x, pl, cache_kv, cache_pos, cross, cache_scales=None):
         window = 0
-        x, new_kv, _, aux = _self_block(
+        x, new_kv, _, aux, _ = _self_block(
             pl, x, cfg, positions, window, cache_kv, cache_pos, gemv=gemv,
             cache_scales=cache_scales,
         )

@@ -94,11 +94,48 @@ def chrome_trace(tracer: Tracer) -> dict:
             "otherData": {"schema": SCHEMA_VERSION}}
 
 
+def _overlap_section(spans) -> dict | None:
+    """Reduce ``cat="overlap"`` spans into the hidden-fraction report.
+
+    Each overlap span covers one issue→await window; its ``blocked_us``
+    attr is the host time actually spent waiting inside it.  The fraction
+    of the window NOT spent blocked is work the engine hid behind decode
+    compute: ``hidden_fraction = Σ(dur - blocked) / Σdur`` (DESIGN.md §14).
+    Returns None when no overlap spans were recorded (knobs off).
+    """
+    ov = [s for s in spans if s.cat == "overlap"]
+    if not ov:
+        return None
+    by_name: dict[str, dict] = {}
+    for s in ov:
+        g = by_name.setdefault(s.name, {"n": 0, "total_us": 0.0,
+                                        "blocked_us": 0.0})
+        g["n"] += 1
+        g["total_us"] += max(s.dur_us, 0.0)
+        g["blocked_us"] += min(max(float(s.attrs.get("blocked_us", 0.0)),
+                                   0.0), max(s.dur_us, 0.0))
+    total = sum(g["total_us"] for g in by_name.values())
+    blocked = sum(g["blocked_us"] for g in by_name.values())
+    for g in by_name.values():
+        g["hidden_fraction"] = ((g["total_us"] - g["blocked_us"])
+                                / g["total_us"] if g["total_us"] > 0
+                                else 0.0)
+    return {
+        "n_spans": len(ov),
+        "total_us": total,
+        "blocked_us": blocked,
+        "hidden_us": total - blocked,
+        "hidden_fraction": (total - blocked) / total if total > 0 else 0.0,
+        "by_name": by_name,
+    }
+
+
 def summary(tracer: Tracer, extra: dict | None = None) -> dict:
     """The schema-1 machine-readable run summary."""
     with tracer._lock:
         requests = [dict(r) for r in tracer.requests]
         counters = list(tracer.counters)
+        spans = list(tracer.spans)
         n_spans = len(tracer.spans)
         n_events = len(tracer.events)
         dropped = dict(tracer.dropped)
@@ -129,6 +166,9 @@ def summary(tracer: Tracer, extra: dict | None = None) -> dict:
         "n_events": n_events,
         "dropped": dropped,
     }
+    overlap = _overlap_section(spans)
+    if overlap is not None:
+        doc["overlap"] = overlap
     if extra:
         doc.update(extra)
     return doc

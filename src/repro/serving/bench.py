@@ -45,7 +45,10 @@ import numpy as np
 # the metrics doc's ``prefix_cache`` section (metrics schema v3).
 # (Tracing is additive, not a schema bump: ``trace_out`` adds the optional
 # ``flight_trace`` pointer section; the trace/summary artifacts carry
-# their own schema, repro.observability.SCHEMA_VERSION.)
+# their own schema, repro.observability.SCHEMA_VERSION.  Overlapped
+# serving (DESIGN.md §14) is additive too: per-run ``async_prefill`` /
+# ``overlap_collectives`` booleans, and the trace summary's ``overlap``
+# hidden-fraction section rides the observability schema.)
 SCHEMA_VERSION = 4
 
 TRACE_KINDS = ("uniform", "shared-prefix")
@@ -134,6 +137,8 @@ def run_policy(cfg, params, policy: str, trace: list[dict], *,
                batch_slots: int, max_len: int, gemv_batch_threshold: int,
                gemv_backend: str | None = None, max_queue: int = 0,
                mesh=None, prefill_chunk: int | None = None,
+               async_prefill: bool = False,
+               overlap_collectives: bool = False,
                prefix_cache=False, kv_store: str = "fp",
                tracer=None, max_iters: int = 5000) -> dict:
     """Serve one trace under one scheduler policy; returns the metrics doc
@@ -157,6 +162,8 @@ def run_policy(cfg, params, policy: str, trace: list[dict], *,
         gemv_batch_threshold=gemv_batch_threshold,
         gemv_backend=gemv_backend, scheduler=policy, max_queue=max_queue,
         mesh=mesh, prefill_chunk=prefill_chunk,
+        async_prefill=async_prefill,
+        overlap_collectives=overlap_collectives,
         prefix_cache=prefix_cache, kv_store=kv_store, tracer=tracer,
     )
     pending = [
@@ -182,7 +189,7 @@ def run_policy(cfg, params, policy: str, trace: list[dict], *,
                     retry.append(req)  # backpressure: retry next step
             done.extend(eng.step())
             if (not pending and not retry and not eng.active
-                    and not eng.scheduler.queue):
+                    and not eng._prefilling and not eng.scheduler.queue):
                 break
     finally:
         if tracer is not None:
@@ -194,6 +201,8 @@ def run_policy(cfg, params, policy: str, trace: list[dict], *,
         policy=policy,
         batch_slots=batch_slots,
         gemv_batch_threshold=gemv_batch_threshold,
+        async_prefill=bool(async_prefill),
+        overlap_collectives=bool(overlap_collectives),
         completed=len(done),
         total_generated=sum(len(r.generated) for r in done),
         mesh=(None if mesh is None
@@ -216,6 +225,8 @@ def run_serve_trace(
     gemv_backend: str | None = None,
     mesh_shape: tuple[int, int] | None = None,
     prefill_chunk: int | None = None,
+    async_prefill: bool = False,
+    overlap_collectives: bool = False,
     trace_kind: str = "uniform",
     prefix_cache=False,
     kv_store: str = "fp",
@@ -287,6 +298,8 @@ def run_serve_trace(
                    gemv_batch_threshold=gemv_batch_threshold,
                    gemv_backend=gemv_backend, mesh=mesh,
                    prefill_chunk=prefill_chunk,
+                   async_prefill=async_prefill,
+                   overlap_collectives=overlap_collectives,
                    prefix_cache=prefix_cache, kv_store=kv_store,
                    tracer=(tracer if i == len(policies) - 1 else None))
         for i, policy in enumerate(policies)
@@ -314,6 +327,8 @@ def run_serve_trace(
         },
         "prefix_cache": bool(prefix_cache),
         "kv_store": kv_store,
+        "async_prefill": bool(async_prefill),
+        "overlap_collectives": bool(overlap_collectives),
         "runs": runs,
     }
     if tracer is not None:
@@ -321,7 +336,7 @@ def run_serve_trace(
 
         export.write_chrome_trace(tracer, trace_out)
         spath = export.summary_path(trace_out)
-        export.write_summary(
+        sdoc = export.write_summary(
             tracer, spath,
             extra={"arch": arch, "policy": policies[-1],
                    "run": runs[-1] if runs else None})
@@ -330,6 +345,10 @@ def run_serve_trace(
             "summary": spath,
             "policy": policies[-1],
             "timing": tracer.timing,
+            # surfaced from the summary's overlap section so A/B overlap
+            # runs can be compared from the bench doc alone
+            "hidden_fraction": (sdoc.get("overlap") or {}).get(
+                "hidden_fraction"),
         }
     if out:
         with open(out, "w") as f:

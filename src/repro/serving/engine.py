@@ -183,6 +183,8 @@ class Engine:
                  metrics: ServingMetrics | None = None,
                  mesh=None,
                  prefill_chunk: int | None = None,
+                 async_prefill: bool = False,
+                 overlap_collectives: bool = False,
                  prefix_cache=None,
                  kv_store: str = "fp",
                  tracer=None,
@@ -192,6 +194,16 @@ class Engine:
         self.max_len = max_len
         self.clock = clock
         self.mesh = mesh
+        # Overlapped serving (DESIGN.md §14): ``async_prefill`` routes every
+        # prefill through the chunked seam WITHOUT per-chunk splices — chunk
+        # n+1 chains on chunk n's in-flight b=1 sub-cache, the slot sees ONE
+        # splice at harvest (the step after the final chunk issues), and the
+        # only host block is the first-token logits fetch at harvest.  The
+        # decode steps that run inside that window are what hides the
+        # prefill; greedy token streams are identical either way (per-slot
+        # rows are independent and the harvest splice fully defines the
+        # slot before activation).
+        self.async_prefill = bool(async_prefill)
         # Flight recorder (DESIGN.md §13): per-request phase spans, engine
         # spans, per-step gauges.  Installing it process-wide is what arms
         # the dispatch attribution hook in kernels/dispatch.py.
@@ -221,7 +233,8 @@ class Engine:
                            backend=gemv_backend,
                            fuse_programs=gemv_fuse_programs,
                            expert_shape=gemv_expert_shape,
-                           model_shards=model_shards)
+                           model_shards=model_shards,
+                           overlap_collectives=bool(overlap_collectives))
             if use_pim_kernels else None
         )
         # One-time fused-weight prepack (§V-A2): dispatch_prepacked then
@@ -290,9 +303,14 @@ class Engine:
             self.scheduler.prefill_cost = self._prefill_cost
         self.active: dict[int, Request] = {}   # slot -> request
         self._defrag_moves = 0                 # per-step defrag move count
-        # slot -> [request, tokens spliced so far] (chunked prefill in
-        # flight: the slot is alloc'd but not yet decoding)
+        # slot -> [request, tokens spliced (sync) / issued (async) so far]
+        # (chunked prefill in flight: the slot is alloc'd but not decoding)
         self._prefilling: dict[int, list] = {}
+        # async_prefill: slot -> {"sub": chained b=1 device cache, "last":
+        # device last-token logits, "chunks": issued chunk count, "final":
+        # the whole prompt has been issued, "t_final_us": issue time of the
+        # final chunk (tracer clock)}.  Keys are a subset of _prefilling.
+        self._inflight: dict[int, dict] = {}
         self.expired: list[Request] = []
         self.last_tok = jnp.zeros((batch_slots, 1), jnp.int32)
         self._extra = self._make_extra(batch_slots)
@@ -542,7 +560,12 @@ class Engine:
                         self._admit_prefix_hit(r, m)
                     else:
                         misses.append(r)
-            if self.prefill_chunk:
+            if self.async_prefill:
+                # EVERY miss prefills through the async chunk chain — even
+                # single-chunk prompts get their splice+sample hidden
+                # behind the intervening decode step
+                chunked = list(misses)
+            elif self.prefill_chunk:
                 chunked = [r for r in misses
                            if len(self._pending_tokens(r))
                            > self.prefill_chunk]
@@ -621,6 +644,10 @@ class Engine:
             slot = max(self._prefilling,
                        key=lambda s: self._prefilling[s][0].admit_seq)
             r, valid = self._prefilling.pop(slot)
+            # async chain in flight: land the issued chunks into the slot
+            # first so the prefix insert below sees real KV, not the junk
+            # the overlapped decode steps wrote there
+            self._await_inflight(slot, valid)
         else:
             slot = max(self.active,
                        key=lambda s: self.active[s].admit_seq)
@@ -707,13 +734,30 @@ class Engine:
         """Advance every in-flight chunked prefill by ONE chunk (so a long
         prompt costs one bounded splice per engine step instead of stalling
         the whole step); the final chunk samples the first token and moves
-        the request into the decode set."""
+        the request into the decode set.
+
+        ``async_prefill`` changes only the *blocking* structure: chunks are
+        issued against a chained b=1 sub-cache (no per-chunk splice into
+        the slot), fully-issued chains harvest at the START of the next
+        step's pass — one splice + one logits fetch per request, after the
+        intervening decode step already forced the device work — and the
+        issue→harvest window is recorded as a ``cat="overlap"`` span whose
+        ``blocked_us`` attr is the host time actually spent waiting.
+        Mid-chain recurrent-state checkpoints into the prefix cache are
+        skipped in async mode (the slot holds no real KV until harvest);
+        the full-prompt insert at harvest still files the boundary that
+        matters."""
         finished = []
         # prefix-hit tails ride this seam even when chunking is off
         # (prefill_chunk=None): one un-split chunk covers the whole tail
         chunk_limit = self.prefill_chunk or self.max_len
         tr = self.tracer
+        if self.async_prefill:
+            finished.extend(self._harvest_ready())
         for slot in sorted(self._prefilling):
+            inf = self._inflight.get(slot)
+            if inf is not None and inf["final"]:
+                continue  # fully issued; harvests next step
             chunk_t0 = tr.now_us() if tr is not None else 0.0
             req, consumed = self._prefilling[slot]
             toks = self._pending_tokens(req)
@@ -731,23 +775,45 @@ class Engine:
             tokens = np.zeros((1, cpad), np.int32)
             tokens[0, :c] = chunk
             # first chunk starts from a fresh b=1 cache; later chunks
-            # continue from the slot's own row (pos = tokens spliced so far)
-            sub = (lm.init_cache(self.cfg, 1, self.max_len,
-                                 per_slot_pos=True, kv_store=self.kv_store)
-                   if consumed == 0 else self.kv.slot_view(slot))
+            # continue from the in-flight chain (async) or the slot's own
+            # row (sync / prefix-hit tail; pos = tokens landed so far)
+            if inf is not None:
+                sub = inf["sub"]
+            elif consumed == 0:
+                sub = lm.init_cache(self.cfg, 1, self.max_len,
+                                    per_slot_pos=True,
+                                    kv_store=self.kv_store)
+            else:
+                sub = self.kv.slot_view(slot)
             extra1 = {k: v[slot:slot + 1] for k, v in self._extra.items()}
             with self._mesh_ctx():
                 last, sub = self._jit_prefill(
                     self.params, jnp.asarray(tokens),
                     jnp.asarray([c], np.int32), sub, extra1,
                 )
-            self.kv.splice(sub, [slot], [consumed + c])
             self._prefilling[slot][1] = consumed + c
             self.metrics.prefill_chunk(c)
             if tr is not None:
                 tr.add_span("prefill_chunk", chunk_t0, tr.now_us(),
                             track=f"slot{slot}", rid=req.rid, slot=slot,
                             tokens=c, consumed=consumed + c)
+            if self.async_prefill:
+                from repro.kernels.dispatch import record_overlap
+
+                record_overlap("async_prefill", issued=1)
+                # the forward advanced pos by the PADDED chunk length; the
+                # chain must carry the true token count (pad KV beyond it
+                # stays masked, as in the spliced path)
+                sub = dict(sub)
+                sub["pos"] = jnp.full_like(sub["pos"], consumed + c)
+                self._inflight[slot] = {
+                    "sub": sub, "last": last,
+                    "chunks": (inf["chunks"] if inf is not None else 0) + 1,
+                    "final": consumed + c >= len(toks),
+                    "t_final_us": (tr.now_us() if tr is not None else 0.0),
+                }
+                continue
+            self.kv.splice(sub, [slot], [consumed + c])
             if consumed + c < len(toks):
                 # State-carrying families can only resume from a snapshot,
                 # and edge SPLITS can't create one mid-edge — so chunk
@@ -764,6 +830,54 @@ class Engine:
             if self._activate(req2, slot, tok, self.clock()):
                 finished.append(req2)
         return finished
+
+    def _harvest_ready(self) -> list[Request]:
+        """Async-prefill harvest: splice every fully-issued chain into its
+        slot, fetch the first-token logits (the one host block), record
+        the overlap span, and activate the request — it joins THIS step's
+        decode bucket."""
+        from repro.kernels.dispatch import record_overlap
+
+        tr = self.tracer
+        finished = []
+        for slot in sorted(self._inflight):
+            inf = self._inflight[slot]
+            if not inf["final"]:
+                continue
+            req, consumed = self._prefilling[slot]
+            t_h0 = tr.now_us() if tr is not None else 0.0
+            last_np = np.asarray(inf["last"])   # blocks until chain done
+            t_h1 = tr.now_us() if tr is not None else 0.0
+            del self._inflight[slot]
+            self.kv.splice(inf["sub"], [slot], [consumed])
+            record_overlap("async_prefill", awaited=inf["chunks"])
+            if tr is not None:
+                # the span partitions the issue->harvest window into
+                # blocked (host waited here) and hidden (decode ran); the
+                # summary's hidden_fraction reduces exactly these attrs
+                tr.add_span("async_prefill", inf["t_final_us"], t_h1,
+                            cat="overlap", track=f"slot{slot}",
+                            rid=req.rid, slot=slot,
+                            blocked_us=max(t_h1 - t_h0, 0.0),
+                            chunks=inf["chunks"], tokens=consumed)
+            del self._prefilling[slot]
+            self._prefix_insert(slot, self._pending_tokens(req))
+            tok = self._sample(req, last_np[0])
+            if self._activate(req, slot, tok, self.clock()):
+                finished.append(req)
+        return finished
+
+    def _await_inflight(self, slot: int, valid: int) -> None:
+        """Blocking: land an async chain's issued chunks into ``slot`` (the
+        preemption path — the victim's KV must be real before it is filed
+        into the prefix cache and the slot freed)."""
+        inf = self._inflight.pop(slot, None)
+        if inf is None:
+            return
+        from repro.kernels.dispatch import record_overlap
+
+        self.kv.splice(inf["sub"], [slot], [valid])
+        record_overlap("async_prefill", awaited=inf["chunks"])
 
     def _activate(self, r: Request, slot: int, tok: int,
                   now: float) -> bool:
@@ -801,9 +915,13 @@ class Engine:
         # Chunked-prefill rows sit inside the alloc'd prefix the bucket
         # covers; decode must not advance their mid-prompt state, so their
         # rows are snapshotted and restored after the merge (their logits
-        # are never sampled — only ``self.active`` rows are).
-        snaps = {s: (self.kv.slot_view(s), self._prefilling[s][1])
-                 for s in self._prefilling if s < b}
+        # are never sampled — only ``self.active`` rows are).  Async mode
+        # drops the snapshot/restore entirely: the slot holds no real KV
+        # until the harvest splice fully defines it, so whatever decode
+        # writes there is junk-on-junk (per-slot rows are independent).
+        snaps = ({} if self.async_prefill else
+                 {s: (self.kv.slot_view(s), self._prefilling[s][1])
+                  for s in self._prefilling if s < b})
         cache_b = self.kv.slice_prefix(b)
         extra_b = {k: v[:b] for k, v in self._extra.items()}
         with self._mesh_ctx():
@@ -874,6 +992,8 @@ class Engine:
                 self.active[dst] = r
             else:
                 self._prefilling[dst] = self._prefilling.pop(src)
+                if src in self._inflight:  # async chain follows its slot
+                    self._inflight[dst] = self._inflight.pop(src)
             if tr is not None:
                 moved = (self.active.get(dst)
                          or self._prefilling.get(dst, [None])[0])

@@ -130,6 +130,42 @@ def test_calibrate_cli_smoke(tmp_path):
     assert tdoc["calibration"]["cpu"]["constants"] == doc["constants"]
 
 
+def test_pipeline_rows_depth2_bit_identical():
+    """Schema-5 satellite: the --pipeline-depth sweep emits depth-1 vs
+    depth-2 rows for every stageable registry shape, modeled at both
+    depths, and every measured pair is bit-identical (max_abs_diff 0)."""
+    rows = kernel_bench.pipeline_rows(backend_name="tpu", measure=True)
+    assert rows, "no stageable registry shapes"
+    for r in rows:
+        assert r["backend"] == "tpu"
+        assert r["kernel"] in ("pim", "splitk")
+        assert r["model_us/depth1"] > 0
+        assert r["model_us/depth2"] > 0
+        if "measured_us/depth1" in r:
+            assert r["measured_us/depth2"] > 0
+            assert r["max_abs_diff"] == 0.0, r
+    assert any("measured_us/depth1" in r for r in rows)
+    # TPU-plan concept: other backends contribute no rows (and the
+    # schema-5 document carries an empty list, not a missing key)
+    assert kernel_bench.pipeline_rows(backend_name="cpu") == []
+
+
+def test_schema5_document_compat():
+    """Schema bump 4 -> 5 is additive: every schema-4 section survives
+    unchanged and `pipeline_rows` is the only new top-level key."""
+    assert kernel_bench.SCHEMA_VERSION == 5
+    doc = {"schema": kernel_bench.SCHEMA_VERSION,
+           "rows": kernel_bench.dispatch_rows(measure=False,
+                                              backend_name="cpu"),
+           "program_rows": kernel_bench.program_rows(backend_name="cpu"),
+           "moe_rows": kernel_bench.moe_rows(backend_name="cpu"),
+           "pipeline_rows": kernel_bench.pipeline_rows(
+               backend_name="cpu", measure=False)}
+    # schema-4 consumers' sections are intact
+    assert doc["rows"] and doc["program_rows"] and doc["moe_rows"]
+    json.dumps(doc)  # serializable end to end
+
+
 def test_json_cli_output_parses(tmp_path):
     """Smoke test for the --json flag: run the CLI, parse the schema-3
     document (dispatch rows + program rows + moe rows)."""
@@ -166,6 +202,9 @@ def test_json_cli_output_parses(tmp_path):
                       "padded_slots", "mode"):
             assert field in rec, rec
         assert rec["mode"] == "ragged"
+    # schema 5: the staged-pipeline sweep rides along (empty on cpu —
+    # the pipeline_depth knob is a TPU-plan concept)
+    assert doc["pipeline_rows"] == []
     # stdout carries the human-readable tables alongside
     assert "dispatch/" in proc.stdout
     assert "program/" in proc.stdout
